@@ -1,0 +1,88 @@
+"""Shared benchmark helpers: engine configs mirroring the paper's setups,
+wall-clock measurement, CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+
+from repro.core import engine
+from repro.core.types import (
+    EngineConfig, PlatformModel, SSDConfig, WorkloadConfig,
+)
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+# The paper's devices.
+D7_PS1010 = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
+                      num_blocks=1 << 14)
+FUTURE_40M = SSDConfig(name="future-40m", t_max_iops=40e6, l_min_us=30.0,
+                       n_instances=512, num_blocks=1 << 14)
+
+
+def nvmevirt_cfg(**kw) -> EngineConfig:
+    """Baseline NVMeVirt: 1 dispatcher, 32 workers, per-request timing,
+    CPU-thread data path, no coalescing."""
+    base = dict(
+        num_sqs=32, sq_depth=1024, fetch_width=64, num_units=1,
+        workers_per_unit=32, frontend="centralized", mode="per_request",
+        coalesced=False, dsa_fetch=False, batched_datapath=False,
+        emulate_data=False,
+        num_bufs=1 << 10,
+    )
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def swarmio_cfg(**kw) -> EngineConfig:
+    """SwarmIO: 16 service units (1 dispatcher + 1 worker + DSA each),
+    aggregated timing, coalesced fetching, batched async DSA offload."""
+    base = dict(
+        num_sqs=32, sq_depth=1024, fetch_width=256, num_units=16,
+        workers_per_unit=1, frontend="distributed", mode="aggregated",
+        coalesced=True, batched_datapath=True, emulate_data=False,
+        num_bufs=1 << 10,
+    )
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def run_engine(cfg, ssd, wl, plat=None, rounds=48):
+    plat = plat or PlatformModel()
+    st = engine.init_state(cfg, ssd, wl)
+    runner = engine.make_runner(cfg, ssd, wl, plat, rounds)
+    out = runner(st)
+    jax.block_until_ready(out.metrics.completed)
+    return out
+
+
+def wallclock_engine(cfg, ssd, wl, plat=None, rounds=24, reps=3):
+    """Wall-clock engine throughput (requests processed per second of real
+    time) — the paper's emulation-speed axis."""
+    plat = plat or PlatformModel()
+    st = engine.init_state(cfg, ssd, wl)
+    runner = engine.make_runner(cfg, ssd, wl, plat, rounds)
+    out = runner(st)  # compile + warm
+    jax.block_until_ready(out.metrics.completed)
+    best = float("inf")
+    completed = 0.0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = runner(st)
+        jax.block_until_ready(out.metrics.completed)
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+        completed = float(out.metrics.completed)
+    return completed / best, out
+
+
+def write_csv(name: str, header: list, rows: list):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

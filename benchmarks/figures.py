@@ -1,0 +1,288 @@
+"""One benchmark per paper figure (Figs. 3-16). Each returns CSV rows and
+prints a summary line; run via ``python -m benchmarks.run``.
+
+Virtual-time metrics reproduce the paper's *fidelity* results; wall-clock
+metrics reproduce the *emulator speed* results (paper speedups were
+measured on Xeon+DSA+H200; ours on this host — the claims map to ratios,
+not absolute numbers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core.types import PlatformModel, WorkloadConfig
+
+
+def _frontend_only_platform():
+    """Zero the backend costs to isolate the frontend (paper Fig. 3)."""
+    return PlatformModel(
+        per_req_map_us=0.0, dsa_desc_issue_us=0.0, dsa_batch_setup_us=0.0,
+        dsa_bytes_per_us=1e9, lock_per_req_us=0.085, lock_per_batch_us=0.4,
+    )
+
+
+def fig03_frontend_plateau(quick=False):
+    """NVMeVirt frontend throughput plateaus with io_depth (CPU-centric)."""
+    rows = []
+    depths = [8, 32, 128, 512] if not quick else [8, 128]
+    for depth in depths:
+        wl = WorkloadConfig(io_depth=depth)
+        plat = _frontend_only_platform()
+        base = C.run_engine(
+            C.nvmevirt_cfg(transport="host", sq_depth=1024),
+            C.FUTURE_40M, wl, plat, rounds=32,
+        )
+        swarm = C.run_engine(
+            C.swarmio_cfg(transport="host", sq_depth=1024),
+            C.FUTURE_40M, wl, plat, rounds=32,
+        )
+        rows.append([
+            depth,
+            float(base.metrics.iops()) / 1e6,
+            float(swarm.metrics.iops()) / 1e6,
+        ])
+    print(f"fig03: centralized plateaus at {max(r[1] for r in rows):.2f} "
+          f"MIOPS vs distributed {max(r[2] for r in rows):.2f} MIOPS")
+    return ["io_depth", "nvmevirt_miops", "swarmio_miops"], rows
+
+
+def fig04_per_request_overhead(quick=False):
+    """Map/unmap dominates the baseline GPU-initiated copy path."""
+    plat = PlatformModel()
+    txn = plat.txn_base_us + 512 / plat.link_bytes_per_us
+    total = plat.per_req_map_us + txn
+    map_frac = plat.per_req_map_us / total
+    dsa = plat.dsa_desc_issue_us + plat.dsa_batch_setup_us / 16 \
+        + 512 / plat.dsa_bytes_per_us
+    rows = [[plat.per_req_map_us, txn, map_frac, dsa, total / dsa]]
+    print(f"fig04: map/unmap = {map_frac*100:.1f}% of baseline copy path; "
+          f"DSA batched path {total/dsa:.1f}x cheaper")
+    return (
+        ["map_us", "copy_us", "map_fraction", "dsa_batched_us",
+         "per_req_speedup"],
+        rows,
+    )
+
+
+def fig10_validation(quick=False):
+    """Emulated IOPS vs the modeled device (fio-like + BaM-like loads)."""
+    rows = []
+    # Closed-form reference for the modeled SSD: IOPS(outstanding) =
+    # min(T_max, outstanding / L_min) — M/D/K with deterministic service.
+    ssd = C.D7_PS1010
+    threads = [256, 2048, 16384] if quick else [256, 1024, 4096, 16384, 32768]
+    for n_out in threads:
+        depth = max(1, n_out // 32)
+        wl = WorkloadConfig(io_depth=depth)
+        ref_iops = min(ssd.t_max_iops, n_out / (ssd.l_min_us * 1e-6))
+        swarm = C.run_engine(
+            C.swarmio_cfg(sq_depth=max(1024, depth)), ssd, wl, rounds=48
+        )
+        s_iops = float(swarm.metrics.iops())
+        rows.append([
+            n_out, ref_iops / 1e6, s_iops / 1e6,
+            abs(s_iops - ref_iops) / ref_iops * 100,
+            float(swarm.metrics.avg_e2e_us()),
+        ])
+    err = sum(r[3] for r in rows) / len(rows)
+    print(f"fig10: SwarmIO avg relative IOPS error vs modeled device: "
+          f"{err:.1f}% (paper: 7.4-7.7%)")
+    return (
+        ["outstanding", "device_miops", "swarmio_miops", "rel_err_pct",
+         "avg_e2e_us"],
+        rows,
+    )
+
+
+def fig11_latency_breakdown(quick=False):
+    """Target vs Proc vs E2E under GPU-initiated I/O."""
+    rows = []
+    wl = WorkloadConfig(io_depth=512)
+    for name, cfg in [
+        ("nvmevirt", C.nvmevirt_cfg()),
+        ("swarmio", C.swarmio_cfg()),
+    ]:
+        out = C.run_engine(cfg, C.D7_PS1010, wl, rounds=32)
+        m = out.metrics
+        rows.append([
+            name, float(m.avg_target_us()), float(m.avg_proc_us()),
+            float(m.avg_e2e_us()),
+        ])
+    base_e2e = rows[0][3]
+    swarm_e2e = rows[1][3]
+    print(f"fig11: E2E latency nvmevirt={base_e2e:.0f}us "
+          f"swarmio={swarm_e2e:.0f}us ({base_e2e/swarm_e2e:.1f}x lower)")
+    return ["engine", "target_us", "proc_us", "e2e_us"], rows
+
+
+def fig12_scalability(quick=False):
+    """(a) achieved IOPS + wall-clock engine speed vs baseline;
+    (b) sustained vs target. The paper's 303.9x headline is the achieved-
+    IOPS ratio under GPU-initiated I/O at the 40 MIOPS target."""
+    rows = []
+    wl = WorkloadConfig(io_depth=256)
+    base_rps, base_out = C.wallclock_engine(
+        C.nvmevirt_cfg(), C.FUTURE_40M, wl, rounds=8, reps=2
+    )
+    base_iops = float(base_out.metrics.iops())
+    rows.append(["wallclock", 0, base_rps / 1e6, 1.0, base_iops / 1e6])
+    units = [4, 16] if quick else [1, 2, 4, 8, 16]
+    best_rps, best_iops = 0.0, 0.0
+    for u in units:
+        rps, out = C.wallclock_engine(
+            C.swarmio_cfg(num_units=u), C.FUTURE_40M, wl, rounds=8, reps=2
+        )
+        best_rps = max(best_rps, rps)
+        best_iops = max(best_iops, float(out.metrics.iops()))
+        rows.append(["wallclock", u, rps / 1e6, rps / base_rps,
+                     float(out.metrics.iops()) / 1e6])
+    # (b) sustained virtual IOPS vs configured target.
+    targets = [10e6, 40e6] if quick else [5e6, 10e6, 20e6, 30e6, 40e6, 45e6]
+    for t in targets:
+        ssd = C.FUTURE_40M.replace(t_max_iops=t)
+        out = C.run_engine(C.swarmio_cfg(), ssd,
+                           WorkloadConfig(io_depth=1024), rounds=64)
+        sustained = float(out.metrics.iops())
+        rows.append(["sustained", t / 1e6, sustained / 1e6,
+                     sustained / t, ""])
+    print(f"fig12: achieved {best_iops/1e6:.1f} vs NVMeVirt "
+          f"{base_iops/1e6:.2f} MIOPS under GPU-initiated I/O = "
+          f"{best_iops/base_iops:.0f}x (paper: 303.9x); engine wall-clock "
+          f"{best_rps/1e6:.2f}M req/s ({best_rps/base_rps:.1f}x baseline "
+          f"impl)")
+    return (
+        ["kind", "units_or_target", "miops", "speedup_or_fraction",
+         "virtual_miops"],
+        rows,
+    )
+
+
+def fig13_frontend_ablation(quick=False):
+    """Base / +D / +D+A / +D+C / +D+A+C frontend throughput."""
+    plat = _frontend_only_platform()
+    wl = WorkloadConfig(io_depth=1024)
+    ssd = C.FUTURE_40M.replace(t_max_iops=100e6, n_instances=1024)
+    sw = lambda **kw: C.swarmio_cfg(batched_datapath=False, **kw)
+    cases = [
+        ("base", C.nvmevirt_cfg(), plat),
+        ("D", sw(coalesced=False, dsa_fetch=False), plat),
+        ("D+A", sw(coalesced=False, dsa_fetch=True), plat),
+        ("D+C", sw(coalesced=True, dsa_fetch=False), plat),
+        ("D+A+C", sw(coalesced=True, dsa_fetch=True), plat),
+    ]
+    rows = []
+    for name, cfg, p in cases:
+        out = C.run_engine(cfg, ssd, wl, p, rounds=24)
+        rows.append([name, float(out.metrics.iops()) / 1e6])
+    by = {r[0]: r[1] for r in rows}
+    print(f"fig13: base={by['base']:.2f} D={by['D']:.2f} "
+          f"D+A={by['D+A']:.2f} D+C={by['D+C']:.2f} "
+          f"D+A+C={by['D+A+C']:.2f} MIOPS "
+          f"({by['D+A+C']/by['base']:.0f}x, paper: 537x)")
+    return ["config", "frontend_miops"], rows
+
+
+def fig14_timing_ablation(quick=False):
+    """Aggregated vs per-request timing updates vs #service units."""
+    rows = []
+    units = [4, 16] if quick else [2, 4, 8, 16]
+    for u in units:
+        target = 10e6 * u / 4
+        ssd = C.FUTURE_40M.replace(t_max_iops=target)
+        wl = WorkloadConfig(io_depth=1024)
+        agg = C.run_engine(C.swarmio_cfg(num_units=u), ssd, wl, rounds=32)
+        per = C.run_engine(
+            C.swarmio_cfg(num_units=u, mode="per_request"), ssd, wl,
+            rounds=32,
+        )
+        rows.append([
+            u, target / 1e6,
+            float(agg.metrics.iops()) / 1e6,
+            float(per.metrics.iops()) / 1e6,
+        ])
+    last = rows[-1]
+    print(f"fig14: at {last[0]} units aggregated={last[2]:.1f} MIOPS vs "
+          f"per-request={last[3]:.1f} MIOPS ({last[2]/last[3]:.1f}x, "
+          f"paper: 3.6x)")
+    return ["units", "target_miops", "aggregated_miops",
+            "per_request_miops"], rows
+
+
+def fig15_sensitivity(quick=False):
+    """(a) #queues sweep; (b) block-size sweep."""
+    rows = []
+    ssd = C.FUTURE_40M
+    queues = [32, 256] if quick else [32, 128, 512, 1024]
+    for q in queues:
+        depth = max(2048 * 32 // q, 8)
+        wl = WorkloadConfig(io_depth=depth)
+        out = C.run_engine(
+            C.swarmio_cfg(num_sqs=q, fetch_width=32,
+                          sq_depth=max(1024, depth)),
+            ssd, wl, rounds=24,
+        )
+        rows.append(["queues", q, float(out.metrics.iops()) / 1e6, ""])
+    # Block size: aggregate DSA->GPU bandwidth capped ~42 GB/s (paper).
+    plat = PlatformModel(dsa_bytes_per_us=42000.0 / 16)
+    sizes = [1, 4] if quick else [1, 2, 4, 8, 16]
+    for nb in sizes:  # blocks of 512B per request
+        wl = WorkloadConfig(io_depth=1024)
+        cfg = C.swarmio_cfg()
+        ssd_nb = ssd.replace(block_bytes=512 * nb)
+        out = C.run_engine(cfg, ssd_nb, wl, plat, rounds=24)
+        iops = float(out.metrics.iops())
+        rows.append([
+            "block_size", 512 * nb, iops / 1e6, iops * 512 * nb / 1e9,
+        ])
+    print("fig15: " + "; ".join(
+        f"{r[0]}={r[1]}: {r[2]:.1f} MIOPS" for r in rows[:3]
+    ))
+    return ["kind", "value", "miops", "gbps"], rows
+
+
+def fig16_vector_search(quick=False):
+    """QPS vs SSD IOPS x batch x width (+ recall) — paper's case study."""
+    from repro.apps import vector_search as vs
+
+    rows = []
+    n = 1024 if quick else 4096
+    iops_list = [2.5e6, 40e6] if quick else [2.5e6, 5e6, 10e6, 20e6, 40e6]
+    batches = [4, 64] if quick else [4, 16, 64, 256]
+    for iops in iops_list:
+        for b in batches:
+            out = vs.case_study(n=n, batch=b, width=4, t_max_iops=iops)
+            rows.append([
+                "batch_sweep", iops / 1e6, b, 4, out["qps"], out["recall"],
+            ])
+    widths = [2, 8] if quick else [1, 2, 4, 8]
+    for iops in ([2.5e6, 40e6] if quick else [2.5e6, 10e6, 40e6]):
+        for w in widths:
+            # Iterations scaled down with width for iso-recall search cost.
+            iters = max(6, int(28 / max(w, 1) + 8))
+            out = vs.case_study(
+                n=n, batch=64, width=w, iterations=iters, t_max_iops=iops
+            )
+            rows.append([
+                "width_sweep", iops / 1e6, 64, w, out["qps"], out["recall"],
+            ])
+    big = [r for r in rows if r[0] == "batch_sweep" and r[2] == max(batches)]
+    if len(big) >= 2:
+        print(f"fig16: batch={max(batches)} QPS {big[0][4]:.0f} @2.5M -> "
+              f"{big[-1][4]:.0f} @40M IOPS "
+              f"({big[-1][4]/big[0][4]:.1f}x, paper: 9.7x)")
+    return ["sweep", "miops", "batch", "width", "qps", "recall"], rows
+
+
+ALL = [
+    ("fig03_frontend", fig03_frontend_plateau),
+    ("fig04_per_request_overhead", fig04_per_request_overhead),
+    ("fig10_validation", fig10_validation),
+    ("fig11_latency", fig11_latency_breakdown),
+    ("fig12_scalability", fig12_scalability),
+    ("fig13_frontend_ablation", fig13_frontend_ablation),
+    ("fig14_timing_ablation", fig14_timing_ablation),
+    ("fig15_sensitivity", fig15_sensitivity),
+    ("fig16_vector_search", fig16_vector_search),
+]

@@ -1,0 +1,39 @@
+"""Benchmark driver: one benchmark per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig12]
+
+Writes CSVs to experiments/bench/ and prints one summary line per figure.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps for CI")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import common as C
+    from benchmarks.figures import ALL
+
+    t0 = time.time()
+    for name, fn in ALL:
+        if args.only and args.only not in name:
+            continue
+        t = time.time()
+        try:
+            header, rows = fn(quick=args.quick)
+            path = C.write_csv(name, header, rows)
+            print(f"  -> {path} ({time.time()-t:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            print(f"  !! {name} FAILED: {type(e).__name__}: {e}")
+            raise
+    print(f"all benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: emulate a future 40-MIOPS SSD and measure what a
+GPU-initiated workload sees.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import engine
+from repro.core.types import EngineConfig, SSDConfig, WorkloadConfig
+
+# 1. Describe the device you want to emulate (NVMeVirt simple timing model).
+ssd = SSDConfig(
+    name="future-iops-optimized",
+    t_max_iops=40e6,       # sustained random-read ceiling
+    l_min_us=30.0,         # latency floor
+    n_instances=512,       # abstract flash channels/controllers
+    num_blocks=1 << 14,
+)
+
+# 2. Configure the SwarmIO engine: 16 service units, coalesced fetching,
+#    DSA-offloaded data path, aggregated timing updates.
+cfg = EngineConfig(
+    num_sqs=32, sq_depth=1024, fetch_width=256,  # coalesce deeply
+    num_units=16, frontend="distributed", mode="aggregated",
+    coalesced=True, dsa_fetch=True, batched_datapath=True,
+)
+
+# 3. A BaM-like closed-loop workload: 32 SQs x 1024 outstanding 512B reads.
+wl = WorkloadConfig(io_depth=1024)
+
+final = engine.simulate(cfg, ssd, wl, rounds=64)
+m = final.metrics
+print(f"device target : {ssd.t_max_iops/1e6:.1f} MIOPS, "
+      f"floor {ssd.l_min_us:.0f} us")
+print(f"sustained     : {float(m.iops())/1e6:.1f} MIOPS "
+      f"({float(m.iops())/ssd.t_max_iops*100:.1f}% of target)")
+print(f"avg E2E       : {float(m.avg_e2e_us()):.1f} us "
+      f"(includes queueing at this load)")
+print(f"requests done : {int(float(m.completed))}")
+
+# 4. Compare with the NVMeVirt baseline under the same load.
+base_cfg = EngineConfig(
+    num_sqs=32, sq_depth=1024, fetch_width=64,
+    num_units=1, frontend="centralized", mode="per_request",
+    coalesced=False, dsa_fetch=False, batched_datapath=False,
+)
+base = engine.simulate(base_cfg, ssd, wl, rounds=64)
+print(f"NVMeVirt base : {float(base.metrics.iops())/1e6:.2f} MIOPS "
+      f"-> SwarmIO speedup "
+      f"{float(m.iops())/float(base.metrics.iops()):.0f}x")

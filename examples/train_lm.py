@@ -1,0 +1,59 @@
+"""End-to-end training example: a ~100M-param LM trained with the full
+production loop (prefetching data pipeline, AdamW, checkpoints, restart).
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, few steps
+    PYTHONPATH=src python examples/train_lm.py --steps 300  # longer run
+    PYTHONPATH=src python examples/train_lm.py --tiny     # CI-fast variant
+"""
+import argparse
+
+from repro.models.config import ATTN, ModelConfig
+from repro.train import loop as train_loop
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-100m",
+        n_layers=10, d_model=640, n_heads=10, n_kv_heads=10, d_head=64,
+        d_ff=2560, vocab=32000,
+        pattern=(ATTN,),
+        norm="rmsnorm", mlp_act="silu", mlp_gated=True,
+        rope="rope", tie_embeddings=True,
+        dtype="float32", loss_chunk=128, attn_chunk=256, remat=False,
+    )
+
+
+def model_tiny() -> ModelConfig:
+    return model_100m().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+        d_ff=512, vocab=1024,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    print(f"model: {cfg.name}, {cfg.param_count()/1e6:.0f}M params")
+    tcfg = train_loop.TrainConfig(
+        batch=args.batch, seq=args.seq, steps=args.steps,
+        ckpt_every=max(args.steps // 2, 1), ckpt_dir=args.ckpt,
+    )
+    res = train_loop.train(cfg, tcfg, resume=False, log=print)
+    print(f"trained {res.step} steps in {res.wall_s:.1f}s; "
+          f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f} "
+          f"(min {min(res.losses):.4f})")
+    # Synthetic tokens are uniform-random: the achievable floor is ln(vocab)
+    # and the curve is noisy around it once reached — assert the model
+    # moved toward the floor, not strict monotonicity.
+    assert min(res.losses) < res.losses[0], "loss should move toward floor"
+
+
+if __name__ == "__main__":
+    main()

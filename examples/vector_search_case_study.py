@@ -1,0 +1,28 @@
+"""Paper §VII case study (reduced): on-disk CAGRA-style vector search,
+sweeping emulated SSD IOPS — reproduces the batch-size sensitivity and the
+IOPS-dependent optimal search width.
+
+    PYTHONPATH=src python examples/vector_search_case_study.py
+"""
+from repro.apps import vector_search as vs
+
+print("== QPS vs IOPS x batch (width=4) ==")
+for miops in (2.5, 10.0, 40.0):
+    for batch in (4, 64):
+        out = vs.case_study(n=1024, batch=batch, width=4,
+                            t_max_iops=miops * 1e6)
+        print(f"  {miops:5.1f} MIOPS batch={batch:3d}: "
+              f"QPS={out['qps']:8.0f} recall@10={out['recall']:.3f}")
+
+print("== optimal width shifts with IOPS (batch=64, iso-iteration) ==")
+for miops in (2.5, 40.0):
+    best = None
+    for w in (1, 2, 4, 8):
+        iters = max(6, int(28 / w + 8))
+        out = vs.case_study(n=1024, batch=64, width=w, iterations=iters,
+                            t_max_iops=miops * 1e6)
+        tag = f"W={w}: QPS={out['qps']:7.0f} recall={out['recall']:.2f}"
+        if best is None or out["qps"] > best[0]:
+            best = (out["qps"], w)
+        print(f"  {miops:5.1f} MIOPS {tag}")
+    print(f"  -> optimal width at {miops} MIOPS: W={best[1]}")

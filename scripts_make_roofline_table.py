@@ -1,0 +1,41 @@
+"""Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/."""
+import glob
+import json
+
+rows = []
+for f in sorted(glob.glob("experiments/dryrun/*__single.json")):
+    r = json.load(open(f))
+    if r["status"] == "skipped":
+        arch, shape, _ = r["cell"].split("__")
+        rows.append((arch, shape, None))
+        continue
+    if r["status"] != "ok":
+        continue
+    rows.append((r["arch"], r["shape"], r))
+
+print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+      "bottleneck | roofline frac | useful ratio | HBM peak (GB) |")
+print("|---|---|---|---|---|---|---|---|---|")
+for arch, shape, r in rows:
+    if r is None:
+        print(f"| {arch} | {shape} | — | — | — | skipped (full-attention, "
+              f"per assignment) | — | — | — |")
+        continue
+    u = r.get("useful_compute_ratio")
+    print(
+        f"| {arch} | {shape} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+        f"| {r['collective_s']:.3e} | {r['bottleneck']} "
+        f"| {r['roofline_fraction']:.3f} | "
+        f"{u:.2f} |" if u else "—",
+        f" {r['hbm_peak_bytes']/1e9:.1f} |",
+    )
+
+print()
+print("multi-pod (2x16x16) status:")
+ok = err = skip = 0
+for f in sorted(glob.glob("experiments/dryrun/*__multi.json")):
+    r = json.load(open(f))
+    ok += r["status"] == "ok"
+    err += r["status"] == "error"
+    skip += r["status"] == "skipped"
+print(f"  ok={ok} err={err} skipped={skip}")

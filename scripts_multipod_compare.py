@@ -1,0 +1,13 @@
+"""Single-pod vs multi-pod roofline comparison (train_4k cells)."""
+import glob
+import json
+
+print("| arch | mesh | compute (s) | memory (s) | collective (s) | frac |")
+print("|---|---|---|---|---|---|")
+for f in sorted(glob.glob("experiments/dryrun/*__train_4k__*.json")):
+    r = json.load(open(f))
+    if r["status"] != "ok":
+        continue
+    print(f"| {r['arch']} | {r['mesh']} | {r['compute_s']:.2e} "
+          f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+          f"| {r['roofline_fraction']:.3f} |")

@@ -1,0 +1,220 @@
+"""GPU-accelerated, on-disk vector search (CAGRA-style) — paper §VII.
+
+Graph-based ANNS where the graph index lives in accelerator memory but the
+dataset VECTORS live on the emulated SSD (the on-disk regime: index >> HBM).
+Each search iteration expands the best W unvisited candidates per query,
+faults their neighbors' vectors in through the SwarmIO storage client
+(512-byte blocks = one 128-dim fp32 vector), computes distances, and merges
+the top-L candidate list.
+
+Virtual-time accounting: per iteration the storage reads are priced by the
+configured SSD model (batch × width × degree parallel reads); the GPU
+compute is a calibrated per-iteration cost model. QPS therefore responds
+to device IOPS exactly as the paper's Fig. 16 study: small batches can't
+generate enough parallel I/O to exploit a faster device; larger batches
+can, and the optimal search width W shifts upward with IOPS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import ClientState, StorageClient
+from repro.core.types import EngineConfig, PlatformModel, SSDConfig
+
+BIG = 3e38  # python float: jnp module constants leak into jaxprs
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    dim: int = 128
+    degree: int = 16            # graph out-degree
+    beam_width: int = 4         # W — candidates expanded per iteration
+    list_size: int = 64         # L — internal top-list length
+    iterations: int = 24
+    top_k: int = 10
+    gpu_flops: float = 50e12    # effective distance-compute throughput
+    gpu_iter_overhead_us: float = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Index construction (exact kNN graph on synthetic data).
+# ---------------------------------------------------------------------------
+
+def build_index(
+    key: jax.Array, n: int, cfg: SearchConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (vectors (N,D), graph (N,degree)) — exact kNN graph."""
+    vecs = jax.random.normal(key, (n, cfg.dim), jnp.float32)
+    vecs = vecs / jnp.linalg.norm(vecs, axis=1, keepdims=True)
+
+    def knn_row(i):
+        d = jnp.sum((vecs - vecs[i]) ** 2, axis=1)
+        d = d.at[i].set(BIG)
+        _, idx = jax.lax.top_k(-d, cfg.degree)
+        return idx
+
+    graph = jax.lax.map(knn_row, jnp.arange(n), batch_size=256)
+    return vecs, graph.astype(jnp.int32)
+
+
+def ground_truth(vecs: jax.Array, queries: jax.Array, k: int) -> jax.Array:
+    d = jnp.sum(
+        (queries[:, None, :] - vecs[None, :, :]) ** 2, axis=-1
+    )
+    _, idx = jax.lax.top_k(-d, k)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# CAGRA-style batched beam search with storage-gated vector fetches.
+# ---------------------------------------------------------------------------
+
+def _merge_top(dist, idx, expanded, new_d, new_i, list_size):
+    """Merge candidates; dedupe by keeping the first (sorted) occurrence."""
+    all_d = jnp.concatenate([dist, new_d], axis=1)
+    all_i = jnp.concatenate([idx, new_i], axis=1)
+    all_e = jnp.concatenate(
+        [expanded, jnp.zeros_like(new_i, bool)], axis=1
+    )
+    order = jnp.argsort(all_d, axis=1)
+    all_d = jnp.take_along_axis(all_d, order, axis=1)
+    all_i = jnp.take_along_axis(all_i, order, axis=1)
+    all_e = jnp.take_along_axis(all_e, order, axis=1)
+    # Dedupe: mark later duplicates (same id, earlier occurrence exists).
+    def dedupe_row(ids):
+        eq = ids[:, None] == ids[None, :]
+        earlier = jnp.tril(eq, k=-1).any(axis=1)
+        return earlier
+
+    dup = jax.vmap(dedupe_row)(all_i)
+    all_d = jnp.where(dup, BIG, all_d)
+    order2 = jnp.argsort(all_d, axis=1)
+    all_d = jnp.take_along_axis(all_d, order2, axis=1)[:, :list_size]
+    all_i = jnp.take_along_axis(all_i, order2, axis=1)[:, :list_size]
+    all_e = jnp.take_along_axis(all_e, order2, axis=1)[:, :list_size]
+    return all_d, all_i, all_e
+
+
+def search(
+    queries: jax.Array,          # (B, D)
+    vecs: jax.Array,             # (N, D) — the "on-disk" dataset
+    graph: jax.Array,            # (N, degree)
+    cfg: SearchConfig,
+    ssd: SSDConfig,
+    ecfg: EngineConfig | None = None,
+    plat: PlatformModel | None = None,
+) -> dict:
+    """Returns results + virtual-time QPS accounting."""
+    b, d = queries.shape
+    n = vecs.shape[0]
+    ecfg = ecfg or EngineConfig(num_units=8, fetch_width=64)
+    storage = StorageClient(ssd, ecfg, plat or PlatformModel())
+
+    # Entry points: hash-spread start nodes, one per query.
+    start = (
+        (jnp.arange(b, dtype=jnp.uint32) * jnp.uint32(2654435761))
+        % jnp.uint32(n)
+    ).astype(jnp.int32)
+    dist0 = jnp.full((b, cfg.list_size), BIG)
+    idx0 = jnp.full((b, cfg.list_size), -1, jnp.int32)
+    exp0 = jnp.zeros((b, cfg.list_size), bool)
+    d_start = jnp.sum((queries - vecs[start]) ** 2, axis=1)
+    dist0 = dist0.at[:, 0].set(d_start)
+    idx0 = idx0.at[:, 0].set(start)
+
+    cstate = ClientState.init(ssd, ecfg.num_units)
+    clock0 = jnp.float32(0)
+
+    # Per-iteration modeled GPU time: distance flops + merge overhead.
+    flops_per_iter = b * cfg.beam_width * cfg.degree * d * 3
+    gpu_us = flops_per_iter / cfg.gpu_flops * 1e6 + cfg.gpu_iter_overhead_us
+
+    def body(carry, _):
+        dist, idx, expd, cstate, clock = carry
+        # Pick top-W unexpanded candidates.
+        cand_d = jnp.where(expd | (idx < 0), BIG, dist)
+        _, sel = jax.lax.top_k(-cand_d, cfg.beam_width)       # (B, W)
+        sel_idx = jnp.take_along_axis(idx, sel, axis=1)       # (B, W)
+        valid = jnp.take_along_axis(cand_d, sel, axis=1) < BIG
+        expd = expd.at[
+            jnp.arange(b)[:, None], sel
+        ].set(expd[jnp.arange(b)[:, None], sel] | valid)
+
+        # Neighbor ids (graph resides in accelerator memory).
+        nbrs = graph[jnp.maximum(sel_idx, 0)]                 # (B, W, deg)
+        nbrs = nbrs.reshape(b, -1)
+        nvalid = jnp.repeat(valid, cfg.degree, axis=1)
+
+        # Storage: fault in the neighbor VECTORS (1 block each).
+        lba = jnp.maximum(nbrs.reshape(-1), 0)
+        cstate, data, done = storage.read(
+            cstate, vecs, lba, clock, nvalid.reshape(-1)
+        )
+        storage_done = jnp.max(done)
+        fetched = data.reshape(b, -1, d)
+
+        nd = jnp.sum((fetched - queries[:, None, :]) ** 2, axis=-1)
+        nd = jnp.where(nvalid, nd, BIG)
+        dist, idx, expd = _merge_top(
+            dist, idx, expd, nd, nbrs, cfg.list_size
+        )
+        step_us = jnp.maximum(storage_done - clock, gpu_us)
+        return (dist, idx, expd, cstate, clock + step_us), step_us
+
+    (dist, idx, expd, cstate, clock), step_us = jax.lax.scan(
+        body, (dist0, idx0, exp0, cstate, clock0), None,
+        length=cfg.iterations,
+    )
+    total_us = float(clock)
+    return {
+        "indices": idx[:, : cfg.top_k],
+        "distances": dist[:, : cfg.top_k],
+        "virtual_us": total_us,
+        "qps": b / (total_us * 1e-6),
+        "avg_iter_us": float(jnp.mean(step_us)),
+        "gpu_iter_us": float(gpu_us),
+        "reads_per_iter": b * cfg.beam_width * cfg.degree,
+    }
+
+
+def recall_at_k(found: jax.Array, truth: jax.Array) -> float:
+    """Fraction of ground-truth top-k present in results."""
+    hits = (found[:, :, None] == truth[:, None, :]).any(axis=1)
+    return float(jnp.mean(hits.astype(jnp.float32)))
+
+
+@functools.lru_cache(maxsize=4)
+def _cached_index(n: int, dim: int, degree: int, seed: int):
+    cfg = SearchConfig(dim=dim, degree=degree)
+    return build_index(jax.random.PRNGKey(seed), n, cfg)
+
+
+def case_study(
+    n: int = 4096,
+    batch: int = 64,
+    width: int = 4,
+    iterations: int = 24,
+    t_max_iops: float = 2.5e6,
+    seed: int = 0,
+) -> dict:
+    """One (batch, width, IOPS) cell of the paper's Fig. 16 study."""
+    cfg = SearchConfig(beam_width=width, iterations=iterations)
+    vecs, graph = _cached_index(n, cfg.dim, cfg.degree, seed)
+    queries = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (batch, cfg.dim)
+    )
+    queries = queries / jnp.linalg.norm(queries, axis=1, keepdims=True)
+    ssd = SSDConfig(
+        t_max_iops=t_max_iops, l_min_us=50.0,
+        n_instances=max(64, int(t_max_iops // 4e4)),
+        num_blocks=n,
+    )
+    out = search(queries, vecs, graph, cfg, ssd)
+    truth = ground_truth(vecs, queries, cfg.top_k)
+    out["recall"] = recall_at_k(out["indices"], truth)
+    return out

@@ -1,0 +1,131 @@
+"""Atomic sharded checkpointing with reshard-on-load.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per leaf (host-gathered
+shards) plus ``manifest.json`` (step, flattened tree keys, mesh metadata).
+Writes go to ``step_<N>.tmp`` and are ``os.rename``d only after fsync —
+a crashed writer never corrupts the latest checkpoint (atomic-rename
+protocol). ``load`` accepts a *different* mesh/sharding tree than the one
+that saved (elastic reshard-on-load): arrays are materialized host-side
+and re-``device_put`` against the target shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(k): v for k, v in flat}
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Atomically write checkpoint for ``step``. Returns the final path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flatten(tree)
+    names = {}
+    for i, (key, val) in enumerate(flat.items()):
+        fname = f"leaf_{i:05d}.npy"
+        arr = np.asarray(jax.device_get(val))
+        dtype_str = str(arr.dtype)
+        if arr.dtype.kind == "V" or dtype_str == "bfloat16":
+            arr = arr.view(np.uint16)  # ml_dtypes (bf16) -> raw payload
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        names[key] = {"file": fname, "dtype": dtype_str}
+    manifest = {
+        "step": step,
+        "leaves": names,
+        "extra": extra or {},
+        "treedef": None,  # structure re-derived from a template on load
+    }
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def load(
+    ckpt_dir: str,
+    template,
+    step: int | None = None,
+    shardings=None,
+):
+    """Load into ``template``'s structure; ``shardings`` (same structure or
+    None) re-places shards for the *current* mesh (elastic reshard)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None
+        else [None] * len(flat_t)
+    )
+    leaves = []
+    for (key_path, tmpl), shard in zip(flat_t, shard_flat):
+        key = jax.tree_util.keystr(key_path)
+        entry = manifest["leaves"][key]
+        fname = entry["file"] if isinstance(entry, dict) else entry
+        arr = np.load(os.path.join(path, fname))
+        if isinstance(entry, dict) and entry["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {tmpl.shape}"
+            )
+        arr = arr.astype(tmpl.dtype)
+        leaves.append(
+            jax.device_put(arr, shard) if shard is not None
+            else jnp.asarray(arr)
+        )
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def gc_old(ckpt_dir: str, keep: int = 3):
+    """Delete all but the newest ``keep`` checkpoints (and stale tmps)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    entries = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+    )
+    tmps = [d for d in entries if d.endswith(".tmp")]
+    finals = [d for d in entries if not d.endswith(".tmp")]
+    for d in tmps + finals[:-keep] if keep else tmps:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

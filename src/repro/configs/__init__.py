@@ -1,0 +1,72 @@
+"""Architecture registry + assigned input shapes.
+
+``get_config(arch_id, smoke=False)`` returns the exact assigned config (or
+its reduced same-family smoke config). ``SHAPES`` lists the assigned
+(shape_id -> spec) set shared by all LM-family archs; per-arch
+applicability (e.g. long_500k only for sub-quadratic archs) is encoded in
+``cells()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "starcoder2-3b": "starcoder2_3b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "yi-34b": "yi_34b",
+    "gemma2-27b": "gemma2_27b",
+    "xlstm-1.3b": "xlstm_13b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "musicgen-large": "musicgen_large",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+ARCHS = tuple(_MODULES)
+
+# Archs whose decode state is sub-quadratic (recurrent state or bounded
+# window) — the only ones that run long_500k per the assignment. All eight
+# full-attention archs skip it (see DESIGN.md §Arch-applicability).
+SUBQUADRATIC = ("xlstm-1.3b", "recurrentgemma-9b")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def cells() -> list[tuple[str, str]]:
+    """All assigned (arch, shape) dry-run cells (40 total; long_500k is
+    skipped for pure full-attention archs per the assignment, recorded as
+    explicit skip cells by the dry-run driver)."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            out.append((arch, shape))
+    return out
+
+
+def runnable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in SUBQUADRATIC
+    return True

@@ -1,0 +1,149 @@
+"""Accelerator-initiated storage client (virtual time).
+
+Applications (the SSD-backed KV tier, the vector-search case study) do not
+need the full SQ-ring machinery — they issue *batched* block reads and need
+(a) the data, functionally, and (b) faithful virtual-time completion times
+under a configured device model. ``StorageClient`` provides exactly that:
+each ``read`` models GPU-initiated submission across ``num_sqs`` queues,
+SwarmIO's coalesced fetch + aggregated timing + DSA-batched data path, and
+returns per-request completion times plus the gathered blocks.
+
+This is the "GPU-initiated I/O" surface the paper's case study uses: the
+application decides *when* to issue (its own virtual clock), the client
+answers *when the data is ready*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timing
+from repro.core.segops import queueing_scan
+from repro.core.types import (
+    EngineConfig,
+    PlatformModel,
+    SSDConfig,
+    TimingState,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClientState:
+    """Virtual-time device state carried across application steps."""
+
+    tstate: TimingState
+    disp_time: jax.Array  # (U,) dispatcher cursors
+    dsa_time: jax.Array   # (U,) DSA engine cursors
+
+    @staticmethod
+    def init(ssd: SSDConfig, num_units: int) -> "ClientState":
+        return ClientState(
+            tstate=TimingState.init(ssd.n_instances),
+            disp_time=jnp.zeros((num_units,), jnp.float32),
+            dsa_time=jnp.zeros((num_units,), jnp.float32),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageClient:
+    ssd: SSDConfig
+    cfg: EngineConfig
+    plat: PlatformModel = PlatformModel()
+
+    def read(
+        self,
+        state: ClientState,
+        flash: jax.Array,      # (num_blocks, block_words)
+        lba: jax.Array,        # (N,) i32 block addresses
+        t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
+        valid: jax.Array | None = None,
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Issue N block reads at ``t_submit``.
+
+        Returns (state', data (N, block_words), completion_times (N,)).
+        """
+        n = lba.shape[0]
+        u = state.disp_time.shape[0]
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
+
+        # --- frontend: coalesced fetch, requests dealt round-robin to units.
+        per_unit = -(-n // u)  # ceil
+        idx = jnp.arange(n, dtype=jnp.int32)
+        unit = idx // per_unit
+        rank = idx % per_unit
+        txn = jnp.float32(
+            self.plat.txn_base_us
+            if self.cfg.transport == "p2p" else self.plat.host_txn_base_us
+        )
+        bw = jnp.float32(
+            self.plat.link_bytes_per_us
+            if self.cfg.transport == "p2p" else self.plat.host_bytes_per_us
+        )
+        f = self.cfg.fetch_width
+        if self.cfg.coalesced:
+            # One transaction per fetch_width entries per unit.
+            n_txn = rank // f + 1
+            fetch_done = (
+                jnp.maximum(t_submit, state.disp_time[unit])
+                + n_txn.astype(jnp.float32) * txn
+                + (rank + 1).astype(jnp.float32) * self.plat.sqe_bytes / bw
+            )
+        else:
+            fetch_done = (
+                jnp.maximum(t_submit, state.disp_time[unit])
+                + (rank + 1).astype(jnp.float32)
+                * (txn + self.plat.sqe_bytes / bw)
+            )
+        fetch_done = jnp.where(valid, fetch_done, 0.0)
+        disp_time = jnp.maximum(
+            jax.ops.segment_max(
+                jnp.where(valid, fetch_done, 0.0), unit, num_segments=u
+            ),
+            state.disp_time,
+        )
+
+        # --- timing model (aggregated, one shared-state update).
+        if self.ssd.routing == "lba_hash":
+            inst = timing.lba_hash_instance(lba, self.ssd.n_instances)
+            rr = state.tstate.rr
+        else:
+            inst, rr = timing.assign_rr(
+                state.tstate.rr, valid, self.ssd.n_instances
+            )
+        target, new_busy = timing.aggregated_batch_times(
+            state.tstate.busy_until, fetch_done, inst, valid, self.ssd
+        )
+
+        # --- data path: batched DSA copies, pipelined per unit.
+        issue = (
+            self.plat.dsa_desc_issue_us
+            + self.plat.dsa_batch_setup_us / max(self.cfg.fetch_width, 1)
+        )
+        cost = jnp.where(
+            valid,
+            self.ssd.block_bytes / self.plat.dsa_bytes_per_us + 0.01,
+            0.0,
+        )
+        heads = jnp.concatenate(
+            [jnp.ones((1,), bool), unit[1:] != unit[:-1]]
+        )
+        busy = queueing_scan(
+            fetch_done + issue, cost, heads, state.dsa_time[unit]
+        )
+        dsa_time = jnp.maximum(
+            jax.ops.segment_max(busy, unit, num_segments=u), state.dsa_time
+        )
+
+        done = jnp.where(valid, jnp.maximum(target, busy), 0.0)
+        data = flash[jnp.where(valid, lba, 0)]
+        new_state = ClientState(
+            tstate=TimingState(new_busy, rr), disp_time=disp_time,
+            dsa_time=dsa_time,
+        )
+        return new_state, data, done

@@ -1,0 +1,389 @@
+"""Closed-loop SwarmIO-JAX emulation engine.
+
+One engine "round" mirrors a service-unit iteration in the paper (Fig. 6):
+
+  1. dispatchers fetch newly visible SQ entries     (frontend.py)
+  2. the timing model derives target completions    (timing.py) — guarded by
+     the global lock, entered per-request (baseline) or per-batch (SwarmIO)
+  3. the backend emulates the storage data transfer (datapath.py) — CPU
+     worker threads with map/unmap (baseline) or batched async DSA offload
+  4. completions post when BOTH the target time has elapsed AND the copy is
+     done; the closed-loop client resubmits to the same SQ after think time
+
+Two time domains are tracked: *virtual time* (the emulated device's event
+time — fidelity metrics: IOPS, latency vs. the modeled SSD) and the engine's
+own *wall-clock throughput* (measured by benchmarks around ``run``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import datapath, frontend, timing
+from repro.core.frontend import SQRings
+from repro.core.types import (
+    EngineConfig,
+    PlatformModel,
+    RequestBatch,
+    SSDConfig,
+    TimingState,
+    WorkloadConfig,
+)
+
+FAR = 3e38  # python float: jnp module constants leak into jaxprs
+
+
+def _hash_u32(x: jax.Array) -> jax.Array:
+    """xorshift-style integer hash (deterministic per-request randomness)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    completed: jax.Array      # f32 count
+    fetched: jax.Array        # f32 count
+    sum_e2e: jax.Array        # f32 us   (completion - submit)
+    sum_target: jax.Array     # f32 us   (timing-model latency)
+    sum_proc: jax.Array       # f32 us   (copy-ready - dispatch)
+    last_completion: jax.Array  # f32 us  max completion time seen
+    first_submit: jax.Array   # f32 us   min submit time seen
+
+    @staticmethod
+    def zero() -> "Metrics":
+        z = jnp.float32(0)
+        return Metrics(z, z, z, z, z, jnp.float32(0), FAR)
+
+    def iops(self) -> jax.Array:
+        """Virtual-time sustained IOPS (requests per emulated second)."""
+        span = jnp.maximum(self.last_completion - self.first_submit, 1e-6)
+        return self.completed / span * 1e6
+
+    def avg_e2e_us(self) -> jax.Array:
+        return self.sum_e2e / jnp.maximum(self.completed, 1.0)
+
+    def avg_target_us(self) -> jax.Array:
+        return self.sum_target / jnp.maximum(self.completed, 1.0)
+
+    def avg_proc_us(self) -> jax.Array:
+        return self.sum_proc / jnp.maximum(self.completed, 1.0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    rings: SQRings
+    tstate: TimingState
+    disp_time: jax.Array   # (U,) dispatcher busy-until
+    work_time: jax.Array   # (U, W) baseline worker lanes busy-until
+    dsa_time: jax.Array    # (U,) DSA engine busy-until
+    lock_time: jax.Array   # ()  global timing-lock busy-until
+    map_time: jax.Array    # ()  global map/unmap-lock busy-until
+    clock: jax.Array       # ()  virtual now
+    flash: jax.Array       # (num_blocks, block_words) emulated flash
+    bufs: jax.Array        # (num_bufs, block_words) I/O buffers
+    req_counter: jax.Array  # i32 next request id
+    metrics: Metrics
+
+
+# ---------------------------------------------------------------------------
+# Workload initialization (fio / BaM closed loop).
+# ---------------------------------------------------------------------------
+
+def init_state(
+    cfg: EngineConfig,
+    ssd: SSDConfig,
+    wl: WorkloadConfig,
+    block_words: int = 16,
+) -> EngineState:
+    """Build rings pre-filled with ``io_depth`` entries per SQ at t~0."""
+    q, dep = cfg.num_sqs, cfg.sq_depth
+    if wl.io_depth > dep:
+        raise ValueError("io_depth exceeds SQ depth")
+    rings = SQRings.empty(q, dep)
+
+    d = wl.io_depth
+    req_id = (
+        jnp.arange(q, dtype=jnp.int32)[:, None] * d
+        + jnp.arange(d, dtype=jnp.int32)[None, :]
+    )
+    h = _hash_u32(req_id)
+    lba = (h % jnp.uint32(ssd.num_blocks)).astype(jnp.int32)
+    opcode = (
+        (_hash_u32(req_id + 7919) % jnp.uint32(1000)).astype(jnp.float32)
+        >= wl.read_frac * 1000
+    ).astype(jnp.int32)
+    # Stagger submissions by a few ns to define a total order at t≈0.
+    submit = (
+        jnp.arange(d, dtype=jnp.float32)[None, :] * 1e-3
+        + jnp.arange(q, dtype=jnp.float32)[:, None] * 1e-5
+    )
+    buf_id = (req_id % cfg.num_bufs).astype(jnp.int32)
+    valid = jnp.ones((q, d), bool)
+    rings = frontend.submit_grouped(
+        rings, submit, opcode, lba, jnp.ones_like(lba), buf_id, req_id, valid
+    )
+
+    nb = ssd.num_blocks if cfg.emulate_data else 1
+    nbuf = cfg.num_bufs if cfg.emulate_data else 1
+    flash = (
+        jnp.arange(nb, dtype=jnp.float32)[:, None]
+        + jnp.arange(block_words, dtype=jnp.float32)[None, :] / block_words
+    )
+    bufs = jnp.zeros((nbuf, block_words), jnp.float32)
+    u = cfg.num_units if cfg.frontend == "distributed" else 1
+    return EngineState(
+        rings=rings,
+        tstate=TimingState.init(ssd.n_instances),
+        disp_time=jnp.zeros((u,), jnp.float32),
+        work_time=jnp.zeros((u, cfg.workers_per_unit), jnp.float32),
+        dsa_time=jnp.zeros((u,), jnp.float32),
+        lock_time=jnp.float32(0),
+        map_time=jnp.float32(0),
+        clock=jnp.float32(0),
+        flash=flash,
+        bufs=bufs,
+        req_counter=jnp.int32(q * d),
+        metrics=Metrics.zero(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The engine round.
+# ---------------------------------------------------------------------------
+
+def _lock_pass(
+    lock_time: jax.Array,
+    batch_ready: jax.Array,   # (U,) time each unit's batch is ready
+    n_valid_u: jax.Array,     # (U,) valid requests per unit
+    cfg: EngineConfig,
+    plat: PlatformModel,
+) -> Tuple[jax.Array, jax.Array]:
+    """Serialize dispatchers on the global timing-model lock.
+
+    Returns (lock_time', lock_done (U,)). Units acquire in index order after
+    their batch is ready. Cost = per-request (baseline) or per-batch
+    (aggregated). Local timing scope has no shared lock at all.
+    """
+    if cfg.timing_scope == "local":
+        return lock_time, batch_ready
+    if cfg.mode == "per_request":
+        cost = n_valid_u.astype(jnp.float32) * plat.lock_per_req_us
+    else:
+        cost = jnp.where(n_valid_u > 0, plat.lock_per_batch_us, 0.0)
+
+    def step(t, x):
+        ready, c = x
+        done = jnp.maximum(t, ready) + c
+        return done, done
+
+    lock_end, lock_done = jax.lax.scan(step, lock_time, (batch_ready, cost))
+    return lock_end, lock_done
+
+
+def engine_round(
+    state: EngineState,
+    cfg: EngineConfig,
+    ssd: SSDConfig,
+    wl: WorkloadConfig,
+    plat: PlatformModel,
+) -> EngineState:
+    q, f = cfg.num_sqs, cfg.fetch_width
+    u = state.disp_time.shape[0]
+    per_unit_rows = q * f // u
+
+    # -- 1. frontend fetch ---------------------------------------------------
+    if cfg.frontend == "distributed":
+        rings, disp_time, batch, fetch_done = frontend.fetch_distributed(
+            state.rings, state.clock, state.disp_time, cfg, plat
+        )
+    else:
+        rings, disp_time, batch, fetch_done = frontend.fetch_centralized(
+            state.rings, state.clock, state.disp_time, cfg, plat
+        )
+    submit_t = batch.arrival                       # provisional = submit time
+    n = batch.valid.shape[0]
+    row_unit = jnp.arange(n, dtype=jnp.int32) // per_unit_rows
+
+    # -- 2. timing model under the global lock -------------------------------
+    n_valid_u = jax.ops.segment_sum(
+        batch.valid.astype(jnp.int32), row_unit, num_segments=u
+    )
+    batch_ready = jax.ops.segment_max(
+        jnp.where(batch.valid, fetch_done, 0.0), row_unit, num_segments=u
+    )
+    lock_time, lock_done = _lock_pass(
+        state.lock_time, batch_ready, n_valid_u, cfg, plat
+    )
+    disp_time = jnp.maximum(disp_time, lock_done)
+
+    arrival = jnp.maximum(fetch_done, lock_done[row_unit])
+    tbatch = dataclasses.replace(batch, arrival=arrival)
+    if cfg.timing_scope == "local":
+        # Paper's rejected design: per-unit state, 1/U capacity each.
+        k_u = max(ssd.n_instances // u, 1)
+        local_ssd = ssd.replace(t_max_iops=ssd.t_max_iops / u, n_instances=k_u)
+        bu = state.tstate.busy_until.reshape(u, -1)
+        rr_u = jnp.broadcast_to(state.tstate.rr, (u,))
+
+        def per_unit(bu_u, rr_1, val_u, arr_u):
+            inst_u, rr_2 = timing.assign_rr(rr_1, val_u, k_u)
+            comp, nb = timing.aggregated_batch_times(
+                bu_u, arr_u, inst_u, val_u, local_ssd
+            )
+            return nb, rr_2, comp
+
+        nb, rr_new, comp = jax.vmap(per_unit)(
+            bu, rr_u, batch.valid.reshape(u, -1), arrival.reshape(u, -1)
+        )
+        tstate = TimingState(nb.reshape(-1), rr_new[0])
+        target = comp.reshape(-1)
+    else:
+        tstate, target = timing.update(state.tstate, tbatch, ssd, cfg.mode)
+
+    # -- 3. backend data transfer --------------------------------------------
+    if cfg.batched_datapath:
+        # DSA engine also carried the fetch transfer (engine sharing /
+        # interference, paper Fig. 9b): bump cursors by fetch bytes.
+        fetch_bytes_u = jax.ops.segment_sum(
+            jnp.where(batch.valid, jnp.float32(plat.sqe_bytes), 0.0),
+            row_unit, num_segments=u,
+        )
+        dsa_time0 = state.dsa_time + fetch_bytes_u / plat.dsa_bytes_per_us
+        dsa_time, ready = datapath.dsa_worker_times(
+            dsa_time0, arrival, batch, cfg, plat, ssd
+        )
+        work_time = state.work_time
+        map_time = state.map_time
+    else:
+        work_time, map_time, ready = datapath.baseline_worker_times(
+            state.work_time, state.map_time, arrival, batch, cfg, plat, ssd
+        )
+        dsa_time = state.dsa_time
+
+    # -- 4. completion --------------------------------------------------------
+    done = jnp.maximum(target, ready)
+    valid = batch.valid
+    e2e = jnp.where(valid, done - submit_t, 0.0)
+    tgt_lat = jnp.where(valid, target - arrival, 0.0)
+    proc = jnp.where(valid, ready - arrival, 0.0)
+    nvalid = jnp.sum(valid.astype(jnp.float32))
+    m = state.metrics
+    metrics = Metrics(
+        completed=m.completed + nvalid,
+        fetched=m.fetched + nvalid,
+        sum_e2e=m.sum_e2e + jnp.sum(e2e),
+        sum_target=m.sum_target + jnp.sum(tgt_lat),
+        sum_proc=m.sum_proc + jnp.sum(proc),
+        last_completion=jnp.maximum(
+            m.last_completion, jnp.max(jnp.where(valid, done, 0.0))
+        ),
+        first_submit=jnp.minimum(
+            m.first_submit, jnp.min(jnp.where(valid, submit_t, FAR))
+        ),
+    )
+
+    # -- 5. functional data movement ------------------------------------------
+    flash, bufs = state.flash, state.bufs
+    if cfg.emulate_data:
+        bufs = datapath.apply_reads(flash, bufs, batch, cfg.use_pallas)
+        flash = datapath.apply_writes(flash, bufs, batch)
+
+    # -- 6. closed-loop resubmission -------------------------------------------
+    new_req = state.req_counter + jnp.arange(n, dtype=jnp.int32)
+    h = _hash_u32(new_req)
+    new_lba = (h % jnp.uint32(ssd.num_blocks)).astype(jnp.int32)
+    new_op = (
+        (_hash_u32(new_req + 7919) % jnp.uint32(1000)).astype(jnp.float32)
+        >= wl.read_frac * 1000
+    ).astype(jnp.int32)
+    resub_t = jnp.where(valid, done + wl.resubmit_delay_us, FAR)
+    # Rows are SQ-major (q, f); sort each SQ's resubmissions by time.
+    rt = resub_t.reshape(q, f)
+    order = jnp.argsort(rt, axis=1)
+    rows = jnp.arange(q, dtype=jnp.int32)[:, None]
+
+    def pick(x):
+        return x.reshape(q, f)[rows, order]
+
+    rings = frontend.submit_grouped(
+        rings,
+        rt[rows, order],
+        pick(new_op),
+        pick(new_lba),
+        pick(jnp.ones((n,), jnp.int32)),
+        pick(batch.buf_id),
+        pick(new_req),
+        pick(valid),
+    )
+
+    # -- 7. clock advance ------------------------------------------------------
+    # Discrete-event step with a poll quantum: each round ingests the
+    # submissions of a bounded virtual-time window (dispatchers poll
+    # continuously in the real emulator; the quantum is our emulation
+    # granularity — it bounds arrival-time rounding at <= quantum, far below
+    # the >=50us device latencies modeled). Idle gaps are skipped by jumping
+    # to the earliest pending submission.
+    dpos = rings.head % rings.depth
+    head_t = rings.submit_time[jnp.arange(q), dpos]
+    head_t = jnp.where(rings.tail > rings.head, head_t, FAR)
+    nxt = jnp.min(head_t)
+    stepped = state.clock + jnp.float32(cfg.poll_quantum_us)
+    clock = jnp.where(nxt < FAR, jnp.maximum(stepped, nxt), stepped)
+
+    return EngineState(
+        rings=rings, tstate=tstate, disp_time=disp_time,
+        work_time=work_time, dsa_time=dsa_time, lock_time=lock_time,
+        map_time=map_time, clock=clock, flash=flash, bufs=bufs,
+        req_counter=state.req_counter + jnp.int32(n), metrics=metrics,
+    )
+
+
+def run(
+    state: EngineState,
+    cfg: EngineConfig,
+    ssd: SSDConfig,
+    wl: WorkloadConfig,
+    plat: PlatformModel,
+    rounds: int,
+) -> EngineState:
+    """Run ``rounds`` engine rounds under jit (lax.scan over rounds)."""
+
+    def body(s, _):
+        return engine_round(s, cfg, ssd, wl, plat), None
+
+    out, _ = jax.lax.scan(body, state, None, length=rounds)
+    return out
+
+
+def make_runner(
+    cfg: EngineConfig, ssd: SSDConfig, wl: WorkloadConfig, plat: PlatformModel,
+    rounds: int,
+):
+    """jit-compiled engine runner with static configs baked in."""
+
+    @jax.jit
+    def _run(state: EngineState) -> EngineState:
+        return run(state, cfg, ssd, wl, plat, rounds)
+
+    return _run
+
+
+def simulate(
+    cfg: EngineConfig,
+    ssd: SSDConfig,
+    wl: WorkloadConfig,
+    plat: PlatformModel | None = None,
+    rounds: int = 64,
+    block_words: int = 16,
+) -> EngineState:
+    """Convenience: init + run. Returns the final state."""
+    plat = plat or PlatformModel()
+    state = init_state(cfg, ssd, wl, block_words)
+    return make_runner(cfg, ssd, wl, plat, rounds)(state)

@@ -1,0 +1,91 @@
+"""Segmented scan primitives shared by the timing model and the frontend.
+
+These are the vectorized building blocks that make "aggregated" processing
+exact: a segmented inclusive prefix-max (associative, runs in O(log N) depth
+via ``lax.associative_scan``) and within-segment rank computation via a
+stable sort.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -3e38  # python float: jnp module constants leak into jaxprs
+
+
+def segmented_prefix_max(values: jax.Array, heads: jax.Array) -> jax.Array:
+    """Inclusive prefix max restarting at each ``heads[i]==True``."""
+
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb, vb, jnp.maximum(va, vb))
+
+    _, out = jax.lax.associative_scan(combine, (heads, values))
+    return out
+
+
+def sort_by_segment(
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stable sort by integer segment key.
+
+    Returns (order, heads, rank): ``order`` permutes inputs to segment-major
+    layout preserving original order within segments; ``heads`` flags segment
+    starts in sorted layout; ``rank`` is the within-segment position.
+    """
+    n = key.shape[0]
+    order = jnp.argsort(key, stable=True)
+    s_key = key[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    heads = jnp.concatenate([jnp.ones((1,), bool), s_key[1:] != s_key[:-1]])
+    seg_start = segmented_prefix_max(
+        jnp.where(heads, idx, 0).astype(jnp.float32), heads
+    ).astype(jnp.int32)
+    rank = idx - seg_start
+    return order, heads, rank
+
+
+def segment_rank(key: jax.Array) -> jax.Array:
+    """Within-segment rank in *original* order (count of earlier equal keys)."""
+    n = key.shape[0]
+    order, _, rank = sort_by_segment(key)
+    out = jnp.zeros((n,), jnp.int32).at[order].set(rank)
+    return out
+
+
+def queueing_scan(
+    ready: jax.Array,
+    cost: jax.Array,
+    heads: jax.Array,
+    seed: jax.Array,
+) -> jax.Array:
+    """Exact single-server queueing recurrence, vectorized per segment.
+
+    Solves ``busy_j = max(ready_j, busy_{j-1}) + cost_j`` (with
+    ``busy_{-1} = seed`` at each segment head) via function composition in the
+    (max,+) semiring: each element is the map ``x -> max(a_j, x + c_j)`` with
+    ``a_j = ready_j + cost_j``; composition
+    ``(a2,c2) ∘ (a1,c1) = (max(a2, a1 + c2), c1 + c2)`` is associative, so an
+    ``associative_scan`` yields every ``busy_j`` in O(log N) depth. This is
+    the aggregated-update closed form generalized to heterogeneous service
+    costs (used by the worker/DSA backend model); the timing model is the
+    constant-cost special case.
+
+    ``seed`` must be broadcastable to per-element values (pass e.g.
+    ``seed_per_element`` gathered for each row's segment).
+    """
+    a = ready + cost
+    a = jnp.where(heads, jnp.maximum(a, seed + cost), a)
+
+    def combine(l, r):
+        fl, al, cl = l
+        fr, ar, cr = r
+        a_ = jnp.where(fr, ar, jnp.maximum(ar, al + cr))
+        c_ = jnp.where(fr, cr, cl + cr)
+        return fl | fr, a_, c_
+
+    _, busy, _ = jax.lax.associative_scan(combine, (heads, a, cost))
+    return busy

@@ -1,0 +1,218 @@
+"""NVMeVirt simple timing model + SwarmIO aggregated batch updates.
+
+Semantics (paper Fig. 2b), for request i in dispatch order on instance k:
+
+    start_i      = max(arrival_i, busy[k])
+    busy[k]      = start_i + Sched
+    completion_i = max(start_i + Sched, arrival_i + L_min)
+
+Instance assignment follows the paper's §IV-D wording — "requests are
+assigned to scheduling instances in the order in which they appear in the
+SQ" — i.e. a round-robin cursor over the K instances (``routing=
+"round_robin"``). An ``lba_hash`` policy (channel striping by address) is
+kept for sensitivity studies; it exposes hash-imbalance idle time.
+
+``per_request_update`` executes the recurrence literally with a sequential
+``lax.scan`` (the NVMeVirt baseline). ``aggregated_update`` computes the
+*identical* result for a whole fetched batch with one segmented (max,+)
+prefix scan and a single scatter into the shared state — the paper's "enter
+the critical section once per set of requests", made exact by the closed
+form
+
+    b_j = max(arrival_j - j*Sched, b_{j-1}),  b_{-1} = busy[k]
+    start_j = b_j + j*Sched,   busy'[k] = b_last + m_k*Sched
+
+where j is the within-instance rank inside the batch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segops import NEG, segmented_prefix_max, sort_by_segment
+from repro.core.types import RequestBatch, SSDConfig, TimingState
+
+
+def lba_hash_instance(lba: jax.Array, n_instances: int) -> jax.Array:
+    """Map a request to an instance by address (channel striping)."""
+    h = (lba.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_instances)).astype(jnp.int32)
+
+
+def assign_rr(
+    rr: jax.Array, valid: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Round-robin instance assignment in dispatch order.
+
+    Invalid rows receive an arbitrary instance (masked downstream) and do
+    not advance the cursor. Returns (inst, rr')."""
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    inst = (rr + jnp.maximum(pos, 0)) % k
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    return inst.astype(jnp.int32), (rr + n_valid) % k
+
+
+def assign_instances(
+    state: TimingState, batch: RequestBatch, ssd: SSDConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Instance per request (dispatch order) + advanced round-robin cursor."""
+    k = ssd.n_instances
+    if ssd.routing == "lba_hash":
+        return lba_hash_instance(batch.lba, k), state.rr
+    return assign_rr(state.rr, batch.valid, k)
+
+
+# ---------------------------------------------------------------------------
+# Baseline: per-request sequential updates (NVMeVirt).
+# ---------------------------------------------------------------------------
+
+def per_request_update(
+    state: TimingState, batch: RequestBatch, ssd: SSDConfig
+) -> Tuple[TimingState, jax.Array]:
+    """Sequential per-request timing updates. Returns (state', completion)."""
+    sched = jnp.float32(ssd.sched_us)
+    lmin = jnp.float32(ssd.l_min_us)
+    inst, rr = assign_instances(state, batch, ssd)
+
+    def step(busy, x):
+        arrival, k, valid = x
+        start = jnp.maximum(arrival, busy[k])
+        new_b = jnp.where(valid, start + sched, busy[k])
+        busy = busy.at[k].set(new_b)
+        comp = jnp.maximum(start + sched, arrival + lmin)
+        return busy, jnp.where(valid, comp, jnp.float32(0))
+
+    busy, completion = jax.lax.scan(
+        step, state.busy_until, (batch.arrival, inst, batch.valid)
+    )
+    return TimingState(busy, rr), completion
+
+
+# ---------------------------------------------------------------------------
+# SwarmIO: aggregated batch updates via segmented (max,+) scan.
+# ---------------------------------------------------------------------------
+
+def aggregated_batch_times(
+    busy_init: jax.Array,
+    arrival: jax.Array,
+    inst: jax.Array,
+    valid: jax.Array,
+    ssd: SSDConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized exact batch timing. Returns (completion, new_busy).
+
+    ``busy_init`` is the (K,) shared busy-until state; requests are taken in
+    array order (the dispatch order). Invalid rows do not affect anything.
+    """
+    k = ssd.n_instances
+    sched = jnp.float32(ssd.sched_us)
+    lmin = jnp.float32(ssd.l_min_us)
+
+    # Sort by (instance, original order) — stable sort of instance suffices.
+    inst_sorted_key = jnp.where(valid, inst, jnp.int32(k))  # invalid last
+    order, head, rank = sort_by_segment(inst_sorted_key)
+    s_inst = inst_sorted_key[order]
+    s_arr = arrival[order]
+    s_valid = valid[order]
+
+    # Seed each segment with its instance's current busy time: emulate the
+    # b_{-1} = busy[k] seed by max-ing the head element against busy[k].
+    safe_inst = jnp.clip(s_inst, 0, k - 1)
+    seed = busy_init[safe_inst]
+    a = s_arr - rank.astype(jnp.float32) * sched
+    a = jnp.where(head, jnp.maximum(a, seed), a)
+    a = jnp.where(s_valid, a, NEG)
+    # Invalid rows were sorted to a trailing pseudo-segment (key == K), so
+    # they cannot poison real segments; they contribute NEG regardless.
+    b = segmented_prefix_max(a, head)
+
+    start = b + rank.astype(jnp.float32) * sched
+    comp_sorted = jnp.maximum(start + sched, s_arr + lmin)
+    comp_sorted = jnp.where(s_valid, comp_sorted, jnp.float32(0))
+
+    # New busy state: last valid element of each real segment.
+    # busy'[k] = b_last + m_k * sched, where m_k = count of valid in segment.
+    seg_counts = jax.ops.segment_sum(
+        s_valid.astype(jnp.float32), safe_inst, num_segments=k
+    )
+    last_b = jax.ops.segment_max(
+        jnp.where(s_valid, b, NEG), safe_inst, num_segments=k
+    )
+    new_busy = jnp.where(
+        seg_counts > 0, last_b + seg_counts * sched, busy_init
+    )
+
+    # Unsort completions back to dispatch order.
+    completion = jnp.zeros_like(comp_sorted).at[order].set(comp_sorted)
+    return completion, new_busy
+
+
+def aggregated_update(
+    state: TimingState, batch: RequestBatch, ssd: SSDConfig
+) -> Tuple[TimingState, jax.Array]:
+    """SwarmIO aggregated timing update (single shared-state write)."""
+    inst, rr = assign_instances(state, batch, ssd)
+    completion, new_busy = aggregated_batch_times(
+        state.busy_until, batch.arrival, inst, batch.valid, ssd
+    )
+    return TimingState(new_busy, rr), completion
+
+
+# ---------------------------------------------------------------------------
+# Distributed global timing model (one collective per batch).
+# ---------------------------------------------------------------------------
+
+def distributed_aggregated_update(
+    state: TimingState,
+    batch: RequestBatch,
+    ssd: SSDConfig,
+    axis_name: str,
+) -> Tuple[TimingState, jax.Array]:
+    """Global timing model across service units inside ``shard_map``.
+
+    Each shard contributes its local batch; descriptors (arrival, valid) are
+    all-gathered once per batch (the paper's single critical section), every
+    shard runs the identical replicated segmented scan over the concatenated
+    global batch (dispatch order = unit-major, preserving per-SQ order), and
+    keeps its own slice of completions. ``state`` is replicated and evolves
+    identically on every shard.
+    """
+    ax = jax.lax.axis_index(axis_name)
+    n_units = jax.lax.axis_size(axis_name)
+    n_local = batch.arrival.shape[0]
+
+    g_arr = jax.lax.all_gather(batch.arrival, axis_name).reshape(-1)
+    g_lba = jax.lax.all_gather(batch.lba, axis_name).reshape(-1)
+    g_valid = jax.lax.all_gather(batch.valid, axis_name).reshape(-1)
+    g_batch = RequestBatch(
+        arrival=g_arr,
+        sq_id=jnp.zeros_like(g_lba), slot=jnp.zeros_like(g_lba),
+        opcode=jnp.zeros_like(g_lba), lba=g_lba,
+        nblocks=jnp.ones_like(g_lba), buf_id=jnp.zeros_like(g_lba),
+        req_id=jnp.zeros_like(g_lba), valid=g_valid,
+    )
+    inst, rr = assign_instances(state, g_batch, ssd)
+    completion, new_busy = aggregated_batch_times(
+        state.busy_until, g_arr, inst, g_valid, ssd
+    )
+    local = jax.lax.dynamic_slice_in_dim(completion, ax * n_local, n_local)
+    return TimingState(new_busy, rr), local
+
+
+def update(
+    state: TimingState,
+    batch: RequestBatch,
+    ssd: SSDConfig,
+    mode: str = "aggregated",
+    axis_name: str | None = None,
+) -> Tuple[TimingState, jax.Array]:
+    """Dispatch to the configured update mechanism."""
+    if axis_name is not None and mode == "aggregated":
+        return distributed_aggregated_update(state, batch, ssd, axis_name)
+    if mode == "per_request":
+        return per_request_update(state, batch, ssd)
+    if mode == "aggregated":
+        return aggregated_update(state, batch, ssd)
+    raise ValueError(f"unknown timing mode: {mode}")

@@ -1,0 +1,188 @@
+"""Core data types for the SwarmIO-JAX emulation engine.
+
+Everything is struct-of-arrays so batches of requests stay vectorizable
+inside jit. Virtual time is float32 *microseconds* (resolution ~0.06 us at
+1e6 us — far below the 50 us device latencies we model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# NVMe-ish opcodes.
+OP_READ = 0
+OP_WRITE = 1
+
+# Sentinel for "no request" slots in fixed-capacity batches.
+INVALID = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RequestBatch:
+    """A fixed-capacity batch of I/O requests (struct of arrays).
+
+    ``valid`` masks live entries; invalid rows carry arbitrary payloads and
+    must never influence timing state or the data path.
+    """
+
+    arrival: jax.Array   # (N,) f32 — virtual submission time (us)
+    sq_id: jax.Array     # (N,) i32 — submission queue the request came from
+    slot: jax.Array      # (N,) i32 — slot index within the SQ ring
+    opcode: jax.Array    # (N,) i32 — OP_READ / OP_WRITE
+    lba: jax.Array       # (N,) i32 — logical block address
+    nblocks: jax.Array   # (N,) i32 — blocks per request (>=1)
+    buf_id: jax.Array    # (N,) i32 — destination/source I/O buffer row
+    req_id: jax.Array    # (N,) i32 — globally unique request id
+    valid: jax.Array     # (N,) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.arrival.shape[0]
+
+    @staticmethod
+    def empty(n: int) -> "RequestBatch":
+        z = jnp.zeros((n,), jnp.int32)
+        return RequestBatch(
+            arrival=jnp.zeros((n,), jnp.float32),
+            sq_id=z, slot=z, opcode=z, lba=z,
+            nblocks=jnp.ones((n,), jnp.int32),
+            buf_id=z, req_id=z,
+            valid=jnp.zeros((n,), bool),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    """Target-device model parameters (NVMeVirt simple timing model).
+
+    ``t_max_iops`` is the sustained random-read ceiling; ``l_min_us`` the
+    latency floor. ``n_instances`` abstracts flash channels/controllers: each
+    request occupies one instance for ``sched_us = n_instances / t_max_iops``
+    seconds of virtual time, so aggregate throughput saturates at t_max.
+    """
+
+    name: str = "solidigm-d7-ps1010"
+    t_max_iops: float = 2.47e6
+    l_min_us: float = 50.0
+    n_instances: int = 64
+    block_bytes: int = 512
+    num_blocks: int = 1 << 20          # emulated flash capacity in blocks
+    # Request->instance assignment. "round_robin" follows NVMeVirt/SwarmIO
+    # semantics (paper §IV-D: "requests are assigned to scheduling instances
+    # in the order in which they appear in the SQ") and perfectly load-
+    # balances; "lba_hash" models channel striping by address (exposes
+    # hash-imbalance idle time, used in sensitivity studies).
+    routing: str = "round_robin"
+
+    @property
+    def sched_us(self) -> float:
+        return self.n_instances / self.t_max_iops * 1e6
+
+    def replace(self, **kw: Any) -> "SSDConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformModel:
+    """Virtual-time cost model of the *emulator platform itself*.
+
+    The paper evaluates two things: how faithful the emulated SSD timing is,
+    and whether the emulator machinery can keep up with the request stream.
+    We model the machinery costs explicitly in virtual time so the baseline's
+    pathologies (fetch serialization, per-request map/unmap, per-request lock
+    contention) reproduce the paper's Figs. 3-5/11/13/14, while wall-clock
+    benchmarks separately measure the engine's real throughput.
+    """
+
+    sqe_bytes: int = 64
+    # --- Fetch path (control path). Calibrated to the paper's Fig. 13
+    # ablation: CPU p2p reads of GPU-resident SQEs are uncached MMIO-class
+    # accesses (~10us per 64B line; coalesced streams amortize software but
+    # still pay per-line), while DSA fetch is a sync offload (issue+poll)
+    # whose cost is per-transaction, not per-line.
+    cpu_sqe_fetch_us: float = 10.3      # per-SQE CPU p2p read
+    cpu_coal_byte_us: float = 0.0268    # CPU coalesced p2p, per byte
+    cpu_coal_base_us: float = 0.30
+    dsa_sqe_fetch_us: float = 3.8       # sync DSA offload per 64B SQE
+    dsa_coal_base_us: float = 18.0      # sync DSA offload, bulk txn setup
+    # "host" transport models same-socket DRAM (fio CPU-centric baseline).
+    host_txn_base_us: float = 0.05
+    host_bytes_per_us: float = 80000.0
+    # --- Data path. p2p link for CPU-thread copies:
+    txn_base_us: float = 0.30
+    link_bytes_per_us: float = 32000.0  # ~32 GB/s effective p2p
+    # Baseline worker-side per-request map/unmap (memremap analogue, paper
+    # Fig. 4 — 98.8% of copy latency). Page-table updates take *global*
+    # kernel locks, so this cost is serialized across ALL workers.
+    per_req_map_us: float = 2.90
+    # DSA: per-descriptor issue cost, batch setup, engine bandwidth.
+    dsa_desc_issue_us: float = 0.020
+    dsa_batch_setup_us: float = 0.25
+    dsa_bytes_per_us: float = 30000.0  # per-DSA-engine copy bandwidth
+    # Timing-model shared-state critical section.
+    lock_per_req_us: float = 0.085
+    lock_per_batch_us: float = 0.40
+    # Dispatcher fixed cost to poll one SQ doorbell.
+    doorbell_poll_us: float = 0.02
+
+    def replace(self, **kw: Any) -> "PlatformModel":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """Closed-loop synthetic workload (fio / BaM analogue)."""
+
+    io_depth: int = 64                # outstanding requests per SQ
+    read_frac: float = 1.0            # fraction of reads
+    resubmit_delay_us: float = 1.0    # client think time after completion
+    seed: int = 0
+
+    def replace(self, **kw: Any) -> "WorkloadConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Emulation-engine shape parameters (compile-time constants)."""
+
+    num_sqs: int = 32                 # submission queues
+    sq_depth: int = 1024              # ring entries per SQ
+    fetch_width: int = 64             # coalesced fetch: max entries/SQ/round
+    num_units: int = 1                # service units (shards of SQs)
+    workers_per_unit: int = 1         # backend copy pipelines per unit
+    num_bufs: int = 1 << 15           # I/O buffer rows (block-sized)
+    mode: str = "aggregated"          # "aggregated" | "per_request"
+    frontend: str = "distributed"     # "distributed" | "centralized"
+    coalesced: bool = True            # coalesced fetching  (C in Fig. 13)
+    dsa_fetch: bool = True            # DSA-accelerated fetch (A in Fig. 13)
+    batched_datapath: bool = True     # DSA worker-side data path
+    timing_scope: str = "global"      # "global" | "local" (§IV-D ablation)
+    transport: str = "p2p"            # "p2p" (GPU-initiated) | "host"
+    poll_quantum_us: float = 10.0     # virtual-time window batched per round
+    emulate_data: bool = True         # perform functional block copies
+    use_pallas: bool = False          # Pallas kernels (TPU) vs jnp reference
+
+    def replace(self, **kw: Any) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TimingState:
+    """Shared timing-model state: per-scheduling-instance busy-until times
+    plus the round-robin assignment cursor (dispatch-order routing)."""
+
+    busy_until: jax.Array  # (K,) f32 virtual us
+    rr: jax.Array          # ()  i32 next instance for round-robin routing
+
+    @staticmethod
+    def init(n_instances: int) -> "TimingState":
+        return TimingState(
+            busy_until=jnp.zeros((n_instances,), jnp.float32),
+            rr=jnp.int32(0),
+        )

@@ -1,0 +1,78 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Used on the cross-pod (DCN-bound) gradient reduction: per-tensor-block
+scales, int8 payload (4x smaller than f32), and a residual carried to the
+next step so quantization error does not bias the optimizer (EF-SGD). The
+compression is applied *around* the all-reduce: local grads + residual are
+quantized, reduced in int8-space equivalent (here: dequantized sum — XLA
+reduces in the compressed domain when lowered with the custom collective
+schedule), and the residual keeps what quantization dropped.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), flat.shape[0]
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8. Returns (q (N/B, B) i8, scale (N/B, 1))."""
+    flat, _ = _pad_to_block(g)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, n: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_leaf(
+    g: jax.Array, residual: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """EF step for one tensor: returns (decompressed grad, new residual)."""
+    if g.ndim == 0 or g.size < BLOCK:
+        return g, residual  # tiny tensors ride uncompressed
+    target = g.astype(jnp.float32) + residual
+    q, s = quantize(target)
+    deq = dequantize(q, s, g.shape, g.size)
+    new_residual = target - deq
+    return deq.astype(g.dtype), new_residual
+
+
+def compress_tree(grads, residuals):
+    """Apply EF-int8 compression across a gradient pytree."""
+    out = jax.tree.map(compress_leaf, grads, residuals)
+    return jax.tree.transpose(
+        jax.tree.structure(grads), jax.tree.structure((0, 0)), out
+    )
+
+
+def init_residuals(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compressed_bytes(params) -> int:
+    """Wire bytes per step with int8 + per-block f32 scales."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if p.size < BLOCK:
+            total += p.size * 4
+        else:
+            nblk = -(-p.size // BLOCK)
+            total += p.size + nblk * 4
+    return total

@@ -1,0 +1,167 @@
+"""Blockwise (flash) attention Pallas TPU kernel.
+
+Supports the whole assigned-arch zoo: causal masking, GQA (kv-head
+grouping via BlockSpec index maps — KV blocks are never replicated in
+VMEM), sliding-window local attention (gemma2 / recurrentgemma), and
+attention-logit softcapping (gemma2).
+
+Grid = (B, Hq, num_q_blocks, num_kv_blocks); the kv dimension is innermost
+and executes sequentially on TPU, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch across kv steps. Fully-masked kv blocks
+are skipped with ``pl.when`` (the causal/window block-level bound), which
+is where the kernel beats a dense attention on long sequences.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3e38  # python float: jnp constants would be captured as kernel consts
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-level bounds: with causal masking, kv blocks strictly above the
+    # diagonal contribute nothing; with a local window, kv blocks entirely
+    # below (row - window) contribute nothing either.
+    q_start = iq * block_q
+    q_end = q_start + block_q - 1
+    k_start = ik * block_k
+    compute = jnp.bool_(True)
+    if causal:
+        compute &= k_start <= q_end
+    if window is not None:
+        compute &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(compute)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        cols = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[...]                                   # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "logit_softcap", "scale",
+        "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,   # (B, Hq, S, D)
+    k: jax.Array,   # (B, Hkv, S, D)
+    v: jax.Array,   # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, "Hq must be a multiple of Hkv (GQA)"
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nk = s // block_q, s // block_k
+    scale_v = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        causal=causal, window=window, softcap=logit_softcap,
+        scale=scale_v, block_q=block_q, block_k=block_k, num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h, iq, ik: (b_, h // group, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h, iq, ik: (b_, h // group, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

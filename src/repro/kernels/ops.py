@@ -1,0 +1,37 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else (this CPU
+container, unit tests) they execute in ``interpret=True`` mode, which runs
+the kernel body in Python against the same BlockSpec pipeline — the
+correctness contract tested against ref.py holds in both modes.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import block_gather as _bg
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import seg_scan as _ss
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def block_gather(flash, idx):
+    return _bg.block_gather(flash, idx, interpret=_interpret())
+
+
+def seg_scan(values, heads, *, chunk: int = 256):
+    return _ss.seg_scan(values, heads, chunk=chunk, interpret=_interpret())
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fa.flash_attention(q, k, v, **kw)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _da.decode_attention(q, k_cache, v_cache, lengths, **kw)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -3e38
+
+
+def block_gather_ref(flash: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather rows: out[i] = flash[idx[i]]."""
+    return flash[idx]
+
+
+def seg_scan_ref(values: jax.Array, heads: jax.Array) -> jax.Array:
+    """Segmented inclusive prefix max (restart where heads[i])."""
+    def step(carry, x):
+        h, v = x
+        run = jnp.where(h, v, jnp.maximum(carry, v))
+        return run, run
+
+    _, out = jax.lax.scan(step, NEG, (heads, values))
+    return out
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Hq, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,     # local attention window (tokens back)
+    logit_softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference multi-head attention with GQA / local / softcap options."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q * scale, kr).astype(jnp.float32)
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    logits = jnp.where(mask[None, None], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vr)
+
+
+def decode_attention_ref(
+    q: jax.Array,            # (B, Hq, D) — one new token per sequence
+    k_cache: jax.Array,      # (B, Hkv, S, D)
+    v_cache: jax.Array,      # (B, Hkv, S, D)
+    lengths: jax.Array,      # (B,) i32 valid cache lengths
+    *,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference single-token decode attention against a KV cache."""
+    b, hq, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k_cache, group, axis=1)
+    vr = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q * scale, kr).astype(jnp.float32)
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    pos = jnp.arange(s)[None, :]
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos > lengths[:, None] - 1 - window
+    logits = jnp.where(mask[:, None, :], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p.astype(v_cache.dtype), vr)

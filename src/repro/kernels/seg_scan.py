@@ -1,0 +1,79 @@
+"""Segmented prefix-max scan as a Pallas kernel (timing-model hot loop).
+
+The aggregated timing update reduces to a segmented inclusive prefix max
+(core/segops.py). This kernel computes it in chunks: each grid step loads a
+(1, C) tile, runs a Hillis-Steele doubling scan in-register (static python
+loop over log2(C) strides — vector selects/max only), and carries the
+running segment value across grid steps through a VMEM scratch cell.
+Grid steps execute in order on TPU, so the carry is well-defined.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3e38  # python float: jnp constants would be captured as kernel consts
+
+
+def _seg_scan_kernel(vals_ref, heads_ref, out_ref, carry_ref, *, chunk: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0, 0] = NEG
+
+    v = vals_ref[0, :]
+    f = heads_ref[0, :] != 0
+
+    # Hillis-Steele segmented scan: combine (f,v) pairs at doubling strides.
+    stride = 1
+    while stride < chunk:
+        # Shift right by `stride`; out-of-range positions combine with the
+        # identity (f=False, v=NEG).
+        idx = jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+        src = jnp.maximum(idx - stride, 0)
+        v_prev = jnp.where(idx >= stride, v[src], NEG)
+        f_prev = jnp.where(idx >= stride, f[src], False)
+        v = jnp.where(f, v, jnp.maximum(v, v_prev))
+        f = f | f_prev
+        stride *= 2
+
+    # Elements before the chunk's first head continue the carried segment.
+    no_head_yet = jnp.cumsum(heads_ref[0, :].astype(jnp.int32)) == 0
+    carry = carry_ref[0, 0]
+    v = jnp.where(no_head_yet, jnp.maximum(v, carry), v)
+
+    out_ref[0, :] = v
+    carry_ref[0, 0] = v[chunk - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def seg_scan(
+    values: jax.Array,  # (n,) f32
+    heads: jax.Array,   # (n,) bool — segment starts
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    n = values.shape[0]
+    pad = (-n) % chunk
+    v = jnp.pad(values, (0, pad), constant_values=NEG)
+    h = jnp.pad(heads.astype(jnp.int32), (0, pad), constant_values=1)
+    m = v.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_seg_scan_kernel, chunk=chunk),
+        grid=(m // chunk,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (0, i)),
+            pl.BlockSpec((1, chunk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(v[None, :], h[None, :])
+    return out[0, :n]

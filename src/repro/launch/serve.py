@@ -1,0 +1,53 @@
+"""Serving driver: batched prefill + decode with the SSD-backed KV tier.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --smoke \
+        [--iops 40e6] [--gen 16]
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--iops", type=float, default=2.5e6)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.core.types import EngineConfig, SSDConfig
+    from repro.models import transformer
+    from repro.serving import loop as serve_loop
+    from repro.serving.kv_tier import KVTierConfig
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt), 0, cfg.vocab
+    )
+    ssd = SSDConfig(
+        t_max_iops=args.iops,
+        n_instances=max(64, int(args.iops // 4e4)), num_blocks=1 << 14,
+    )
+    scfg = serve_loop.ServeConfig(
+        batch=args.batch, prompt_len=args.prompt, gen_tokens=args.gen,
+        tier=KVTierConfig(hot_window=16, page_tokens=8),
+    )
+    out = serve_loop.serve_with_kv_tier(cfg, params, tokens, scfg, ssd)
+    print(f"arch={cfg.name} generated {args.gen} tokens x {args.batch} seqs")
+    print(f"virtual tokens/s (SSD KV tier @ {args.iops/1e6:.1f} MIOPS): "
+          f"{out['tokens_per_s']:.1f}")
+    print(f"avg step {out['avg_step_us']:.1f} us "
+          f"(storage {out['avg_storage_us']:.1f} us, "
+          f"{out['blocks_per_step']} block faults/step, "
+          f"demand {out['iops_demand']/1e6:.2f} MIOPS)")
+    print(f"wall-clock generation: {out['wall_s']:.2f}s (CPU artifact)")
+
+
+if __name__ == "__main__":
+    main()

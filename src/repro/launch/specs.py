@@ -1,0 +1,166 @@
+"""ShapeDtypeStruct input specs + logical-axis trees for every
+(arch × shape) dry-run cell — weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed.sharding import REPLICATED
+from repro.models import transformer
+from repro.models.config import ATTN, ATTN_LOCAL, MLSTM, RGLRU, SLSTM, ModelConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs per shape kind.
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    """(specs, logical axes) for a training batch."""
+    spec: dict = {"labels": sds((batch, seq), jnp.int32)}
+    axes: dict = {"labels": ("batch", "seq")}
+    if cfg.modality == "none":
+        spec["tokens"] = sds((batch, seq), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    else:
+        spec["embeds"] = sds((batch, seq, cfg.d_model), cfg.dtype)
+        axes["embeds"] = ("batch", "seq", "embed")
+    if cfg.rope == "mrope":
+        spec["mrope_positions"] = sds((3, batch, seq), jnp.int32)
+        axes["mrope_positions"] = (None, "batch", "seq")
+    return spec, axes
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    spec: dict = {}
+    axes: dict = {}
+    if cfg.modality == "none":
+        spec["tokens"] = sds((batch, seq), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    else:
+        spec["embeds"] = sds((batch, seq, cfg.d_model), cfg.dtype)
+        axes["embeds"] = ("batch", "seq", "embed")
+    if cfg.rope == "mrope":
+        spec["mrope_positions"] = sds((3, batch, seq), jnp.int32)
+        axes["mrope_positions"] = (None, "batch", "seq")
+    return spec, axes
+
+
+def decode_batch_specs(cfg: ModelConfig, batch: int):
+    spec: dict = {"pos": sds((), jnp.int32)}
+    axes: dict = {"pos": REPLICATED}
+    if cfg.modality == "none":
+        spec["token"] = sds((batch,), jnp.int32)
+        axes["token"] = ("batch",)
+    else:
+        spec["token"] = sds((batch,), jnp.int32)  # token path unused by stubs
+        axes["token"] = ("batch",)
+        spec["embeds"] = sds((batch, cfg.d_model), cfg.dtype)
+        axes["embeds"] = ("batch", "embed")
+    return spec, axes
+
+
+# ---------------------------------------------------------------------------
+# Model params / optimizer / caches: abstract trees + axes.
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: transformer.init_model(jax.random.PRNGKey(0), cfg)
+    )
+
+
+def abstract_opt_state(params):
+    f32 = lambda p: sds(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": sds((), jnp.int32),
+    }
+
+
+def opt_axes(p_axes):
+    return {
+        "m": p_axes,
+        "v": p_axes,
+        "step": REPLICATED,
+    }
+
+
+def _block_cache_axes(cfg: ModelConfig, kind: str):
+    if kind in (ATTN, ATTN_LOCAL):
+        kv = ("batch", "kv_heads", "kv_seq", "head_dim")
+        return (kv, kv)
+    if kind == RGLRU:
+        return (("batch", "conv", "lru"), ("batch", "lru"))
+    if kind == MLSTM:
+        return (
+            ("batch", "conv", "heads"),
+            (
+                ("batch", "heads", "head_dim", "head_dim"),
+                ("batch", "heads", "head_dim"),
+                ("batch", "heads"),
+            ),
+        )
+    if kind == SLSTM:
+        one = ("batch", "heads", "head_dim")
+        return (one, one, one, one)
+    raise ValueError(kind)
+
+
+def _prepend(axes, name="layers"):
+    from repro.distributed.sharding import _is_axes
+
+    return jax.tree.map(lambda ax: (name, *ax), axes, is_leaf=_is_axes)
+
+
+def cache_axes(cfg: ModelConfig):
+    period = tuple(
+        _prepend(_block_cache_axes(cfg, kind)) for kind in cfg.pattern
+    )
+    rem = tuple(_block_cache_axes(cfg, kind) for kind in cfg.remainder)
+    return (period, rem)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, cache_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Assembled per-cell specs.
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape: str) -> dict[str, Any]:
+    """All abstract inputs + axes for one dry-run cell."""
+    cfg = configs.get_config(arch)
+    sh = configs.SHAPES[shape]
+    params = abstract_params(cfg)
+    p_axes = transformer.model_axes(cfg)
+    out: dict = {"cfg": cfg, "shape": sh, "params": params,
+                 "param_axes": p_axes}
+    if sh.kind == "train":
+        batch, axes = train_batch_specs(cfg, sh.global_batch, sh.seq_len)
+        out["opt_state"] = abstract_opt_state(params)
+        out["opt_axes"] = opt_axes(p_axes)
+        out["batch"] = batch
+        out["batch_axes"] = axes
+    elif sh.kind == "prefill":
+        batch, axes = prefill_batch_specs(cfg, sh.global_batch, sh.seq_len)
+        out["batch"] = batch
+        out["batch_axes"] = axes
+    else:  # decode
+        batch, axes = decode_batch_specs(cfg, sh.global_batch)
+        out["batch"] = batch
+        out["batch_axes"] = axes
+        out["caches"] = abstract_caches(cfg, sh.global_batch, sh.seq_len)
+        out["cache_axes"] = cache_axes(cfg)
+    return out

@@ -1,0 +1,132 @@
+"""Step builders (train / prefill / decode) + their sharding trees.
+
+These are the functions the dry-run lowers for every (arch × shape × mesh)
+cell and the real drivers (train.py / serve.py) execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.launch import specs as specs_lib
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+
+
+def build_train_step(cfg: ModelConfig, ocfg=None, grad_accum: int = 1
+                     ) -> Callable:
+    """grad_accum > 1 microbatches over the leading batch dim: activation
+    memory scales 1/grad_accum (the §Perf lever that fits the biggest
+    train cells in HBM) at the cost of repeating the per-microbatch weight
+    all-gathers."""
+    ocfg = ocfg or opt_lib.AdamWConfig()
+
+    def loss_of(p, mb):
+        return transformer.loss_fn(
+            p, cfg,
+            mb.get("tokens"), mb["labels"],
+            embeds=mb.get("embeds"),
+            mrope_positions=mb.get("mrope_positions"),
+        )
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss_val, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def split(x, axis=0):
+                return x.reshape(
+                    (grad_accum, x.shape[axis] // grad_accum)
+                    + x.shape[axis + 1:]
+                )
+
+            mbs = {
+                k: (
+                    jnp.moveaxis(
+                        v.reshape(v.shape[0], grad_accum, -1, v.shape[-1]),
+                        1, 0,
+                    )
+                    if k == "mrope_positions" else split(v)
+                )
+                for k, v in batch.items()
+            }
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss_val = lsum / grad_accum
+        params2, opt2, metrics = opt_lib.apply_updates(
+            params, grads, opt_state, ocfg
+        )
+        metrics["loss"] = loss_val
+        return params2, opt2, metrics
+
+    return step
+
+
+def build_prefill_step(cfg: ModelConfig, cache_len: int) -> Callable:
+    def step(params, batch):
+        return transformer.prefill(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            cache_len=cache_len,
+            mrope_positions=batch.get("mrope_positions"),
+        )
+
+    return step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, batch, caches):
+        return transformer.decode_step(
+            params, cfg, batch["token"], caches, batch["pos"],
+            embeds=batch.get("embeds"),
+        )
+
+    return step
+
+
+def cell_step_and_shardings(arch: str, shape: str, mesh,
+                            rules=shd.DEFAULT_RULES, grad_accum: int = 1):
+    """Assemble (fn, args_abstract, in_shardings, donate) for a cell."""
+    sp = specs_lib.input_specs(arch, shape)
+    cfg, sh = sp["cfg"], sp["shape"]
+    tree = functools.partial(shd.sharding_tree, rules=rules, mesh=mesh)
+
+    p_shard = shd.sharding_tree(sp["param_axes"], rules, mesh, sp["params"])
+    b_shard = shd.sharding_tree(sp["batch_axes"], rules, mesh, sp["batch"])
+
+    if sh.kind == "train":
+        fn = build_train_step(cfg, grad_accum=grad_accum)
+        o_shard = shd.sharding_tree(
+            sp["opt_axes"], rules, mesh, sp["opt_state"]
+        )
+        args = (sp["params"], sp["opt_state"], sp["batch"])
+        in_sh = (p_shard, o_shard, b_shard)
+        donate = (0, 1)
+    elif sh.kind == "prefill":
+        fn = build_prefill_step(cfg, cache_len=sh.seq_len)
+        args = (sp["params"], sp["batch"])
+        in_sh = (p_shard, b_shard)
+        donate = ()
+    else:
+        fn = build_decode_step(cfg)
+        c_shard = shd.sharding_tree(
+            sp["cache_axes"], rules, mesh, sp["caches"]
+        )
+        args = (sp["params"], sp["batch"], sp["caches"])
+        in_sh = (p_shard, b_shard, c_shard)
+        donate = (2,)
+    return fn, args, in_sh, donate, cfg, sh

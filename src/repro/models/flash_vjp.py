@@ -1,0 +1,169 @@
+"""Chunked flash attention with a custom VJP (pure jnp).
+
+Without this, jax AD saves every kv-chunk's online-softmax carry for the
+backward pass — O(S·nk) f32 residual traffic that dominated the dry-run
+roofline (and overflowed HBM). The custom VJP stores only (q, k, v, o, L)
+— L = m + log(l) per row — and recomputes attention probabilities
+chunk-by-chunk in the backward, the standard flash-attention backward:
+
+    D_i  = Σ_d dO_i · O_i
+    P_ij = exp(S_ij − L_i)
+    dV_j = Σ_i P_ij dO_i
+    dS   = P ⊙ (dO Vᵀ − D)
+    dQ_i = Σ_j dS_ij K_j · scale ;  dK_j = Σ_i dS_ij Q_i · scale
+
+Supports GQA grouping, causal masks, local windows, and logit softcap
+(dS_raw = dS_cap · (1 − (S_cap/cap)²)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -3e38  # python float: jnp module constants leak into jaxprs
+
+
+def _mask(rows, cols, causal, window):
+    m = jnp.ones((rows.shape[0], cols.shape[0]), bool)
+    if causal:
+        m &= cols[None, :] <= rows[:, None]
+    if window is not None:
+        m &= cols[None, :] > rows[:, None] - window
+    return m
+
+
+def _scores(qc, kc, scale, cap):
+    """Raw (pre-mask) capped scores. qc: (B,Hkv,G,Cq,D); kc: (B,Hkv,Ck,D)."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qc * scale, kc)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_jnp(
+    q, k, v, causal, window, cap, scale, q_chunk, kv_chunk
+):
+    out, _ = _fwd_impl(q, k, v, causal, window, cap, scale, q_chunk,
+                       kv_chunk)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, window, cap, scale, q_chunk, kv_chunk):
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    nq, nk = s // q_chunk, s // kv_chunk
+    kf = k.astype(jnp.float32).reshape(b, hkv, nk, kv_chunk, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, nk, kv_chunk, d)
+
+    def one_q(iq):
+        qc = jax.lax.dynamic_slice_in_dim(q, iq * q_chunk, q_chunk, 2)
+        qc = qc.reshape(b, hkv, g, q_chunk, d).astype(jnp.float32)
+        rows = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kc = kf[:, :, ik]
+            vc = vf[:, :, ik]
+            sc = _scores(qc, kc, scale, cap)
+            cols = ik * kv_chunk + jnp.arange(kv_chunk)
+            msk = _mask(rows, cols, causal, window)
+            sc = jnp.where(msk, sc, NEG)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+            p = jnp.where(msk, jnp.exp(sc - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), NEG)
+        l0 = jnp.zeros((b, hkv, g, q_chunk, 1))
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        o = acc / jnp.where(l > 0, l, 1.0)
+        lse = (m[..., 0] + jnp.log(jnp.maximum(l[..., 0], 1e-30)))
+        return o.reshape(b, hq, q_chunk, d), lse.reshape(b, hq, q_chunk)
+
+    if nq == 1:
+        o, lse = one_q(0)
+    else:
+        o, lse = jax.lax.map(one_q, jnp.arange(nq))
+        o = jnp.moveaxis(o, 0, 2).reshape(b, hq, s, d)
+        lse = jnp.moveaxis(lse, 0, 2).reshape(b, hq, s)
+    return o.astype(q.dtype), lse
+
+
+def _fwd_rule(q, k, v, causal, window, cap, scale, q_chunk, kv_chunk):
+    o, lse = _fwd_impl(q, k, v, causal, window, cap, scale, q_chunk,
+                       kv_chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd_rule(causal, window, cap, scale, q_chunk, kv_chunk, res, do):
+    q, k, v, o, lse = res
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    nq, nk = s // q_chunk, s // kv_chunk
+    dof = do.astype(jnp.float32)
+    dd = jnp.sum(dof * o.astype(jnp.float32), axis=-1)          # (B,Hq,S)
+    kf = k.astype(jnp.float32).reshape(b, hkv, nk, kv_chunk, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, nk, kv_chunk, d)
+
+    def q_step(carry, iq):
+        dk_acc, dv_acc = carry                   # (B,Hkv,S,D) f32
+        sl = lambda x, ax: jax.lax.dynamic_slice_in_dim(
+            x, iq * q_chunk, q_chunk, ax
+        )
+        qc = sl(q, 2).reshape(b, hkv, g, q_chunk, d).astype(jnp.float32)
+        doc = sl(dof, 2).reshape(b, hkv, g, q_chunk, d)
+        lsec = sl(lse, 2).reshape(b, hkv, g, q_chunk)
+        ddc = sl(dd, 2).reshape(b, hkv, g, q_chunk)
+        rows = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(inner, ik):
+            dk_acc, dv_acc, dq_c = inner
+            kc = kf[:, :, ik]
+            vc = vf[:, :, ik]
+            sc_raw = jnp.einsum("bhgqd,bhkd->bhgqk", qc * scale, kc)
+            if cap is not None:
+                t = jnp.tanh(sc_raw / cap)
+                sc = cap * t
+            else:
+                sc = sc_raw
+            cols = ik * kv_chunk + jnp.arange(kv_chunk)
+            msk = _mask(rows, cols, causal, window)
+            p = jnp.where(msk, jnp.exp(sc - lsec[..., None]), 0.0)
+            dv_c = jnp.einsum("bhgqk,bhgqd->bhkd", p, doc)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doc, vc)
+            ds = p * (dp - ddc[..., None])
+            if cap is not None:
+                ds = ds * (1.0 - t * t)
+            dq_c = dq_c + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kc) * scale
+            dk_c = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qc) * scale
+            upd = lambda acc, c: jax.lax.dynamic_update_slice_in_dim(
+                acc,
+                jax.lax.dynamic_slice_in_dim(acc, ik * kv_chunk, kv_chunk, 2)
+                + c,
+                ik * kv_chunk, 2,
+            )
+            return (upd(dk_acc, dk_c), upd(dv_acc, dv_c), dq_c), None
+
+        dq0 = jnp.zeros((b, hkv, g, q_chunk, d))
+        (dk_acc, dv_acc, dq_c), _ = jax.lax.scan(
+            kv_step, (dk_acc, dv_acc, dq0), jnp.arange(nk)
+        )
+        return (dk_acc, dv_acc), dq_c.reshape(b, hq, q_chunk, d)
+
+    dk0 = jnp.zeros((b, hkv, s, d))
+    dv0 = jnp.zeros((b, hkv, s, d))
+    (dk, dv), dq_chunks = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_chunks, 0, 2).reshape(b, hq, s, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_jnp.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,159 @@
+"""Shared layer primitives: norms, RoPE / M-RoPE, MLPs, softcap."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (+ multimodal M-RoPE).
+# ---------------------------------------------------------------------------
+
+def _rope_angles(
+    positions: jax.Array, d_head: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``positions`` (..., S) -> (..., S, d_head/2)."""
+    half = d_head // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jax.Array,          # (B, H, S, D)
+    positions: jax.Array,  # (B, S)
+    theta: float = 10000.0,
+) -> jax.Array:
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)  # (B, S, D/2)
+    cos = cos[:, None]
+    sin = sin[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,          # (B, H, S, D)
+    positions: jax.Array,  # (3, B, S) — temporal / height / width streams
+    sections: Sequence[int],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head-dim halves are split into
+    ``sections`` (in half-dim units), each rotated by its own position
+    stream."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # Build per-half-dim position: section j uses positions[j].
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )                                                     # (half,)
+    pos = positions.astype(jnp.float32)[sec_id]           # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                        # (B, S, half)
+    ang = pos * freq
+    cos = jnp.cos(ang)[:, None]
+    sin = jnp.sin(ang)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_apply(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    """Gated (SwiGLU/GeGLU) or plain two-layer MLP."""
+    if gated:
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        if "b_gate" in params:
+            g = g + params["b_gate"]
+            u = u + params["b_up"]
+        h = _act(act)(g) * u
+    else:
+        h = x @ params["w_up"]
+        if "b_up" in params:
+            h = h + params["b_up"]
+        h = _act(act)(h)
+    y = h @ params["w_down"]
+    if "b_down" in params:
+        y = y + params["b_down"]
+    return y
+
+
+def mlp_init(
+    key: jax.Array, d_model: int, d_ff: int, gated: bool, use_bias: bool,
+    dtype,
+) -> tuple[dict, dict]:
+    """Returns (params, logical axes tree)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+    a = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if gated:
+        p["w_gate"] = jax.random.normal(k1, (d_model, d_ff), dtype) * s_in
+        a["w_gate"] = ("embed", "mlp")
+    if use_bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        a["b_up"] = ("mlp",)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+        a["b_down"] = ("embed",)
+        if gated:
+            p["b_gate"] = jnp.zeros((d_ff,), dtype)
+            a["b_gate"] = ("mlp",)
+    return p, a
+
+
+def norm_init(kind: str, d: int, dtype) -> tuple[dict, dict]:
+    if kind == "rmsnorm":
+        return {"w": jnp.zeros((d,), dtype)}, {"w": ("embed",)}
+    return (
+        {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        {"w": ("embed",), "b": ("embed",)},
+    )
+
+
+def norm_apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["w"])
+    return layer_norm(x, params["w"], params["b"])

@@ -1,0 +1,52 @@
+"""Modality frontend STUBS (per assignment: backbone only).
+
+``[audio]`` (musicgen) and ``[vlm]`` (qwen2-vl) entries specify the
+transformer backbone; the EnCodec tokenizer / vision tower are stubs that
+provide precomputed frame/patch embeddings with the right shapes, plus the
+M-RoPE position-id streams for the VLM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def audio_frame_embeddings(
+    key: jax.Array, cfg: ModelConfig, batch: int, seq: int
+) -> jax.Array:
+    """EnCodec-token embeddings summed over 4 codebooks (upstream stub)."""
+    return jax.random.normal(
+        key, (batch, seq, cfg.d_model), jnp.dtype(cfg.dtype)
+    ) * 0.02
+
+
+def vision_patch_embeddings(
+    key: jax.Array, cfg: ModelConfig, batch: int, seq: int,
+    image_tokens: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Patch+text embedding stub and (3, B, S) M-RoPE position ids.
+
+    The first ``image_tokens`` positions emulate a dynamic-resolution image
+    grid (temporal id frozen, height/width ids raster-scanned); the rest are
+    text (all three streams advance together) — matching Qwen2-VL M-RoPE.
+    """
+    image_tokens = image_tokens if image_tokens is not None else seq // 4
+    side = max(int(image_tokens ** 0.5), 1)
+    emb = jax.random.normal(
+        key, (batch, seq, cfg.d_model), jnp.dtype(cfg.dtype)
+    ) * 0.02
+
+    idx = jnp.arange(seq)
+    is_img = idx < image_tokens
+    hh = jnp.where(is_img, idx // side, 0)
+    ww = jnp.where(is_img, idx % side, 0)
+    # Text positions continue after the image's max position.
+    text_pos = jnp.maximum(idx - image_tokens, 0) + side
+    t = jnp.where(is_img, 0, text_pos)
+    h = jnp.where(is_img, hh, text_pos)
+    w = jnp.where(is_img, ww, text_pos)
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)           # (3, S)
+    pos = jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+    return emb, pos

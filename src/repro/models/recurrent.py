@@ -1,0 +1,406 @@
+"""Recurrent sequence-mixing blocks: Griffin RG-LRU, xLSTM mLSTM / sLSTM.
+
+All three expose (init, apply over a sequence, one-step decode) so they plug
+into the same block assembly as attention. Parallel-over-time execution:
+
+* RG-LRU — diagonal gated linear recurrence ⇒ exact ``associative_scan``.
+* mLSTM  — matrix memory; chunkwise-parallel form (inter-chunk ``lax.scan``
+  carrying the stabilized (C, n, m) state, intra-chunk quadratic attention-
+  style computation) — the TPU-native adaptation of the paper's kernels.
+* sLSTM  — scalar memory with recurrent h-dependence ⇒ inherently
+  sequential ``lax.scan`` over time (stabilized exponential gating).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def checkpointed_scan(f, init, xs, segment: int):
+    """lax.scan with gradient checkpointing every ``segment`` steps.
+
+    The naive scan saves its carry at every step for the backward pass —
+    ruinous for long sequential recurrences (an sLSTM over 4k tokens saves
+    4k copies of (h, c, n, m)). Splitting into rematerialized segments
+    stores one carry per segment and recomputes inside.
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if n <= segment:
+        return jax.lax.scan(f, init, xs)
+    assert n % segment == 0, (n, segment)
+    xs_g = jax.tree.map(
+        lambda x: x.reshape(n // segment, segment, *x.shape[1:]), xs
+    )
+
+    @jax.checkpoint
+    def seg_body(carry, xg):
+        return jax.lax.scan(f, carry, xg)
+
+    carry, ys_g = jax.lax.scan(seg_body, init, xs_g)
+    ys = jax.tree.map(
+        lambda y: y.reshape(n, *y.shape[2:]), ys_g
+    )
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Griffin RG-LRU recurrent block.
+# ---------------------------------------------------------------------------
+
+def rglru_init(key: jax.Array, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    lru = d  # lru_width == d_model (recurrentgemma)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    p = {
+        "w_x": jax.random.normal(ks[0], (d, lru), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (d, lru), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, lru), dtype) * 0.1,
+        "conv_b": jnp.zeros((lru,), dtype),
+        "w_input_gate": jax.random.normal(ks[3], (lru, lru), dtype) * s * 0.1,
+        "w_rec_gate": jax.random.normal(ks[4], (lru, lru), dtype) * s * 0.1,
+        # Λ init so a = exp(-c·softplus(Λ)) spreads over (0.9, 0.999).
+        "lambda_": jax.random.uniform(
+            ks[5], (lru,), jnp.float32, -4.3, -1.0
+        ),
+        "w_out": jax.random.normal(ks[6], (lru, d), dtype) * lru ** -0.5,
+    }
+    a = {
+        "w_x": ("embed", "lru"), "w_gate": ("embed", "lru"),
+        "conv_w": ("conv", "lru"), "conv_b": ("lru",),
+        "w_input_gate": ("lru", "lru"), "w_rec_gate": ("lru", "lru"),
+        "lambda_": ("lru",), "w_out": ("lru", "embed"),
+    }
+    return p, a
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along time. x: (B, S, C), w: (W, C).
+
+    Returns (y, new_state) where state is the trailing (W-1) inputs."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i] for i in range(width)
+    ) + b
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return y, new_state
+
+
+def _rglru_core(
+    xc: jax.Array,       # (B, S, lru) conv output
+    params: dict,
+    cfg: ModelConfig,
+    h0: jax.Array | None,
+) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU recurrence via associative scan. Returns (h, h_last)."""
+    xf = xc.astype(jnp.float32)
+    gate_in = jax.nn.sigmoid(xf @ params["w_input_gate"].astype(jnp.float32))
+    gate_r = jax.nn.sigmoid(xf @ params["w_rec_gate"].astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lambda_"]) * gate_r
+    a = jnp.exp(log_a)                                     # (B, S, lru)
+    # multiplier sqrt(1 - a^2), computed stably.
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b_t = mult * gate_in * xf
+
+    if h0 is not None:
+        # Fold the carried state into the first step: b_0 += a_0 * h0.
+        b_t = b_t.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    return h.astype(xc.dtype), h[:, -1]
+
+
+def rglru_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig,
+    state: tuple | None = None,
+) -> tuple[jax.Array, tuple]:
+    """Griffin recurrent block over a sequence.
+
+    ``state`` = (conv_state (B, W-1, lru), h (B, lru)) for streaming decode.
+    Returns (y (B,S,D), new_state).
+    """
+    conv_state, h0 = state if state is not None else (None, None)
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    xr = x @ params["w_x"]
+    xc, conv_state = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    h, h_last = _rglru_core(xc, params, cfg, h0)
+    y = (h * gate) @ params["w_out"]
+    y = constrain(y, ("batch", "seq", "embed"))
+    return y, (conv_state, h_last)
+
+
+def rglru_decode(
+    params: dict, x: jax.Array, cfg: ModelConfig, state: tuple
+) -> tuple[jax.Array, tuple]:
+    """One-token step: identical math, S=1 (scan degenerates)."""
+    return rglru_apply(params, x, cfg, state)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    lru = cfg.d_model
+    return (
+        jnp.zeros((batch, cfg.conv_width - 1, lru), dtype),
+        jnp.zeros((batch, lru), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# xLSTM mLSTM block (matrix memory, chunkwise-parallel).
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: jax.Array, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    dh = cfg.n_heads * cfg.d_head
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    sh = dh ** -0.5
+    p = {
+        "w_up": jax.random.normal(ks[0], (d, dh), dtype) * s,     # mlstm path
+        "w_z": jax.random.normal(ks[1], (d, dh), dtype) * s,      # output gate
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, dh), dtype) * 0.1,
+        "conv_b": jnp.zeros((dh,), dtype),
+        "w_q": jax.random.normal(ks[3], (dh, dh), dtype) * sh,
+        "w_k": jax.random.normal(ks[4], (dh, dh), dtype) * sh,
+        "w_v": jax.random.normal(ks[5], (dh, dh), dtype) * sh,
+        "w_if": jax.random.normal(ks[6], (dh, 2 * cfg.n_heads), dtype) * sh,
+        "b_if": jnp.zeros((2 * cfg.n_heads,), jnp.float32),
+        "w_down": jax.random.normal(ks[7], (dh, d), dtype) * dh ** -0.5,
+        "skip_scale": jnp.ones((dh,), dtype),
+    }
+    a = {
+        "w_up": ("embed", "heads"), "w_z": ("embed", "heads"),
+        "conv_w": ("conv", "heads"), "conv_b": ("heads",),
+        "w_q": ("heads", "heads"), "w_k": ("heads", "heads"),
+        "w_v": ("heads", "heads"),
+        "w_if": ("heads", None), "b_if": (None,),
+        "w_down": ("heads", "embed"), "skip_scale": ("heads",),
+    }
+    return p, a
+
+
+def _mlstm_chunk_scan(
+    q, k, v,            # (B, H, S, dh)
+    logi, logf,         # (B, H, S) f32
+    chunk: int,
+    carry0=None,
+):
+    """Stabilized chunkwise-parallel mLSTM. Returns (h, carry)."""
+    b, hh, s, dk = q.shape
+    dv = v.shape[-1]
+    g = min(chunk, s)
+    assert s % g == 0
+    ng = s // g
+    NEG = -3e38
+
+    qs = q.reshape(b, hh, ng, g, dk).astype(jnp.float32) * dk ** -0.5
+    ks_ = k.reshape(b, hh, ng, g, dk).astype(jnp.float32)
+    vs = v.reshape(b, hh, ng, g, dv).astype(jnp.float32)
+    li = logi.reshape(b, hh, ng, g)
+    lf = logf.reshape(b, hh, ng, g)
+
+    if carry0 is None:
+        c0 = jnp.zeros((b, hh, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, hh, dk), jnp.float32)
+        m0 = jnp.full((b, hh), NEG)
+        carry0 = (c0, n0, m0)
+
+    idx = jnp.arange(g)
+    causal = idx[:, None] >= idx[None, :]                    # (g, g)
+
+    def step(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, lfc = xs                           # (B,H,g,·)
+        bcum = jnp.cumsum(lfc, axis=-1)                      # (B,H,g) incl.
+        btot = bcum[..., -1]
+        # Intra-chunk exponents: D[t,s] = b_t - b_s + i_s (s<=t).
+        expo = (
+            bcum[..., :, None] - bcum[..., None, :] + lic[..., None, :]
+        )
+        expo = jnp.where(causal, expo, NEG)
+        m_intra = jnp.max(expo, axis=-1)                     # (B,H,g)
+        m_inter = m_prev[..., None] + bcum                   # (B,H,g)
+        m_t = jnp.maximum(m_inter, m_intra)
+
+        inter_scale = jnp.exp(m_inter - m_t)                 # (B,H,g)
+        num_inter = jnp.einsum("bhgd,bhdv->bhgv", qc, c_prev)
+        num_inter = num_inter * inter_scale[..., None]
+        den_inter = jnp.einsum("bhgd,bhd->bhg", qc, n_prev) * inter_scale
+
+        w_intra = jnp.exp(expo - m_t[..., None])             # (B,H,g,g)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * w_intra
+        num = num_inter + jnp.einsum("bhts,bhsv->bhtv", scores, vs_ := vc)
+        den = den_inter + jnp.sum(scores, axis=-1)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # Carry update (stabilized).
+        m_new = jnp.maximum(
+            m_prev + btot,
+            jnp.max(btot[..., None] - bcum + lic, axis=-1),
+        )
+        decay = jnp.exp(m_prev + btot - m_new)               # (B,H)
+        kw = jnp.exp(btot[..., None] - bcum + lic - m_new[..., None])
+        c_new = c_prev * decay[..., None, None] + jnp.einsum(
+            "bhsd,bhsv->bhdv", kc * kw[..., None], vc
+        )
+        n_new = n_prev * decay[..., None] + jnp.sum(
+            kc * kw[..., None], axis=2
+        )
+        return (c_new, n_new, m_new), h
+
+    xs = (
+        jnp.moveaxis(qs, 2, 0), jnp.moveaxis(ks_, 2, 0),
+        jnp.moveaxis(vs, 2, 0), jnp.moveaxis(li, 2, 0),
+        jnp.moveaxis(lf, 2, 0),
+    )
+    # Checkpoint every 4 chunks: the (C, n, m) matrix-memory carry is the
+    # dominant residual; storing it 4x less often trades small recompute
+    # for ~4x less backward HBM traffic.
+    carry, hs = checkpointed_scan(step, carry0, xs, segment=4)
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, hh, s, dv)
+    return h, carry
+
+
+def mlstm_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig,
+    state: tuple | None = None, chunk: int = 256,
+) -> tuple[jax.Array, tuple]:
+    """xLSTM mLSTM block. state = (conv_state, (C, n, m))."""
+    b, s, d = x.shape
+    hh, dh = cfg.n_heads, cfg.d_head
+    conv_state, cell = state if state is not None else (None, None)
+
+    xin = x @ params["w_up"]
+    z = x @ params["w_z"]
+    xc, conv_state = _causal_conv(
+        xin, params["conv_w"], params["conv_b"], conv_state
+    )
+    xc = jax.nn.silu(xc)
+    q = (xc @ params["w_q"]).reshape(b, s, hh, dh).transpose(0, 2, 1, 3)
+    k = (xc @ params["w_k"]).reshape(b, s, hh, dh).transpose(0, 2, 1, 3)
+    v = (xin @ params["w_v"]).reshape(b, s, hh, dh).transpose(0, 2, 1, 3)
+    gates = xc.astype(jnp.float32) @ params["w_if"].astype(jnp.float32)
+    gates = gates + params["b_if"]
+    gates = gates.reshape(b, s, 2, hh).transpose(0, 3, 1, 2)   # (B,H,S,2)
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])
+
+    h, cell = _mlstm_chunk_scan(q, k, v, logi, logf, chunk, cell)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, hh * dh).astype(x.dtype)
+    h = h + params["skip_scale"] * xc                     # learnable skip
+    y = (h * jax.nn.silu(z)) @ params["w_down"]
+    return constrain(y, ("batch", "seq", "embed")), (conv_state, cell)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype):
+    hh, dh = cfg.n_heads, cfg.d_head
+    return (
+        jnp.zeros((batch, cfg.conv_width - 1, hh * dh), dtype),
+        (
+            jnp.zeros((batch, hh, dh, dh), jnp.float32),
+            jnp.zeros((batch, hh, dh), jnp.float32),
+            jnp.full((batch, hh), -3e38),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# xLSTM sLSTM block (scalar memory, sequential).
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: jax.Array, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    dh = cfg.n_heads * cfg.d_head
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    sh = dh ** -0.5
+    p = {
+        # Input projections for z, i, f, o (fused).
+        "w_in": jax.random.normal(ks[0], (d, 4 * dh), dtype) * s,
+        "b_in": jnp.zeros((4 * dh,), jnp.float32),
+        # Recurrent (block-diagonal per head) h -> gates.
+        "w_rec": jax.random.normal(
+            ks[1], (cfg.n_heads, cfg.d_head, 4 * cfg.d_head), jnp.float32
+        ) * cfg.d_head ** -0.5,
+        "norm": jnp.zeros((dh,), dtype),
+        "w_out": jax.random.normal(ks[2], (dh, d), dtype) * sh,
+    }
+    a = {
+        "w_in": ("embed", "heads"), "b_in": ("heads",),
+        "w_rec": (None, "head_dim", "head_dim"),
+        "norm": ("heads",), "w_out": ("heads", "embed"),
+    }
+    return p, a
+
+
+def slstm_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig,
+    state: tuple | None = None,
+) -> tuple[jax.Array, tuple]:
+    """Sequential sLSTM over time (stabilized exponential gating).
+
+    state = (h, c, n, m) each (B, H, dh) / (B, H, dh) / ... per head dims.
+    """
+    b, s, d = x.shape
+    hh, dh = cfg.n_heads, cfg.d_head
+    xin = (x @ params["w_in"]).astype(jnp.float32) + params["b_in"]
+    xin = xin.reshape(b, s, 4, hh, dh)
+
+    if state is None:
+        h0 = jnp.zeros((b, hh, dh), jnp.float32)
+        c0 = jnp.zeros((b, hh, dh), jnp.float32)
+        n0 = jnp.ones((b, hh, dh), jnp.float32)
+        m0 = jnp.zeros((b, hh, dh), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state
+
+    w_rec = params["w_rec"]  # (H, dh, 4*dh)
+
+    def step(carry, xt):
+        h, c, n, m = carry                       # (B, H, dh)
+        rec = jnp.einsum("bhd,hdk->bhk", h, w_rec).reshape(b, hh, 4, dh)
+        zt = jnp.tanh(xt[:, 0] + rec[:, :, 0])
+        it = xt[:, 1] + rec[:, :, 1]
+        ft = xt[:, 2] + rec[:, :, 2]
+        ot = jax.nn.sigmoid(xt[:, 3] + rec[:, :, 3])
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xt_seq = jnp.moveaxis(xin, 1, 0)                           # (S,B,4,H,dh)
+    # Strictly sequential over time — checkpoint every 64 steps so the
+    # backward stores S/64 carries instead of S.
+    (h, c, n, m), hs = checkpointed_scan(
+        step, (h0, c0, n0, m0), xt_seq, segment=64
+    )
+    out = jnp.moveaxis(hs, 0, 1).reshape(b, s, hh * dh)        # (B,S,dh*H)
+    out = layers.rms_norm(out.astype(x.dtype), params["norm"])
+    y = out @ params["w_out"]
+    return constrain(y, ("batch", "seq", "embed")), (h, c, n, m)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype):
+    hh, dh = cfg.n_heads, cfg.d_head
+    z = jnp.zeros((batch, hh, dh), jnp.float32)
+    return (z, z, jnp.ones_like(z), z)

@@ -1,0 +1,476 @@
+"""Block assembly + model forward / loss / prefill / decode.
+
+Layers are stacked *per pattern member* and scanned over periods
+(``lax.scan``), so the lowered HLO is O(pattern length), not O(n_layers) —
+a 64-layer model lowers one period body plus a loop. Heterogeneous
+patterns (gemma2 local/global, griffin rec/rec/attn, xLSTM 7×mLSTM+sLSTM)
+keep separate stacked params per member inside each scanned period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import layers, moe, recurrent
+from repro.models.config import (
+    ATTN, ATTN_LOCAL, MLSTM, RGLRU, SLSTM, ModelConfig,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single block.
+# ---------------------------------------------------------------------------
+
+def block_init(
+    key: jax.Array, cfg: ModelConfig, kind: str
+) -> tuple[dict, dict]:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    a: dict = {}
+    p["norm1"], a["norm1"] = layers.norm_init(cfg.norm, d, dt)
+    if kind in (ATTN, ATTN_LOCAL):
+        p["attn"], a["attn"] = attn.attn_init(ks[0], cfg, dt)
+        if not cfg.parallel_block:
+            p["norm2"], a["norm2"] = layers.norm_init(cfg.norm, d, dt)
+        if cfg.n_experts:
+            p["moe"], a["moe"] = moe.moe_init(ks[1], cfg, dt)
+        else:
+            p["mlp"], a["mlp"] = layers.mlp_init(
+                ks[1], d, cfg.d_ff, cfg.mlp_gated, cfg.use_bias, dt
+            )
+        if cfg.post_norms:
+            p["post1"], a["post1"] = layers.norm_init(cfg.norm, d, dt)
+            p["post2"], a["post2"] = layers.norm_init(cfg.norm, d, dt)
+    elif kind == RGLRU:
+        p["rec"], a["rec"] = recurrent.rglru_init(ks[0], cfg, dt)
+        p["norm2"], a["norm2"] = layers.norm_init(cfg.norm, d, dt)
+        p["mlp"], a["mlp"] = layers.mlp_init(
+            ks[1], d, cfg.d_ff, cfg.mlp_gated, cfg.use_bias, dt
+        )
+    elif kind == MLSTM:
+        p["cell"], a["cell"] = recurrent.mlstm_init(ks[0], cfg, dt)
+    elif kind == SLSTM:
+        p["cell"], a["cell"] = recurrent.slstm_init(ks[0], cfg, dt)
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def _mlp_branch(p: dict, x: jax.Array, cfg: ModelConfig):
+    if cfg.n_experts:
+        return moe.moe_apply(p["moe"], x, cfg)
+    return layers.mlp_apply(p["mlp"], x, cfg.mlp_act, cfg.mlp_gated), 0.0
+
+
+def block_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    positions: jax.Array,
+    mrope_positions: jax.Array | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Training/plain forward. Returns (x', aux)."""
+    aux = jnp.float32(0)
+    n1 = layers.norm_apply(cfg.norm, p["norm1"], x)
+    if kind in (ATTN, ATTN_LOCAL):
+        y = attn.attention_apply(p["attn"], n1, cfg, kind, positions,
+                                 mrope_positions)
+        if cfg.parallel_block:
+            m, aux_m = _mlp_branch(p, n1, cfg)
+            return x + y + m, aux + aux_m
+        if cfg.post_norms:
+            y = layers.norm_apply(cfg.norm, p["post1"], y)
+        x = x + y
+        n2 = layers.norm_apply(cfg.norm, p["norm2"], x)
+        m, aux_m = _mlp_branch(p, n2, cfg)
+        if cfg.post_norms:
+            m = layers.norm_apply(cfg.norm, p["post2"], m)
+        return x + m, aux + aux_m
+    if kind == RGLRU:
+        y, _ = recurrent.rglru_apply(p["rec"], n1, cfg)
+        x = x + y
+        n2 = layers.norm_apply(cfg.norm, p["norm2"], x)
+        m, _ = _mlp_branch(p, n2, cfg)
+        return x + m, aux
+    if kind == MLSTM:
+        y, _ = recurrent.mlstm_apply(p["cell"], n1, cfg)
+        return x + y, aux
+    if kind == SLSTM:
+        y, _ = recurrent.slstm_apply(p["cell"], n1, cfg)
+        return x + y, aux
+    raise ValueError(kind)
+
+
+def block_init_cache(
+    cfg: ModelConfig, kind: str, batch: int, cache_len: int
+) -> Any:
+    dt = _dtype(cfg)
+    if kind in (ATTN, ATTN_LOCAL):
+        s = cache_len if kind == ATTN else min(cache_len, cfg.window)
+        # Local layers could cap the cache at `window`; we keep full length
+        # for in-place position indexing simplicity (ring-buffer TODO).
+        s = cache_len
+        shape = (batch, cfg.n_kv_heads, s, cfg.d_head)
+        return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    if kind == RGLRU:
+        return recurrent.rglru_init_state(cfg, batch, dt)
+    if kind == MLSTM:
+        return recurrent.mlstm_init_state(cfg, batch, dt)
+    if kind == SLSTM:
+        return recurrent.slstm_init_state(cfg, batch, dt)
+    raise ValueError(kind)
+
+
+def block_prefill(
+    p, x, cfg: ModelConfig, kind, positions, mrope_positions, cache_len
+):
+    """Forward + produce this block's decode cache."""
+    aux = jnp.float32(0)
+    n1 = layers.norm_apply(cfg.norm, p["norm1"], x)
+    if kind in (ATTN, ATTN_LOCAL):
+        y, cache = attn.attention_prefill(
+            p["attn"], n1, cfg, kind, positions, mrope_positions, cache_len
+        )
+        if cfg.parallel_block:
+            m, _ = _mlp_branch(p, n1, cfg)
+            return x + y + m, cache
+        if cfg.post_norms:
+            y = layers.norm_apply(cfg.norm, p["post1"], y)
+        x = x + y
+        n2 = layers.norm_apply(cfg.norm, p["norm2"], x)
+        m, _ = _mlp_branch(p, n2, cfg)
+        if cfg.post_norms:
+            m = layers.norm_apply(cfg.norm, p["post2"], m)
+        return x + m, cache
+    if kind == RGLRU:
+        state0 = recurrent.rglru_init_state(cfg, x.shape[0], _dtype(cfg))
+        y, state = recurrent.rglru_apply(p["rec"], n1, cfg, state0)
+        x = x + y
+        n2 = layers.norm_apply(cfg.norm, p["norm2"], x)
+        m, _ = _mlp_branch(p, n2, cfg)
+        return x + m, state
+    if kind == MLSTM:
+        state0 = recurrent.mlstm_init_state(cfg, x.shape[0], _dtype(cfg))
+        y, state = recurrent.mlstm_apply(p["cell"], n1, cfg, state0)
+        return x + y, state
+    if kind == SLSTM:
+        state0 = recurrent.slstm_init_state(cfg, x.shape[0], _dtype(cfg))
+        y, state = recurrent.slstm_apply(p["cell"], n1, cfg, state0)
+        return x + y, state
+    raise ValueError(kind)
+
+
+def block_decode(
+    p, x, cache, pos, cfg: ModelConfig, kind, mrope_positions=None
+):
+    """One-token decode step. Returns (x', cache')."""
+    n1 = layers.norm_apply(cfg.norm, p["norm1"], x)
+    if kind in (ATTN, ATTN_LOCAL):
+        y, cache = attn.attention_decode(
+            p["attn"], n1, cache, pos, cfg, kind, mrope_positions
+        )
+        if cfg.parallel_block:
+            m, _ = _mlp_branch(p, n1, cfg)
+            return x + y + m, cache
+        if cfg.post_norms:
+            y = layers.norm_apply(cfg.norm, p["post1"], y)
+        x = x + y
+        n2 = layers.norm_apply(cfg.norm, p["norm2"], x)
+        m, _ = _mlp_branch(p, n2, cfg)
+        if cfg.post_norms:
+            m = layers.norm_apply(cfg.norm, p["post2"], m)
+        return x + m, cache
+    if kind == RGLRU:
+        y, cache = recurrent.rglru_apply(p["rec"], n1, cfg, cache)
+        x = x + y
+        n2 = layers.norm_apply(cfg.norm, p["norm2"], x)
+        m, _ = _mlp_branch(p, n2, cfg)
+        return x + m, cache
+    if kind == MLSTM:
+        y, cache2 = recurrent.mlstm_apply(p["cell"], n1, cfg, cache, chunk=1)
+        return x + y, cache2
+    if kind == SLSTM:
+        y, cache2 = recurrent.slstm_apply(p["cell"], n1, cfg, cache)
+        return x + y, cache2
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole model.
+# ---------------------------------------------------------------------------
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 4 + len(cfg.pattern) + len(cfg.remainder))
+    p: dict = {
+        "embed": jax.random.normal(
+            keys[0], (cfg.vocab, cfg.d_model), dt
+        ) * cfg.d_model ** -0.5,
+    }
+    # Stacked per pattern member, scanned over periods.
+    stacks = []
+    for j, kind in enumerate(cfg.pattern):
+        member_keys = jax.random.split(keys[1 + j], cfg.n_periods)
+        stacked = jax.vmap(
+            lambda k, kind=kind: block_init(k, cfg, kind)[0]
+        )(member_keys)
+        stacks.append(stacked)
+    p["periods"] = tuple(stacks)
+    # Remainder layers (unrolled).
+    rem = []
+    for j, kind in enumerate(cfg.remainder):
+        rem.append(block_init(keys[1 + len(cfg.pattern) + j], cfg, kind)[0])
+    p["remainder"] = tuple(rem)
+    p["final_norm"], _ = layers.norm_init(cfg.norm, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab), dt
+        ) * cfg.d_model ** -0.5
+    return p
+
+
+def block_axes(cfg: ModelConfig, kind: str) -> dict:
+    """Logical axes for one block, without allocating its params."""
+    got: dict = {}
+
+    def f(key):
+        p, a = block_init(key, cfg, kind)
+        got.update(a)
+        return p
+
+    jax.eval_shape(f, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return got
+
+
+def model_axes(cfg: ModelConfig) -> dict:
+    """Logical-axis tree mirroring init_model's structure."""
+    a: dict = {"embed": ("vocab", "embed")}
+    a["periods"] = tuple(
+        _prepend_layers(block_axes(cfg, kind)) for kind in cfg.pattern
+    )
+    a["remainder"] = tuple(block_axes(cfg, kind) for kind in cfg.remainder)
+    a["final_norm"] = {"w": ("embed",)} if cfg.norm == "rmsnorm" else {
+        "w": ("embed",), "b": ("embed",)
+    }
+    if not cfg.tie_embeddings:
+        a["lm_head"] = ("embed", "vocab")
+    return a
+
+
+def _prepend_layers(axes_tree):
+    return jax.tree.map(
+        lambda ax: ("layers", *ax),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _embed_tokens(p, cfg: ModelConfig, tokens=None, embeds=None):
+    if embeds is None:
+        h = p["embed"][tokens]
+    else:
+        h = embeds.astype(_dtype(cfg))
+    if cfg.embed_scale_by_dim:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return constrain(h, ("batch", "seq", "embed"))
+
+
+def forward(
+    p: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,      # (B, S) i32
+    embeds: jax.Array | None = None,      # (B, S, D) modality stub input
+    positions: jax.Array | None = None,   # (B, S)
+    mrope_positions: jax.Array | None = None,  # (3, B, S)
+) -> tuple[jax.Array, jax.Array]:
+    """Backbone forward. Returns (hidden (B,S,D), aux loss)."""
+    h = _embed_tokens(p, cfg, tokens, embeds)
+    b, s = h.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions, (3, b, s))
+
+    def period_fn(h, pp):
+        aux = jnp.float32(0)
+        for j, kind in enumerate(cfg.pattern):
+            h, a_ = block_apply(pp[j], h, cfg, kind, positions,
+                                mrope_positions)
+            aux = aux + a_
+        return h, aux
+
+    # nothing_saveable: the scan's AD already stores the carry (h) per
+    # period; the default checkpoint policy would store a second (f32)
+    # copy of it — measured 12.9 GB/device on command-r train_4k.
+    body = (
+        jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        if cfg.remat else period_fn
+    )
+    h, auxs = jax.lax.scan(lambda c, x: body(c, x), h, p["periods"])
+    aux = jnp.sum(auxs)
+    for j, kind in enumerate(cfg.remainder):
+        h, a_ = block_apply(p["remainder"][j], h, cfg, kind, positions,
+                            mrope_positions)
+        aux = aux + a_
+    h = layers.norm_apply(cfg.norm, p["final_norm"], h)
+    return h, aux
+
+
+def _head_matrix(p, cfg: ModelConfig):
+    return p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+def logits_fn(p, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    w = _head_matrix(p, cfg)
+    logits = (h @ w).astype(jnp.float32)
+    return layers.softcap(logits, cfg.final_softcap)
+
+
+def loss_fn(
+    p: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None,
+    labels: jax.Array,                    # (B, S) i32
+    embeds: jax.Array | None = None,
+    mrope_positions: jax.Array | None = None,
+) -> jax.Array:
+    """Mean next-token cross-entropy, vocab projection chunked over S so the
+    (B, S, V) logits tensor never materializes (critical at V=256k)."""
+    h, aux = forward(p, cfg, tokens=tokens, embeds=embeds,
+                     mrope_positions=mrope_positions)
+    b, s, d = h.shape
+    w = _head_matrix(p, cfg)
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    nc = s // c
+    hc = h.reshape(b, nc, c, d).swapaxes(0, 1)          # (nc, B, c, D)
+    yc = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    # checkpoint: without it the scan saves every chunk's (B,c,V) f32
+    # logits for the backward (4.2 GB/device at V=256k) — recompute them.
+    @jax.checkpoint
+    def chunk_step(tot, xs):
+        h_c, y_c = xs
+        logits = (h_c @ w).astype(jnp.float32)
+        logits = layers.softcap(logits, cfg.final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, y_c[..., None], axis=-1
+        )[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_step, jnp.float32(0), (hc, yc))
+    return total / (b * s) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode.
+# ---------------------------------------------------------------------------
+
+def prefill(
+    p: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,
+    embeds: jax.Array | None = None,
+    cache_len: int | None = None,
+    mrope_positions: jax.Array | None = None,
+):
+    """Run the prompt; returns (last-token logits, caches)."""
+    h = _embed_tokens(p, cfg, tokens, embeds)
+    b, s = h.shape[:2]
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions, (3, b, s))
+
+    def period_fn(h, pp):
+        caches = []
+        for j, kind in enumerate(cfg.pattern):
+            h, cache = block_prefill(pp[j], h, cfg, kind, positions,
+                                     mrope_positions, cache_len)
+            caches.append(cache)
+        return h, tuple(caches)
+
+    h, caches = jax.lax.scan(lambda c, x: period_fn(c, x), h, p["periods"])
+    rem_caches = []
+    for j, kind in enumerate(cfg.remainder):
+        h, cache = block_prefill(p["remainder"][j], h, cfg, kind, positions,
+                                 mrope_positions, cache_len)
+        rem_caches.append(cache)
+    h = layers.norm_apply(cfg.norm, p["final_norm"], h)
+    logits = logits_fn(p, cfg, h[:, -1:])
+    return logits[:, 0], (caches, tuple(rem_caches))
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    """Zero caches shaped for decode (used by the decode-only dry-run)."""
+    period = []
+    for kind in cfg.pattern:
+        one = block_init_cache(cfg, kind, batch, cache_len)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)), one
+        )
+        period.append(stacked)
+    rem = tuple(
+        block_init_cache(cfg, kind, batch, cache_len)
+        for kind in cfg.remainder
+    )
+    return tuple(period), rem
+
+
+def decode_step(
+    p: dict,
+    cfg: ModelConfig,
+    token: jax.Array,          # (B,) i32  (or (B, D) embeds for stubs)
+    caches,
+    pos: jax.Array,            # () i32
+    embeds: jax.Array | None = None,
+):
+    """One decode step. Returns (logits (B,V), caches')."""
+    if embeds is None:
+        h = p["embed"][token][:, None, :]
+    else:
+        h = embeds[:, None, :].astype(_dtype(cfg))
+    if cfg.embed_scale_by_dim:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    b = h.shape[0]
+    mrope = (
+        jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        if cfg.rope == "mrope" else None
+    )
+    period_caches, rem_caches = caches
+
+    def period_fn(h, xs):
+        pp, pc = xs
+        new_c = []
+        for j, kind in enumerate(cfg.pattern):
+            h, c = block_decode(pp[j], h, pc[j], pos, cfg, kind, mrope)
+            new_c.append(c)
+        return h, tuple(new_c)
+
+    h, new_period_caches = jax.lax.scan(
+        lambda c, x: period_fn(c, x), h, (p["periods"], period_caches)
+    )
+    new_rem = []
+    for j, kind in enumerate(cfg.remainder):
+        h, c = block_decode(p["remainder"][j], h, rem_caches[j], pos, cfg,
+                            kind, mrope)
+        new_rem.append(c)
+    h = layers.norm_apply(cfg.norm, p["final_norm"], h)
+    logits = logits_fn(p, cfg, h)[:, 0]
+    return logits, (new_period_caches, tuple(new_rem))

@@ -1,0 +1,125 @@
+"""Paged KV cache: vLLM-style page tables over a physical page pool.
+
+Pages are the unit both of HBM allocation and of SSD-tier I/O: a (page
+across kv-heads) flattens to a run of 512-byte blocks, so faulting a cold
+page from the emulated device is exactly the block-granular read stream
+the SwarmIO engine prices, and the data path is the DSA-analogue
+``block_gather`` kernel (one copy descriptor per page fragment).
+
+Functional layout:
+    pool:        (n_pages, page_tokens, kv_heads, head_dim)  x2 (k, v)
+    page_table:  (batch, max_pages) i32 — logical page -> physical page
+    lengths:     (batch,) i32
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    page_tokens: int = 16
+    n_pages: int = 256          # physical pool size
+    max_pages: int = 32         # logical pages per sequence
+    kv_heads: int = 4
+    head_dim: int = 32
+    dtype: str = "bfloat16"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    k_pool: jax.Array       # (P, T, H, D)
+    v_pool: jax.Array
+    page_table: jax.Array   # (B, max_pages) i32, -1 = unmapped
+    lengths: jax.Array      # (B,) i32
+    free_head: jax.Array    # () i32 — bump allocator over the pool
+
+
+def init_paged(cfg: PagedKVConfig, batch: int) -> PagedKV:
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_pages, cfg.page_tokens, cfg.kv_heads, cfg.head_dim)
+    return PagedKV(
+        k_pool=jnp.zeros(shape, dt),
+        v_pool=jnp.zeros(shape, dt),
+        page_table=jnp.full((batch, cfg.max_pages), -1, jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+        free_head=jnp.int32(0),
+    )
+
+
+def append_token(
+    kv: PagedKV, cfg: PagedKVConfig,
+    k_new: jax.Array,   # (B, H, D)
+    v_new: jax.Array,
+) -> PagedKV:
+    """Append one token per sequence, allocating pages on boundaries."""
+    b = k_new.shape[0]
+    pos = kv.lengths                                  # (B,)
+    lpage = pos // cfg.page_tokens
+    offset = pos % cfg.page_tokens
+    needs_page = offset == 0
+    # Bump-allocate physical pages for sequences crossing a boundary.
+    alloc_rank = jnp.cumsum(needs_page.astype(jnp.int32)) - 1
+    new_phys = kv.free_head + alloc_rank
+    table = kv.page_table.at[jnp.arange(b), lpage].set(
+        jnp.where(needs_page, new_phys, kv.page_table[jnp.arange(b), lpage])
+    )
+    phys = table[jnp.arange(b), lpage]                # (B,)
+    k_pool = kv.k_pool.at[phys, offset].set(k_new)
+    v_pool = kv.v_pool.at[phys, offset].set(v_new)
+    return PagedKV(
+        k_pool=k_pool, v_pool=v_pool, page_table=table,
+        lengths=kv.lengths + 1,
+        free_head=kv.free_head + jnp.sum(needs_page.astype(jnp.int32)),
+    )
+
+
+def gather_dense(
+    kv: PagedKV, cfg: PagedKVConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Materialize dense (B, H, S_max, D) caches from the page tables
+    (the reference path; attention can also consume pages directly)."""
+    b = kv.page_table.shape[0]
+    phys = jnp.maximum(kv.page_table, 0)              # (B, MP)
+    k = kv.k_pool[phys]                               # (B, MP, T, H, D)
+    v = kv.v_pool[phys]
+    mp, t = cfg.max_pages, cfg.page_tokens
+    mask = (kv.page_table >= 0)[:, :, None, None, None]
+    k = jnp.where(mask, k, 0).reshape(b, mp * t, cfg.kv_heads, cfg.head_dim)
+    v = jnp.where(mask, v, 0).reshape(b, mp * t, cfg.kv_heads, cfg.head_dim)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def page_blocks(cfg: PagedKVConfig, block_bytes: int = 512) -> int:
+    """512-byte device blocks per page (both K and V fragments)."""
+    dt = jnp.dtype(cfg.dtype)
+    page_bytes = 2 * cfg.page_tokens * cfg.kv_heads * cfg.head_dim * dt.itemsize
+    return -(-page_bytes // block_bytes)
+
+
+def fault_pages_virtual_time(
+    kv: PagedKV, cfg: PagedKVConfig, storage, cstate, flash,
+    t_submit, hot_pages: int = 2,
+):
+    """Price the cold-page faults of one decode step through the SwarmIO
+    client: every mapped page older than ``hot_pages`` is a device read of
+    ``page_blocks`` blocks. Returns (client_state', completion_time)."""
+    b, mp = kv.page_table.shape
+    cur_page = kv.lengths // cfg.page_tokens
+    page_idx = jnp.arange(mp)[None, :]
+    cold = (kv.page_table >= 0) & (page_idx < cur_page[:, None] - hot_pages)
+    nb = page_blocks(cfg)
+    lba = (
+        jnp.maximum(kv.page_table, 0)[..., None] * nb
+        + jnp.arange(nb)[None, None, :]
+    ).reshape(-1) % flash.shape[0]
+    valid = jnp.repeat(cold.reshape(-1), nb)
+    cstate, _, done = storage.read(
+        cstate, flash, lba.astype(jnp.int32), t_submit, valid
+    )
+    return cstate, jnp.max(done)

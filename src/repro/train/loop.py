@@ -1,0 +1,171 @@
+"""Training loop: grad accumulation, compressed cross-replica reduction,
+checkpoint/restart, failure injection, and straggler policy.
+
+The loop is deliberately host-driven (one jit'd ``train_step`` per
+iteration) so the fault-tolerance machinery — heartbeats, checkpoint
+cadence, failure injection, deterministic data re-dispatch — lives in
+ordinary Python around a pure step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.distributed import compression
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    batch: int = 8
+    seq: int = 128
+    steps: int = 20
+    grad_accum: int = 1
+    ckpt_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    compress_grads: bool = False
+    seed: int = 0
+    opt: opt_lib.AdamWConfig = opt_lib.AdamWConfig()
+
+
+def make_train_step(
+    cfg: ModelConfig, tcfg: TrainConfig
+) -> Callable:
+    """Build the jit'd (params, opt_state, residuals, batch) -> ... step."""
+
+    def loss_of(params, tokens, labels):
+        return transformer.loss_fn(params, cfg, tokens, labels)
+
+    def step(params, opt_state, residuals, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        if tcfg.grad_accum > 1:
+            b = tokens.shape[0] // tcfg.grad_accum
+            tk = tokens.reshape(tcfg.grad_accum, b, -1)
+            lb = labels.reshape(tcfg.grad_accum, b, -1)
+
+            def acc_step(carry, xs):
+                gsum, lsum = carry
+                t, l = xs
+                loss, g = jax.value_and_grad(loss_of)(params, t, l)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0)), (tk, lb)
+            )
+            grads = jax.tree.map(
+                lambda g: g / tcfg.grad_accum, gsum
+            )
+            loss = lsum / tcfg.grad_accum
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels)
+
+        if tcfg.compress_grads:
+            grads, residuals = compression.compress_tree(grads, residuals)
+
+        params, opt_state, metrics = opt_lib.apply_updates(
+            params, grads, opt_state, tcfg.opt
+        )
+        metrics["loss"] = loss
+        return params, opt_state, residuals, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+@dataclasses.dataclass
+class TrainResult:
+    step: int
+    losses: list
+    restarts: int
+    wall_s: float
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    resume: bool = True,
+    fail_at: set | None = None,
+    log: Callable[[str], None] = lambda s: None,
+) -> TrainResult:
+    """Run the loop; ``fail_at`` injects a simulated crash at those steps
+    (the loop then restarts from the latest checkpoint, proving
+    checkpoint/restart end-to-end)."""
+    fail_at = set(fail_at or ())
+    step_fn = make_train_step(cfg, tcfg)
+    losses: list = []
+    restarts = 0
+    t0 = time.time()
+
+    def cold_start():
+        params = transformer.init_model(
+            jax.random.PRNGKey(tcfg.seed), cfg
+        )
+        opt_state = opt_lib.init_opt_state(params)
+        residuals = (
+            compression.init_residuals(params)
+            if tcfg.compress_grads else {}
+        )
+        return params, opt_state, residuals, 0
+
+    # Resume or cold start.
+    start = checkpoint.latest_step(tcfg.ckpt_dir) if resume else None
+    if start is not None:
+        params, opt_state, residuals, _ = cold_start()
+        state, _ = checkpoint.load(
+            tcfg.ckpt_dir, {"params": params, "opt": opt_state}, step=start
+        )
+        params, opt_state = state["params"], state["opt"]
+        step0 = start
+        log(f"resumed from step {start}")
+    else:
+        params, opt_state, residuals, step0 = cold_start()
+
+    prefetch = data_lib.Prefetcher(
+        tcfg.batch, tcfg.seq, cfg.vocab, tcfg.seed, start_idx=step0
+    )
+    try:
+        it = iter(prefetch)
+        step = step0
+        while step < tcfg.steps:
+            idx, batch = next(it)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if step in fail_at:
+                fail_at.discard(step)
+                restarts += 1
+                log(f"injected failure at step {step}; restarting")
+                prefetch.close()
+                return_inner = train(
+                    cfg, tcfg, resume=True, fail_at=fail_at, log=log
+                )
+                return TrainResult(
+                    return_inner.step,
+                    losses + return_inner.losses,
+                    restarts + return_inner.restarts,
+                    time.time() - t0,
+                )
+            params, opt_state, residuals, metrics = step_fn(
+                params, opt_state, residuals, batch
+            )
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if step % tcfg.ckpt_every == 0 or step == tcfg.steps:
+                checkpoint.save(
+                    tcfg.ckpt_dir, step,
+                    {"params": params, "opt": opt_state},
+                )
+                checkpoint.gc_old(tcfg.ckpt_dir, keep=2)
+                log(f"step {step} ckpt saved loss={losses[-1]:.4f}")
+    finally:
+        prefetch.close()
+    return TrainResult(step, losses, restarts, time.time() - t0)

@@ -1,0 +1,47 @@
+"""Dry-run pipeline integration: one real cell lowers+compiles on the
+production mesh in a subprocess (the 512-virtual-device env must be set
+before jax initializes, hence the subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("starcoder2-3b", "train_4k")])
+def test_dryrun_cell_compiles(arch, shape, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--mesh", "single",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__single.json"))
+    assert rec["status"] == "ok", rec
+    assert rec["chips"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["collective_bytes_per_device"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    # Useful-compute sanity: within (0, 1.5] of the 6*N*D analytic bound.
+    assert 0.05 < rec["useful_compute_ratio"] <= 1.5
+
+
+def test_specs_build_for_every_cell():
+    """input_specs + abstract trees construct for all 40 assigned cells
+    (no device allocation, no mesh needed)."""
+    from repro import configs
+    from repro.launch import specs as specs_lib
+
+    for arch, shape in configs.cells():
+        if not configs.runnable(arch, shape):
+            continue
+        sp = specs_lib.input_specs(arch, shape)
+        assert "params" in sp and "batch" in sp
+        n_leaves = len(__import__("jax").tree.leaves(sp["params"]))
+        assert n_leaves > 3, (arch, shape)

@@ -1,0 +1,65 @@
+"""Paged KV cache: equivalence with dense caches + SSD-tier pricing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import ClientState, StorageClient
+from repro.core.types import EngineConfig, SSDConfig
+from repro.serving import paged_kv as pk
+
+
+def test_append_and_gather_matches_dense():
+    cfg = pk.PagedKVConfig(page_tokens=4, n_pages=64, max_pages=8,
+                           kv_heads=2, head_dim=8, dtype="float32")
+    b, steps = 3, 13
+    kv = pk.init_paged(cfg, b)
+    ks = jax.random.split(jax.random.PRNGKey(0), steps * 2)
+    dense_k = np.zeros((b, 2, cfg.max_pages * 4, 8), np.float32)
+    dense_v = np.zeros_like(dense_k)
+    append = jax.jit(lambda kv, k, v: pk.append_token(kv, cfg, k, v))
+    for t in range(steps):
+        k_new = jax.random.normal(ks[2 * t], (b, 2, 8))
+        v_new = jax.random.normal(ks[2 * t + 1], (b, 2, 8))
+        kv = append(kv, k_new, v_new)
+        dense_k[:, :, t] = np.asarray(k_new)
+        dense_v[:, :, t] = np.asarray(v_new)
+    gk, gv = pk.gather_dense(kv, cfg)
+    np.testing.assert_allclose(np.asarray(gk), dense_k, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gv), dense_v, rtol=1e-6)
+    assert int(kv.free_head) == b * ((steps + 3) // 4)
+
+
+def test_no_cross_sequence_page_sharing():
+    cfg = pk.PagedKVConfig(page_tokens=2, n_pages=32, max_pages=4,
+                           kv_heads=1, head_dim=4, dtype="float32")
+    kv = pk.init_paged(cfg, 2)
+    for t in range(4):
+        k = jnp.stack([jnp.full((1, 4), 10 + t), jnp.full((1, 4), 20 + t)])
+        kv = pk.append_token(kv, cfg, k, k)
+    table = np.asarray(kv.page_table)
+    used0 = set(table[0][table[0] >= 0].tolist())
+    used1 = set(table[1][table[1] >= 0].tolist())
+    assert used0.isdisjoint(used1)
+
+
+def test_cold_page_faults_priced_by_device():
+    cfg = pk.PagedKVConfig(page_tokens=4, n_pages=128, max_pages=16,
+                           kv_heads=2, head_dim=16, dtype="bfloat16")
+    kv = pk.init_paged(cfg, 4)
+    for t in range(40):
+        k = jnp.ones((4, 2, 16), jnp.bfloat16)
+        kv = pk.append_token(kv, cfg, k, k)
+    slow = SSDConfig(t_max_iops=1e5, l_min_us=50.0, n_instances=16,
+                     num_blocks=1 << 12)
+    fast = slow.replace(t_max_iops=4e6, n_instances=256)
+    ecfg = EngineConfig(num_units=4, fetch_width=64)
+    flash = jnp.ones((1 << 12, 64))
+    times = {}
+    for name, ssd in (("slow", slow), ("fast", fast)):
+        client = StorageClient(ssd, ecfg)
+        cstate = ClientState.init(ssd, 4)
+        _, done = pk.fault_pages_virtual_time(
+            kv, cfg, client, cstate, flash, jnp.float32(0)
+        )
+        times[name] = float(done)
+    assert times["slow"] > 2 * times["fast"], times

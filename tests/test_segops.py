@@ -1,0 +1,106 @@
+"""Property tests for the segmented-scan primitives."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segops
+
+
+@st.composite
+def seg_arrays(draw):
+    n = draw(st.integers(1, 128))
+    vals = draw(
+        st.lists(
+            st.floats(min_value=-1e4, max_value=1e4, width=32, allow_subnormal=False),
+            min_size=n, max_size=n,
+        )
+    )
+    heads = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    heads[0] = True
+    return np.asarray(vals, np.float32), np.asarray(heads, bool)
+
+
+@hypothesis.given(seg_arrays())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_segmented_prefix_max(xs):
+    vals, heads = xs
+    out = np.asarray(
+        segops.segmented_prefix_max(jnp.asarray(vals), jnp.asarray(heads))
+    )
+    ref = np.empty_like(vals)
+    run = -np.inf
+    for i in range(len(vals)):
+        run = vals[i] if heads[i] else max(run, vals[i])
+        ref[i] = run
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+@hypothesis.given(
+    st.lists(st.integers(0, 7), min_size=1, max_size=200)
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_segment_rank(keys):
+    keys = np.asarray(keys, np.int32)
+    out = np.asarray(segops.segment_rank(jnp.asarray(keys)))
+    seen: dict[int, int] = {}
+    ref = np.empty_like(keys)
+    for i, k in enumerate(keys):
+        ref[i] = seen.get(int(k), 0)
+        seen[int(k)] = ref[i] + 1
+    np.testing.assert_array_equal(out, ref)
+
+
+@st.composite
+def queue_cases(draw):
+    n = draw(st.integers(1, 100))
+    ready = draw(
+        st.lists(
+            st.floats(min_value=0, max_value=1e3, width=32, allow_subnormal=False),
+            min_size=n, max_size=n,
+        )
+    )
+    cost = draw(
+        st.lists(
+            st.floats(min_value=0, max_value=50, width=32, allow_subnormal=False),
+            min_size=n, max_size=n,
+        )
+    )
+    heads = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    heads[0] = True
+    nseg = sum(heads)
+    seeds = draw(
+        st.lists(
+            st.floats(min_value=0, max_value=1e3, width=32, allow_subnormal=False),
+            min_size=nseg, max_size=nseg,
+        )
+    )
+    return (
+        np.asarray(ready, np.float32),
+        np.asarray(cost, np.float32),
+        np.asarray(heads, bool),
+        np.asarray(seeds, np.float32),
+    )
+
+
+@hypothesis.given(queue_cases())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_queueing_scan(case):
+    ready, cost, heads, seeds = case
+    # Broadcast per-segment seed to rows.
+    seg_id = np.cumsum(heads) - 1
+    seed_rows = seeds[seg_id]
+    out = np.asarray(
+        segops.queueing_scan(
+            jnp.asarray(ready), jnp.asarray(cost),
+            jnp.asarray(heads), jnp.asarray(seed_rows),
+        )
+    )
+    ref = np.empty_like(ready)
+    busy = 0.0
+    for i in range(len(ready)):
+        if heads[i]:
+            busy = seeds[seg_id[i]]
+        busy = max(ready[i], busy) + cost[i]
+        ref[i] = busy
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-2)

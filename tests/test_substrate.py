@@ -1,0 +1,272 @@
+"""Substrate tests: optimizer, data, checkpoint/restart, compression,
+launcher policy, serving KV tier, storage client."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, configs
+from repro.core.client import ClientState, StorageClient
+from repro.core.types import EngineConfig, PlatformModel, SSDConfig
+from repro.distributed import compression
+from repro.launch.launcher import Supervisor, SupervisorConfig
+from repro.models import transformer
+from repro.serving import kv_tier
+from repro.train import data as data_lib
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synth_batch_deterministic():
+    a = data_lib.synth_batch(7, 4, 16, 1000)
+    b = data_lib.synth_batch(7, 4, 16, 1000)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = data_lib.synth_batch(8, 4, 16, 1000)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_prefetcher_orders_batches():
+    pf = data_lib.Prefetcher(2, 8, 100, start_idx=3)
+    it = iter(pf)
+    idxs = [next(it)[0] for _ in range(4)]
+    pf.close()
+    assert idxs == [3, 4, 5, 6]
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    cfg = opt_lib.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                              weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt_lib.init_opt_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt_lib.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 0.05
+
+
+def test_grad_clip_metric():
+    cfg = opt_lib.AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt_lib.init_opt_state(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = opt_lib.apply_updates(params, g, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    checkpoint.save(str(tmp_path), 5, tree)
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    loaded, manifest = checkpoint.load(str(tmp_path), template)
+    assert manifest["step"] == 5
+    np.testing.assert_array_equal(np.asarray(loaded["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        checkpoint.save(str(tmp_path), s, tree)
+    # A stale tmp dir must not be picked up as latest.
+    os.makedirs(tmp_path / "step_00000099.tmp", exist_ok=True)
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+    checkpoint.gc_old(str(tmp_path), keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_reshard_on_load(tmp_path):
+    """Load onto a different sharding (elastic mesh change analogue)."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    checkpoint.save(str(tmp_path), 1, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shardings = {"w": NamedSharding(mesh, P("data"))}
+    loaded, _ = checkpoint.load(
+        str(tmp_path), jax.tree.map(jnp.zeros_like, tree),
+        shardings=shardings,
+    )
+    np.testing.assert_array_equal(np.asarray(loaded["w"]),
+                                  np.arange(8, dtype=np.float32))
+    assert loaded["w"].sharding == shardings["w"]
+
+
+# ---------------------------------------------------------------------------
+# train loop end-to-end (+ failure injection / restart)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return configs.get_config("yi-34b", smoke=True).replace(
+        n_layers=1, loss_chunk=32,
+    )
+
+
+def test_train_loop_runs_and_checkpoints(tmp_path):
+    cfg = _tiny_cfg()
+    tcfg = train_loop.TrainConfig(
+        batch=2, seq=32, steps=6, ckpt_every=3, ckpt_dir=str(tmp_path),
+    )
+    res = train_loop.train(cfg, tcfg, resume=False)
+    assert res.step == 6
+    assert len(res.losses) == 6
+    assert all(np.isfinite(l) for l in res.losses)
+    assert checkpoint.latest_step(str(tmp_path)) == 6
+
+
+def test_train_loop_failure_restart(tmp_path):
+    cfg = _tiny_cfg()
+    tcfg = train_loop.TrainConfig(
+        batch=2, seq=32, steps=8, ckpt_every=2, ckpt_dir=str(tmp_path),
+    )
+    res = train_loop.train(cfg, tcfg, resume=False, fail_at={5})
+    assert res.restarts == 1
+    assert res.step == 8
+    # Restart resumed from step-4 checkpoint: steps 5..8 re-run => 4 + 8-4 = 8.
+    assert checkpoint.latest_step(str(tmp_path)) == 8
+
+
+def test_grad_accum_equivalence(tmp_path):
+    """grad_accum=2 over a doubled batch == single large-batch step."""
+    cfg = _tiny_cfg()
+    t1 = train_loop.TrainConfig(batch=4, seq=32, steps=1, grad_accum=1,
+                                ckpt_dir=str(tmp_path / "a"))
+    t2 = train_loop.TrainConfig(batch=4, seq=32, steps=1, grad_accum=2,
+                                ckpt_dir=str(tmp_path / "b"))
+    r1 = train_loop.train(cfg, t1, resume=False)
+    r2 = train_loop.train(cfg, t2, resume=False)
+    assert r1.losses[0] == pytest.approx(r2.losses[0], rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_converges():
+    """Accumulated EF residual keeps the long-run mean unbiased."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(1024,)).astype(np.float32))
+    res = jnp.zeros((1024,))
+    total = jnp.zeros((1024,))
+    for _ in range(50):
+        deq, res = compression.compress_leaf(g, res)
+        total = total + deq
+    np.testing.assert_allclose(
+        np.asarray(total / 50), np.asarray(g), atol=2e-2
+    )
+
+
+def test_compression_ratio():
+    params = {"w": jnp.zeros((4096, 64))}
+    wire = compression.compressed_bytes(params)
+    raw = 4096 * 64 * 4
+    assert wire < raw / 3.5  # ~4x compression incl. scales
+
+
+# ---------------------------------------------------------------------------
+# launcher policy
+# ---------------------------------------------------------------------------
+
+def test_supervisor_detects_dead_and_restarts():
+    sup = Supervisor(4, SupervisorConfig(heartbeat_timeout_s=10))
+    now = 1000.0
+    for w in range(4):
+        sup.heartbeat(w, now)
+    assert sup.handle_failures(now + 5)["action"] == "none"
+    sup.heartbeat(0, now + 20)
+    sup.heartbeat(1, now + 20)
+    sup.heartbeat(2, now + 20)
+    # worker 3 silent for >10s
+    act = sup.handle_failures(now + 20)
+    assert act["action"] == "elastic_downsize"
+    assert act["new_data_parallel"] == 2
+    assert act["reshard"] is True
+
+
+def test_supervisor_full_restart_when_capacity_returns():
+    sup = Supervisor(2, SupervisorConfig(heartbeat_timeout_s=10))
+    sup.heartbeat(0, 100.0)
+    sup.heartbeat(1, 100.0)
+    act = sup.handle_failures(100.0 + 20)  # both dead -> abort (no capacity)
+    assert act["action"] == "abort"
+
+
+def test_supervisor_straggler_backup_dispatch():
+    sup = Supervisor(4, SupervisorConfig(straggler_factor=1.5,
+                                         straggler_patience=2))
+    acts = []
+    for step in range(3):
+        for w in range(4):
+            sup.report_step_time(w, 1.0 if w != 2 else 2.5)
+        acts.extend(sup.straggler_actions())
+    assert any(a["worker"] == 2 for a in acts)
+
+
+# ---------------------------------------------------------------------------
+# storage client + KV tier
+# ---------------------------------------------------------------------------
+
+SSD = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
+                num_blocks=1 << 14)
+
+
+def test_storage_client_latency_floor_and_data():
+    ecfg = EngineConfig(num_units=4, fetch_width=64)
+    client = StorageClient(SSD, ecfg)
+    state = ClientState.init(SSD, 4)
+    flash = jnp.arange(SSD.num_blocks, dtype=jnp.float32)[:, None] * jnp.ones(
+        (1, 8)
+    )
+    lba = jnp.asarray([3, 999, 4095], jnp.int32)
+    state, data, done = client.read(state, flash, lba, jnp.float32(0))
+    np.testing.assert_array_equal(np.asarray(data[:, 0]), [3, 999, 4095])
+    lat = np.asarray(done)
+    assert (lat >= 50.0 - 1e-3).all()
+    assert (lat <= 60.0).all()  # floor + small overheads at light load
+
+
+def test_storage_client_throughput_cap():
+    ecfg = EngineConfig(num_units=8, fetch_width=64)
+    client = StorageClient(SSD, ecfg)
+    state = ClientState.init(SSD, 8)
+    flash = jnp.ones((SSD.num_blocks, 8))
+    n = 16384
+    lba = jnp.arange(n, dtype=jnp.int32) % SSD.num_blocks
+    state, _, done = client.read(state, flash, lba, jnp.float32(0))
+    span = float(jnp.max(done)) * 1e-6
+    iops = n / span
+    assert iops == pytest.approx(2.47e6, rel=0.1)
+
+
+def test_kv_tier_tokens_scale_with_iops():
+    """More device IOPS ⇒ higher decode tokens/s (paper's end-to-end story)."""
+    cfg = configs.get_config("yi-34b", smoke=True)
+    tier = kv_tier.KVTierConfig(page_tokens=16, hot_window=64,
+                                gpu_step_us=100.0)
+    ecfg = EngineConfig(num_units=8, fetch_width=64)
+    slow = SSD.replace(t_max_iops=1e5, num_blocks=1 << 14)
+    fast = SSD.replace(t_max_iops=4e6, num_blocks=1 << 14)
+    r_slow = kv_tier.decode_tokens_per_s(
+        cfg, tier, slow, ecfg, batch=4, start_len=512, n_steps=8,
+    )
+    r_fast = kv_tier.decode_tokens_per_s(
+        cfg, tier, fast, ecfg, batch=4, start_len=512, n_steps=8,
+    )
+    assert r_fast["tokens_per_s"] > 2 * r_slow["tokens_per_s"]
+    assert r_slow["avg_storage_us"] > r_fast["avg_storage_us"]

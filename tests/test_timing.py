@@ -1,0 +1,134 @@
+"""Timing-model correctness: aggregated == per-request, exactly.
+
+The paper's aggregated update must preserve the baseline semantics ("assuming
+back-to-back scheduling of requests on their target instances", §IV-D). Our
+segmented-(max,+)-scan closed form is exact, so we property-test equality
+against the sequential scan reference under hypothesis-generated workloads.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import timing
+from repro.core.types import RequestBatch, SSDConfig, TimingState
+
+
+def make_batch(arrival, lba, valid):
+    n = len(arrival)
+    z = jnp.zeros((n,), jnp.int32)
+    return RequestBatch(
+        arrival=jnp.asarray(arrival, jnp.float32),
+        sq_id=z, slot=z, opcode=z,
+        lba=jnp.asarray(lba, jnp.int32),
+        nblocks=jnp.ones((n,), jnp.int32),
+        buf_id=z,
+        req_id=jnp.arange(n, dtype=jnp.int32),
+        valid=jnp.asarray(valid, bool),
+    )
+
+
+@st.composite
+def workloads(draw):
+    n = draw(st.integers(min_value=1, max_value=96))
+    k = draw(st.sampled_from([1, 2, 4, 8, 16]))
+    arrival = draw(
+        st.lists(
+            st.floats(min_value=0.0, max_value=1e4, width=32, allow_subnormal=False),
+            min_size=n, max_size=n,
+        )
+    )
+    lba = draw(st.lists(st.integers(0, 2**20 - 1), min_size=n, max_size=n))
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    busy0 = draw(
+        st.lists(
+            st.floats(min_value=0.0, max_value=5e3, width=32, allow_subnormal=False),
+            min_size=k, max_size=k,
+        )
+    )
+    t_max = draw(st.sampled_from([1e5, 2.47e6, 1e7, 4e7]))
+    return arrival, lba, valid, busy0, k, t_max
+
+
+@hypothesis.given(workloads())
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_aggregated_matches_per_request(w):
+    arrival, lba, valid, busy0, k, t_max = w
+    ssd = SSDConfig(t_max_iops=t_max, n_instances=k)
+    batch = make_batch(arrival, lba, valid)
+    st0 = TimingState(jnp.asarray(busy0, jnp.float32), jnp.int32(0))
+
+    s_ref, c_ref = timing.per_request_update(st0, batch, ssd)
+    s_agg, c_agg = timing.aggregated_update(st0, batch, ssd)
+
+    np.testing.assert_allclose(
+        np.asarray(c_agg), np.asarray(c_ref), rtol=1e-5, atol=1e-2
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_agg.busy_until), np.asarray(s_ref.busy_until),
+        rtol=1e-5, atol=1e-2,
+    )
+
+
+def test_low_load_latency_floor():
+    """Under no contention, latency == L_min exactly (paper Fig. 2b)."""
+    ssd = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64)
+    # One request per instance (round-robin), far apart in time ⇒ no queueing.
+    arrival = jnp.arange(64, dtype=jnp.float32) * 1e4
+    lba = jnp.arange(64, dtype=jnp.int32)
+    batch = make_batch(arrival, lba, jnp.ones(64, bool))
+    _, comp = timing.aggregated_update(TimingState.init(64), batch, ssd)
+    lat = np.asarray(comp - arrival)
+    np.testing.assert_allclose(lat, 50.0, atol=1e-2)
+
+
+def test_throughput_saturates_at_tmax():
+    """A huge simultaneous burst completes at ~T_max aggregate IOPS."""
+    ssd = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64)
+    n = 8192
+    arrival = jnp.zeros((n,), jnp.float32)
+    lba = jnp.arange(n, dtype=jnp.int32) * 97
+    batch = make_batch(arrival, lba, jnp.ones(n, bool))
+    _, comp = timing.aggregated_update(TimingState.init(64), batch, ssd)
+    span_s = float(jnp.max(comp)) * 1e-6
+    iops = n / span_s
+    # Round-robin assignment load-balances exactly ⇒ tight tolerance.
+    assert iops == pytest.approx(2.47e6, rel=0.02)
+
+
+def test_invalid_rows_do_not_touch_state():
+    ssd = SSDConfig(n_instances=8)
+    batch = make_batch([5.0, 7.0], [3, 4], [False, False])
+    st0 = TimingState(jnp.arange(8, dtype=jnp.float32), jnp.int32(0))
+    s1, comp = timing.aggregated_update(st0, batch, ssd)
+    np.testing.assert_array_equal(
+        np.asarray(s1.busy_until), np.asarray(st0.busy_until)
+    )
+    np.testing.assert_array_equal(np.asarray(comp), np.zeros(2))
+
+
+def test_batch_split_equivalence():
+    """Processing one batch == processing it as two half batches in order."""
+    ssd = SSDConfig(t_max_iops=1e6, n_instances=4)
+    n = 64
+    rng = np.random.default_rng(0)
+    arrival = np.sort(rng.uniform(0, 100, n)).astype(np.float32)
+    lba = rng.integers(0, 1 << 16, n)
+    full = make_batch(arrival, lba, np.ones(n, bool))
+    st0 = TimingState.init(4)
+    s_full, c_full = timing.aggregated_update(st0, full, ssd)
+
+    h1 = make_batch(arrival[: n // 2], lba[: n // 2], np.ones(n // 2, bool))
+    h2 = make_batch(arrival[n // 2:], lba[n // 2:], np.ones(n // 2, bool))
+    s_a, c_a = timing.aggregated_update(st0, h1, ssd)
+    s_b, c_b = timing.aggregated_update(s_a, h2, ssd)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(c_a), np.asarray(c_b)]),
+        np.asarray(c_full), rtol=1e-5, atol=1e-2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_b.busy_until), np.asarray(s_full.busy_until),
+        rtol=1e-5, atol=1e-2,
+    )

@@ -1,0 +1,47 @@
+"""Vector-search case study: recall correctness + IOPS-dependent QPS."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import vector_search as vs
+from repro.core.types import EngineConfig, SSDConfig
+
+
+def test_graph_index_is_knn():
+    cfg = vs.SearchConfig(dim=16, degree=4)
+    vecs, graph = vs.build_index(jax.random.PRNGKey(0), 128, cfg)
+    # Verify one row against brute force.
+    d = np.sum((np.asarray(vecs) - np.asarray(vecs[7])) ** 2, axis=1)
+    d[7] = np.inf
+    expect = set(np.argsort(d)[:4].tolist())
+    assert set(np.asarray(graph[7]).tolist()) == expect
+
+
+def test_search_reaches_high_recall():
+    out = vs.case_study(n=1024, batch=16, width=4, iterations=24,
+                        t_max_iops=2.5e6)
+    assert out["recall"] >= 0.85, out["recall"]
+
+
+def test_qps_scales_with_iops_at_large_batch():
+    """Paper Fig. 16a: at batch 64+, 16x IOPS gives substantial speedup."""
+    slow = vs.case_study(n=1024, batch=64, width=4, t_max_iops=2.5e6)
+    fast = vs.case_study(n=1024, batch=64, width=4, t_max_iops=40e6)
+    assert fast["qps"] > 3 * slow["qps"], (slow["qps"], fast["qps"])
+    # Recall must not degrade with the faster device (same algorithm).
+    assert abs(fast["recall"] - slow["recall"]) < 0.05
+
+
+def test_qps_insensitive_to_iops_at_tiny_batch():
+    """Paper Fig. 16a: batch 4 cannot generate enough parallel I/O."""
+    slow = vs.case_study(n=1024, batch=4, width=2, t_max_iops=2.5e6)
+    fast = vs.case_study(n=1024, batch=4, width=2, t_max_iops=40e6)
+    ratio = fast["qps"] / slow["qps"]
+    assert ratio < 2.0, ratio
+
+
+def test_wider_beam_improves_recall_per_iteration():
+    narrow = vs.case_study(n=1024, batch=16, width=1, iterations=12)
+    wide = vs.case_study(n=1024, batch=16, width=8, iterations=12)
+    assert wide["recall"] >= narrow["recall"]
