@@ -49,11 +49,13 @@ def swarmio_cfg(**kw) -> EngineConfig:
     return EngineConfig(**base)
 
 
-def run_engine(cfg, ssd, wl, plat=None, rounds=48):
-    plat = plat or PlatformModel()
-    st = engine.init_state(cfg, ssd, wl)
-    runner = engine.make_runner(cfg, ssd, wl, plat, rounds)
-    out = runner(st)
+def run_engine(cfg, ssd, wl, plat=None, rounds=48, num_devices=1):
+    """Run the engine to completion. ``wl`` may be a legacy WorkloadConfig
+    or any generator from repro.workloads; ``num_devices > 1`` emulates a
+    vmapped M-drive array (leaves gain a leading device axis)."""
+    out = engine.simulate(
+        cfg, ssd, wl, plat, rounds=rounds, num_devices=num_devices
+    )
     jax.block_until_ready(out.metrics.completed)
     return out
 

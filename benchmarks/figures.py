@@ -81,17 +81,21 @@ def fig10_validation(quick=False):
             C.swarmio_cfg(sq_depth=max(1024, depth)), ssd, wl, rounds=48
         )
         s_iops = float(swarm.metrics.iops())
+        m = swarm.metrics
         rows.append([
             n_out, ref_iops / 1e6, s_iops / 1e6,
             abs(s_iops - ref_iops) / ref_iops * 100,
-            float(swarm.metrics.avg_e2e_us()),
+            float(m.avg_e2e_us()), float(m.p50_us()), float(m.p95_us()),
+            float(m.p99_us()),
         ])
     err = sum(r[3] for r in rows) / len(rows)
+    last = rows[-1]
     print(f"fig10: SwarmIO avg relative IOPS error vs modeled device: "
-          f"{err:.1f}% (paper: 7.4-7.7%)")
+          f"{err:.1f}% (paper: 7.4-7.7%); latency @max load "
+          f"p50={last[5]:.0f} p95={last[6]:.0f} p99={last[7]:.0f} us")
     return (
         ["outstanding", "device_miops", "swarmio_miops", "rel_err_pct",
-         "avg_e2e_us"],
+         "avg_e2e_us", "p50_us", "p95_us", "p99_us"],
         rows,
     )
 
@@ -108,13 +112,20 @@ def fig11_latency_breakdown(quick=False):
         m = out.metrics
         rows.append([
             name, float(m.avg_target_us()), float(m.avg_proc_us()),
-            float(m.avg_e2e_us()),
+            float(m.avg_e2e_us()), float(m.p50_us()), float(m.p95_us()),
+            float(m.p99_us()),
         ])
     base_e2e = rows[0][3]
     swarm_e2e = rows[1][3]
     print(f"fig11: E2E latency nvmevirt={base_e2e:.0f}us "
-          f"swarmio={swarm_e2e:.0f}us ({base_e2e/swarm_e2e:.1f}x lower)")
-    return ["engine", "target_us", "proc_us", "e2e_us"], rows
+          f"swarmio={swarm_e2e:.0f}us ({base_e2e/swarm_e2e:.1f}x lower); "
+          f"swarmio p50={rows[1][4]:.0f} p95={rows[1][5]:.0f} "
+          f"p99={rows[1][6]:.0f} us")
+    return (
+        ["engine", "target_us", "proc_us", "e2e_us", "p50_us", "p95_us",
+         "p99_us"],
+        rows,
+    )
 
 
 def fig12_scalability(quick=False):
@@ -275,6 +286,82 @@ def fig16_vector_search(quick=False):
     return ["sweep", "miops", "batch", "width", "qps", "recall"], rows
 
 
+def fig17_array_scaling(quick=False):
+    """Multi-SSD array emulation: M vmapped 40-MIOPS drives in one jit
+    program reach the paper-title 100-MIOPS regime (aggregate virtual
+    IOPS across the array)."""
+    from repro.core import engine
+
+    rows = []
+    wl = WorkloadConfig(io_depth=1024)
+    devices = [1, 4] if quick else [1, 2, 4, 8]
+    for m_dev in devices:
+        out = engine.simulate(
+            C.swarmio_cfg(), C.FUTURE_40M, wl, rounds=24, num_devices=m_dev
+        )
+        agg = float(engine.aggregate_iops(out))
+        met = out.metrics
+        rows.append([
+            m_dev, agg / 1e6, agg / (m_dev * C.FUTURE_40M.t_max_iops),
+            float(met.p50_us()), float(met.p99_us()),
+        ])
+    at4 = next(r[1] for r in rows if r[0] == 4)
+    print(f"fig17: {rows[-1][0]}x40M array sustains {rows[-1][1]:.0f} MIOPS "
+          f"aggregate (M=4: {at4:.0f} MIOPS, "
+          f"{'>=' if at4 >= 100 else '<'}100M paper-title regime)")
+    return ["devices", "aggregate_miops", "fraction_of_target", "p50_us",
+            "p99_us"], rows
+
+
+def fig18_workload_sweep(quick=False):
+    """All four workload generators through the unified engine: sustained
+    IOPS + latency distribution per arrival/address pattern."""
+    import numpy as np
+
+    from repro import workloads
+
+    cfg = C.swarmio_cfg()
+    ssd = C.D7_PS1010
+    depth = 256 if quick else 1024
+    rate = ssd.t_max_iops * 0.8
+    n_trace = 4096 if quick else 16384
+    trace_t = np.cumsum(
+        np.full(n_trace, 1e6 / (ssd.t_max_iops * 0.5) * 1.0)
+    ).astype(np.float32)
+    trace = workloads.TraceReplay.from_trace(
+        trace_t,
+        np.arange(n_trace) % ssd.num_blocks,
+        np.zeros(n_trace),
+        cfg,
+    )
+    # Zipf runs under lba_hash routing: with the default round-robin
+    # assignment addresses never reach the timing model, so skew would be
+    # invisible; address-hash channel striping is what the hot spot stresses.
+    cases = [
+        ("closed_loop", workloads.ClosedLoop(io_depth=depth), ssd),
+        ("poisson_open", workloads.PoissonOpenLoop(io_depth=depth,
+                                                   rate_iops=rate), ssd),
+        ("zipf_0.9_lba_hash",
+         workloads.ZipfClosedLoop(io_depth=depth, theta=0.9),
+         ssd.replace(routing="lba_hash")),
+        ("trace_replay", trace, ssd),
+    ]
+    rows = []
+    rounds = 24 if quick else 64
+    for name, wl, ssd_case in cases:
+        out = C.run_engine(cfg, ssd_case, wl, rounds=rounds)
+        m = out.metrics
+        rows.append([
+            name, float(m.iops()) / 1e6, float(m.avg_e2e_us()),
+            float(m.p50_us()), float(m.p95_us()), float(m.p99_us()),
+        ])
+    print("fig18: " + "; ".join(
+        f"{r[0]}: {r[1]:.2f} MIOPS p99={r[5]:.0f}us" for r in rows
+    ))
+    return ["workload", "miops", "avg_e2e_us", "p50_us", "p95_us",
+            "p99_us"], rows
+
+
 ALL = [
     ("fig03_frontend", fig03_frontend_plateau),
     ("fig04_per_request_overhead", fig04_per_request_overhead),
@@ -285,4 +372,6 @@ ALL = [
     ("fig14_timing_ablation", fig14_timing_ablation),
     ("fig15_sensitivity", fig15_sensitivity),
     ("fig16_vector_search", fig16_vector_search),
+    ("fig17_array_scaling", fig17_array_scaling),
+    ("fig18_workload_sweep", fig18_workload_sweep),
 ]

@@ -36,6 +36,8 @@ print(f"sustained     : {float(m.iops())/1e6:.1f} MIOPS "
       f"({float(m.iops())/ssd.t_max_iops*100:.1f}% of target)")
 print(f"avg E2E       : {float(m.avg_e2e_us()):.1f} us "
       f"(includes queueing at this load)")
+print(f"latency dist  : p50={float(m.p50_us()):.0f} "
+      f"p95={float(m.p95_us()):.0f} p99={float(m.p99_us()):.0f} us")
 print(f"requests done : {int(float(m.completed))}")
 
 # 4. Compare with the NVMeVirt baseline under the same load.
@@ -48,3 +50,19 @@ base = engine.simulate(base_cfg, ssd, wl, rounds=64)
 print(f"NVMeVirt base : {float(base.metrics.iops())/1e6:.2f} MIOPS "
       f"-> SwarmIO speedup "
       f"{float(m.iops())/float(base.metrics.iops()):.0f}x")
+
+# 5. Scale out: vmap the unified pipeline over a 4-drive array — one jit
+#    program emulating 4x40 MIOPS, the paper-title 100-MIOPS regime.
+arr = engine.simulate(cfg, ssd, wl, rounds=64, num_devices=4)
+print(f"4-drive array : {float(engine.aggregate_iops(arr))/1e6:.0f} MIOPS "
+      f"aggregate (p99 {float(arr.metrics.p99_us()):.0f} us)")
+
+# 6. Swap the arrival process: open-loop Poisson at 60% of the device
+#    ceiling (closed loops can't show overload latency; open loops can).
+from repro import workloads
+
+open_wl = workloads.PoissonOpenLoop(io_depth=1024, rate_iops=24e6)
+po = engine.simulate(cfg, ssd, open_wl, rounds=64)
+pm = po.metrics
+print(f"open-loop 24M : sustained {float(pm.iops())/1e6:.1f} MIOPS, "
+      f"p99 {float(pm.p99_us()):.0f} us")

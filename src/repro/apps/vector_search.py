@@ -23,7 +23,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.client import ClientState, StorageClient
+from repro.core.client import StorageClient
 from repro.core.types import EngineConfig, PlatformModel, SSDConfig
 
 BIG = 3e38  # python float: jnp module constants leak into jaxprs
@@ -108,12 +108,24 @@ def search(
     ssd: SSDConfig,
     ecfg: EngineConfig | None = None,
     plat: PlatformModel | None = None,
+    num_devices: int = 1,
 ) -> dict:
-    """Returns results + virtual-time QPS accounting."""
+    """Returns results + virtual-time QPS accounting.
+
+    ``num_devices > 1`` stripes the vector fetches round-robin over an
+    emulated M-drive array (one vmapped pipeline — the dataset exceeds a
+    single drive's IOPS budget long before it exceeds its capacity).
+    """
     b, d = queries.shape
     n = vecs.shape[0]
     ecfg = ecfg or EngineConfig(num_units=8, fetch_width=64)
     storage = StorageClient(ssd, ecfg, plat or PlatformModel())
+    reads_per_iter = b * cfg.beam_width * cfg.degree
+    if reads_per_iter % num_devices != 0:
+        raise ValueError(
+            f"batch*width*degree={reads_per_iter} must be divisible by "
+            f"num_devices={num_devices} for striped array reads"
+        )
 
     # Entry points: hash-spread start nodes, one per query.
     start = (
@@ -127,7 +139,10 @@ def search(
     dist0 = dist0.at[:, 0].set(d_start)
     idx0 = idx0.at[:, 0].set(start)
 
-    cstate = ClientState.init(ssd, ecfg.num_units)
+    cstate = (
+        storage.init_state() if num_devices == 1
+        else storage.init_array_state(num_devices)
+    )
     clock0 = jnp.float32(0)
 
     # Per-iteration modeled GPU time: distance flops + merge overhead.
@@ -152,9 +167,14 @@ def search(
 
         # Storage: fault in the neighbor VECTORS (1 block each).
         lba = jnp.maximum(nbrs.reshape(-1), 0)
-        cstate, data, done = storage.read(
-            cstate, vecs, lba, clock, nvalid.reshape(-1)
-        )
+        if num_devices == 1:
+            cstate, data, done = storage.read(
+                cstate, vecs, lba, clock, nvalid.reshape(-1)
+            )
+        else:
+            cstate, data, done = storage.read_striped(
+                cstate, vecs, lba, clock, nvalid.reshape(-1)
+            )
         storage_done = jnp.max(done)
         fetched = data.reshape(b, -1, d)
 
@@ -201,6 +221,7 @@ def case_study(
     iterations: int = 24,
     t_max_iops: float = 2.5e6,
     seed: int = 0,
+    num_devices: int = 1,
 ) -> dict:
     """One (batch, width, IOPS) cell of the paper's Fig. 16 study."""
     cfg = SearchConfig(beam_width=width, iterations=iterations)
@@ -214,7 +235,7 @@ def case_study(
         n_instances=max(64, int(t_max_iops // 4e4)),
         num_blocks=n,
     )
-    out = search(queries, vecs, graph, cfg, ssd)
+    out = search(queries, vecs, graph, cfg, ssd, num_devices=num_devices)
     truth = ground_truth(vecs, queries, cfg.top_k)
     out["recall"] = recall_at_k(out["indices"], truth)
     return out

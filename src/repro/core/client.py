@@ -4,13 +4,19 @@ Applications (the SSD-backed KV tier, the vector-search case study) do not
 need the full SQ-ring machinery — they issue *batched* block reads and need
 (a) the data, functionally, and (b) faithful virtual-time completion times
 under a configured device model. ``StorageClient`` provides exactly that:
-each ``read`` models GPU-initiated submission across ``num_sqs`` queues,
-SwarmIO's coalesced fetch + aggregated timing + DSA-batched data path, and
-returns per-request completion times plus the gathered blocks.
+each ``read`` models GPU-initiated submission across the configured service
+units and returns per-request completion times plus the gathered blocks.
 
-This is the "GPU-initiated I/O" surface the paper's case study uses: the
-application decides *when* to issue (its own virtual clock), the client
-answers *when the data is ready*.
+All cost modeling lives in the unified ``DevicePipeline`` (device.py) — the
+same stages the closed-loop engine runs — so the client and the engine
+provably price I/O identically: ``read`` is ``fetch_direct`` (stage 1,
+ring-less variant) followed by the shared ``process`` (stages 2+3). The
+client carries no cost formulas of its own.
+
+``read_array``/``read_striped`` extend the same program to an M-drive
+array: the per-device pipeline is ``vmap``-ed over a leading device axis,
+so one jit program prices the whole array (paper-title 100-MIOPS regime at
+M x 40-MIOPS drives).
 """
 from __future__ import annotations
 
@@ -20,13 +26,16 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import timing
-from repro.core.segops import queueing_scan
+from repro.core.device import (
+    DevicePipeline,
+    DeviceState,
+    init_array_state,
+    make_direct_batch,
+)
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
     SSDConfig,
-    TimingState,
 )
 
 
@@ -35,17 +44,20 @@ from repro.core.types import (
 class ClientState:
     """Virtual-time device state carried across application steps."""
 
-    tstate: TimingState
-    disp_time: jax.Array  # (U,) dispatcher cursors
-    dsa_time: jax.Array   # (U,) DSA engine cursors
+    dev: DeviceState
 
     @staticmethod
-    def init(ssd: SSDConfig, num_units: int) -> "ClientState":
+    def init(ssd: SSDConfig, num_units: int,
+             workers_per_unit: int = 1) -> "ClientState":
+        """Manual-shape constructor (escape hatch). Prefer
+        ``StorageClient.init_state``, which derives unit/worker counts from
+        the same EngineConfig the pipeline prices with — passing counts
+        that disagree with the config silently prices a different device.
+        """
         return ClientState(
-            tstate=TimingState.init(ssd.n_instances),
-            disp_time=jnp.zeros((num_units,), jnp.float32),
-            dsa_time=jnp.zeros((num_units,), jnp.float32),
+            dev=DeviceState.init(ssd, num_units, workers_per_unit)
         )
+
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +65,22 @@ class StorageClient:
     ssd: SSDConfig
     cfg: EngineConfig
     plat: PlatformModel = PlatformModel()
+
+    @property
+    def pipeline(self) -> DevicePipeline:
+        return DevicePipeline(self.cfg, self.ssd, self.plat)
+
+    def init_state(self) -> ClientState:
+        """Fresh state with unit/worker shapes derived from ``cfg`` — the
+        exact shapes ``engine_round`` prices with (parity-safe for every
+        frontend/datapath combination)."""
+        return ClientState(dev=self.pipeline.init_state())
+
+    def init_array_state(self, num_devices: int) -> ClientState:
+        """Fresh stacked state for an M-drive array, cfg-derived shapes."""
+        return ClientState(
+            dev=init_array_state(self.pipeline, num_devices)
+        )
 
     def read(
         self,
@@ -66,84 +94,65 @@ class StorageClient:
 
         Returns (state', data (N, block_words), completion_times (N,)).
         """
+        batch = make_direct_batch(lba, t_submit, valid)
+        dev, res = self.pipeline.read(state.dev, batch)
+        data = flash[jnp.where(batch.valid, batch.lba, 0)]
+        return ClientState(dev=dev), data, res.done
+
+    def read_array(
+        self,
+        state: ClientState,    # stacked: every leaf has a leading (M,) axis
+        flash: jax.Array,      # (num_blocks, block_words) — shared store
+        lba: jax.Array,        # (M, N) i32 per-device block addresses
+        t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
+        valid: jax.Array | None = None,   # (M, N) bool
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Per-device batched reads over an M-drive array, one vmap."""
+        m, n = lba.shape
+        t_submit = jnp.asarray(t_submit, jnp.float32)
+        if t_submit.ndim == 1:
+            t_submit = t_submit[:, None]
+        t_submit = jnp.broadcast_to(t_submit, (m, n))
+        if valid is None:
+            valid = jnp.ones((m, n), bool)
+
+        def one(dev, lba_d, t_d, valid_d):
+            batch = make_direct_batch(lba_d, t_d, valid_d)
+            dev, res = self.pipeline.read(dev, batch)
+            return dev, res.done
+
+        dev, done = jax.vmap(one)(state.dev, lba, t_submit, valid)
+        data = flash[jnp.where(valid, lba, 0)]
+        return ClientState(dev=dev), data, done
+
+    def read_striped(
+        self,
+        state: ClientState,    # stacked array state (M devices)
+        flash: jax.Array,
+        lba: jax.Array,        # (N,) i32, N % M == 0
+        t_submit: jax.Array,   # () or (N,) f32
+        valid: jax.Array | None = None,
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Stripe a flat read batch round-robin over the array's M drives.
+
+        Request i goes to drive ``i % M`` (fixed interleaved placement).
+        Returns results in the original request order.
+        """
+        m = jax.tree.leaves(state.dev)[0].shape[0]
         n = lba.shape[0]
-        u = state.disp_time.shape[0]
+        if n % m != 0:
+            raise ValueError(
+                f"batch of {n} requests must be divisible by M={m} drives"
+            )
         if valid is None:
             valid = jnp.ones((n,), bool)
         t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
-
-        # --- frontend: coalesced fetch, requests dealt round-robin to units.
-        per_unit = -(-n // u)  # ceil
-        idx = jnp.arange(n, dtype=jnp.int32)
-        unit = idx // per_unit
-        rank = idx % per_unit
-        txn = jnp.float32(
-            self.plat.txn_base_us
-            if self.cfg.transport == "p2p" else self.plat.host_txn_base_us
+        # (N,) -> (M, N//M): request i = stripe (i % M, i // M).
+        to_dev = lambda x: x.reshape(n // m, m).T
+        state, data, done = self.read_array(
+            state, flash, to_dev(lba), to_dev(t_submit), to_dev(valid)
         )
-        bw = jnp.float32(
-            self.plat.link_bytes_per_us
-            if self.cfg.transport == "p2p" else self.plat.host_bytes_per_us
+        from_dev = lambda x: jnp.swapaxes(x, 0, 1).reshape(
+            (n,) + x.shape[2:]
         )
-        f = self.cfg.fetch_width
-        if self.cfg.coalesced:
-            # One transaction per fetch_width entries per unit.
-            n_txn = rank // f + 1
-            fetch_done = (
-                jnp.maximum(t_submit, state.disp_time[unit])
-                + n_txn.astype(jnp.float32) * txn
-                + (rank + 1).astype(jnp.float32) * self.plat.sqe_bytes / bw
-            )
-        else:
-            fetch_done = (
-                jnp.maximum(t_submit, state.disp_time[unit])
-                + (rank + 1).astype(jnp.float32)
-                * (txn + self.plat.sqe_bytes / bw)
-            )
-        fetch_done = jnp.where(valid, fetch_done, 0.0)
-        disp_time = jnp.maximum(
-            jax.ops.segment_max(
-                jnp.where(valid, fetch_done, 0.0), unit, num_segments=u
-            ),
-            state.disp_time,
-        )
-
-        # --- timing model (aggregated, one shared-state update).
-        if self.ssd.routing == "lba_hash":
-            inst = timing.lba_hash_instance(lba, self.ssd.n_instances)
-            rr = state.tstate.rr
-        else:
-            inst, rr = timing.assign_rr(
-                state.tstate.rr, valid, self.ssd.n_instances
-            )
-        target, new_busy = timing.aggregated_batch_times(
-            state.tstate.busy_until, fetch_done, inst, valid, self.ssd
-        )
-
-        # --- data path: batched DSA copies, pipelined per unit.
-        issue = (
-            self.plat.dsa_desc_issue_us
-            + self.plat.dsa_batch_setup_us / max(self.cfg.fetch_width, 1)
-        )
-        cost = jnp.where(
-            valid,
-            self.ssd.block_bytes / self.plat.dsa_bytes_per_us + 0.01,
-            0.0,
-        )
-        heads = jnp.concatenate(
-            [jnp.ones((1,), bool), unit[1:] != unit[:-1]]
-        )
-        busy = queueing_scan(
-            fetch_done + issue, cost, heads, state.dsa_time[unit]
-        )
-        dsa_time = jnp.maximum(
-            jax.ops.segment_max(busy, unit, num_segments=u), state.dsa_time
-        )
-
-        done = jnp.where(valid, jnp.maximum(target, busy), 0.0)
-        data = flash[jnp.where(valid, lba, 0)]
-        new_state = ClientState(
-            tstate=TimingState(new_busy, rr), disp_time=disp_time,
-            dsa_time=dsa_time,
-        )
-        return new_state, data, done
+        return state, from_dev(data), from_dev(done)

@@ -19,7 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.segops import queueing_scan
+from repro.core.segops import queueing_scan, segment_rank
 from repro.core.types import EngineConfig, PlatformModel, RequestBatch, SSDConfig
 
 
@@ -71,6 +71,7 @@ def baseline_worker_times(
     cfg: EngineConfig,
     plat: PlatformModel,
     ssd: SSDConfig,
+    unit: jax.Array | None = None,   # (N,) non-decreasing service-unit ids
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """NVMeVirt backend: per-request map/unmap + CPU copy, W lanes per unit.
 
@@ -82,8 +83,13 @@ def baseline_worker_times(
     """
     u, w = work_time.shape
     n = fetch_done.shape[0]
-    per_unit = n // u
     txn, bw = _p2p(cfg, plat)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if unit is None:
+        unit = idx // (n // u)
+        rank_in_unit = idx % (n // u)
+    else:
+        rank_in_unit = segment_rank(unit)
 
     # --- global map/unmap serialization (requests in dispatch order).
     map_cost = jnp.where(batch.valid, jnp.float32(plat.per_req_map_us), 0.0)
@@ -95,9 +101,6 @@ def baseline_worker_times(
     # --- per-lane p2p copy after mapping.
     cost = txn + _bytes(batch, ssd) / bw
     cost = jnp.where(batch.valid, cost, 0.0)
-    idx = jnp.arange(n, dtype=jnp.int32)
-    unit = idx // per_unit
-    rank_in_unit = idx % per_unit
     lane = unit * w + (rank_in_unit % w)            # global lane id
     order = jnp.argsort(lane, stable=True)
     heads = jnp.concatenate(
@@ -122,6 +125,7 @@ def dsa_worker_times(
     plat: PlatformModel,
     ssd: SSDConfig,
     dsa_batch_size: int = 16,
+    unit: jax.Array | None = None,   # (N,) non-decreasing service-unit ids
 ) -> Tuple[jax.Array, jax.Array]:
     """SwarmIO backend: batched async DSA offload (paper §IV-C).
 
@@ -131,7 +135,6 @@ def dsa_worker_times(
     """
     u = dsa_time.shape[0]
     n = fetch_done.shape[0]
-    per_unit = n // u
     # Issue: one batch descriptor per `dsa_batch_size` requests.
     issue = plat.dsa_desc_issue_us + plat.dsa_batch_setup_us / dsa_batch_size
     ready_in = fetch_done + issue
@@ -139,8 +142,8 @@ def dsa_worker_times(
     cost = _bytes(batch, ssd) / plat.dsa_bytes_per_us + 0.01
     cost = jnp.where(batch.valid, cost, 0.0)
 
-    idx = jnp.arange(n, dtype=jnp.int32)
-    unit = idx // per_unit
+    if unit is None:
+        unit = jnp.arange(n, dtype=jnp.int32) // (n // u)
     heads = jnp.concatenate([jnp.ones((1,), bool), unit[1:] != unit[:-1]])
     seed = dsa_time[unit]
     busy = queueing_scan(ready_in, cost, heads, seed)

@@ -1,0 +1,254 @@
+"""The unified, layered device pipeline (single source of truth for cost).
+
+Every consumer of the emulated SSD — the closed-loop engine and the
+application-facing ``StorageClient`` — prices I/O through the same three
+stages over one ``DeviceState`` pytree:
+
+    stage 1  frontend fetch      how/when request descriptors become visible
+                                 to a service unit (ring fetch or direct
+                                 batch fetch — both in frontend.py)
+    stage 2  timing model        target completion times under the global
+                                 lock (aggregated / per-request, global /
+                                 local scope — timing.py)
+    stage 3  data path           when the emulated transfer lands (batched
+                                 DSA offload or baseline worker threads —
+                                 datapath.py)
+
+``DevicePipeline.process`` composes stages 2+3 for a fetched
+``RequestBatch`` and returns per-request (arrival, target, ready, done);
+the stage-1 variants differ only in where descriptors come from, so the
+engine runs ``frontend.fetch_{distributed,centralized}`` and the client
+runs ``DevicePipeline.fetch_direct``, then both call the identical
+``process``. A multi-drive array is the same program ``vmap``-ed over a
+leading device axis (see ``engine.simulate(num_devices=...)`` and
+``StorageClient.read_striped``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import datapath, frontend, timing
+from repro.core.types import (
+    EngineConfig,
+    PlatformModel,
+    RequestBatch,
+    SSDConfig,
+    TimingState,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceState:
+    """All virtual-time emulator-side state for one emulated device."""
+
+    tstate: TimingState    # shared timing model (busy_until + rr cursor)
+    disp_time: jax.Array   # (U,) dispatcher busy-until cursors
+    work_time: jax.Array   # (U, W) baseline worker lanes busy-until
+    dsa_time: jax.Array    # (U,) DSA engine busy-until cursors
+    lock_time: jax.Array   # ()  global timing-lock busy-until
+    map_time: jax.Array    # ()  global map/unmap-lock busy-until
+
+    @staticmethod
+    def init(ssd: SSDConfig, num_units: int, workers_per_unit: int = 1
+             ) -> "DeviceState":
+        return DeviceState(
+            tstate=TimingState.init(ssd.n_instances),
+            disp_time=jnp.zeros((num_units,), jnp.float32),
+            work_time=jnp.zeros((num_units, workers_per_unit), jnp.float32),
+            dsa_time=jnp.zeros((num_units,), jnp.float32),
+            lock_time=jnp.float32(0),
+            map_time=jnp.float32(0),
+        )
+
+    @property
+    def num_units(self) -> int:
+        return self.disp_time.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PipelineResult:
+    """Per-request virtual-time outcome of one pipeline pass (all (N,))."""
+
+    arrival: jax.Array  # post-lock dispatch time seen by the timing model
+    target: jax.Array   # timing-model completion (device fidelity)
+    ready: jax.Array    # data-path completion (copy landed)
+    done: jax.Array     # max(target, ready), 0 for invalid rows
+
+
+def lock_pass(
+    lock_time: jax.Array,
+    batch_ready: jax.Array,   # (U,) time each unit's batch is ready
+    n_valid_u: jax.Array,     # (U,) valid requests per unit
+    cfg: EngineConfig,
+    plat: PlatformModel,
+) -> Tuple[jax.Array, jax.Array]:
+    """Serialize service units on the global timing-model lock.
+
+    Returns (lock_time', lock_done (U,)). Units acquire in index order after
+    their batch is ready. Cost = per-request (baseline) or per-batch
+    (aggregated). Local timing scope has no shared lock at all.
+    """
+    if cfg.timing_scope == "local":
+        return lock_time, batch_ready
+    if cfg.mode == "per_request":
+        cost = n_valid_u.astype(jnp.float32) * plat.lock_per_req_us
+    else:
+        cost = jnp.where(n_valid_u > 0, plat.lock_per_batch_us, 0.0)
+
+    def step(t, x):
+        ready, c = x
+        done = jnp.maximum(t, ready) + c
+        return done, done
+
+    lock_end, lock_done = jax.lax.scan(step, lock_time, (batch_ready, cost))
+    return lock_end, lock_done
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePipeline:
+    """Static composition of the three stages for one device model."""
+
+    cfg: EngineConfig
+    ssd: SSDConfig
+    plat: PlatformModel
+
+    @property
+    def num_units(self) -> int:
+        return self.cfg.num_units if self.cfg.frontend == "distributed" else 1
+
+    def init_state(self) -> DeviceState:
+        return DeviceState.init(
+            self.ssd, self.num_units, self.cfg.workers_per_unit
+        )
+
+    # -- stage 1 (direct variant; ring variants live in frontend.py) --------
+    def fetch_direct(
+        self,
+        state: DeviceState,
+        t_submit: jax.Array,   # (N,) f32
+        valid: jax.Array,      # (N,) bool
+    ) -> Tuple[DeviceState, jax.Array, jax.Array]:
+        """Fetch a directly submitted flat batch (no SQ rings).
+
+        Returns (state', fetch_done (N,), unit (N,)).
+        """
+        fetch_done, disp_time, unit = frontend.direct_fetch_times(
+            state.disp_time, t_submit, valid, self.cfg, self.plat
+        )
+        return (
+            dataclasses.replace(state, disp_time=disp_time), fetch_done, unit
+        )
+
+    # -- stages 2+3 ----------------------------------------------------------
+    def process(
+        self,
+        state: DeviceState,
+        batch: RequestBatch,
+        fetch_done: jax.Array,  # (N,) per-row fetch completion times
+        unit: jax.Array,        # (N,) i32 non-decreasing service-unit ids
+    ) -> Tuple[DeviceState, PipelineResult]:
+        """Timing model under the global lock, then the backend data path."""
+        cfg, ssd, plat = self.cfg, self.ssd, self.plat
+        u = state.num_units
+        valid = batch.valid
+
+        # -- stage 2a: global timing-model lock.
+        n_valid_u = jax.ops.segment_sum(
+            valid.astype(jnp.int32), unit, num_segments=u
+        )
+        batch_ready = jax.ops.segment_max(
+            jnp.where(valid, fetch_done, 0.0), unit, num_segments=u
+        )
+        lock_time, lock_done = lock_pass(
+            state.lock_time, batch_ready, n_valid_u, cfg, plat
+        )
+        disp_time = jnp.maximum(state.disp_time, lock_done)
+        arrival = jnp.maximum(fetch_done, lock_done[unit])
+
+        # -- stage 2b: target completion times.
+        tbatch = dataclasses.replace(batch, arrival=arrival)
+        if cfg.timing_scope == "local":
+            tstate, target = timing.local_scope_update(
+                state.tstate, arrival, valid, ssd, u
+            )
+        else:
+            tstate, target = timing.update(state.tstate, tbatch, ssd, cfg.mode)
+
+        # -- stage 3: backend data transfer.
+        if cfg.batched_datapath:
+            # DSA engine also carried the fetch transfer (engine sharing /
+            # interference, paper Fig. 9b): bump cursors by fetch bytes.
+            fetch_bytes_u = jax.ops.segment_sum(
+                jnp.where(valid, jnp.float32(plat.sqe_bytes), 0.0),
+                unit, num_segments=u,
+            )
+            dsa_time0 = state.dsa_time + fetch_bytes_u / plat.dsa_bytes_per_us
+            dsa_time, ready = datapath.dsa_worker_times(
+                dsa_time0, arrival, batch, cfg, plat, ssd, unit=unit
+            )
+            work_time, map_time = state.work_time, state.map_time
+        else:
+            work_time, map_time, ready = datapath.baseline_worker_times(
+                state.work_time, state.map_time, arrival, batch, cfg, plat,
+                ssd, unit=unit,
+            )
+            dsa_time = state.dsa_time
+
+        done = jnp.where(valid, jnp.maximum(target, ready), 0.0)
+        new_state = DeviceState(
+            tstate=tstate, disp_time=disp_time, work_time=work_time,
+            dsa_time=dsa_time, lock_time=lock_time, map_time=map_time,
+        )
+        return new_state, PipelineResult(
+            arrival=arrival, target=target, ready=ready, done=done
+        )
+
+    def read(
+        self,
+        state: DeviceState,
+        batch: RequestBatch,
+    ) -> Tuple[DeviceState, PipelineResult]:
+        """Full pipeline for a direct batch: fetch_direct + process."""
+        state, fetch_done, unit = self.fetch_direct(
+            state, batch.arrival, batch.valid
+        )
+        return self.process(state, batch, fetch_done, unit)
+
+
+def init_array_state(pipe: DevicePipeline, num_devices: int) -> DeviceState:
+    """Stacked DeviceState with a leading (M,) device axis for vmap."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_devices,) + x.shape),
+        pipe.init_state(),
+    )
+
+
+def make_direct_batch(
+    lba: jax.Array,
+    t_submit: jax.Array,
+    valid: jax.Array | None = None,
+    opcode: jax.Array | None = None,
+    nblocks: jax.Array | None = None,
+) -> RequestBatch:
+    """RequestBatch for ring-less direct submission (client-style reads)."""
+    n = lba.shape[0]
+    z = jnp.zeros((n,), jnp.int32)
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
+    return RequestBatch(
+        arrival=t_submit,
+        sq_id=z, slot=z,
+        opcode=z if opcode is None else opcode,
+        lba=lba.astype(jnp.int32),
+        nblocks=jnp.ones((n,), jnp.int32) if nblocks is None else nblocks,
+        buf_id=z,
+        req_id=jnp.arange(n, dtype=jnp.int32),
+        valid=valid,
+    )

@@ -8,40 +8,70 @@ One engine "round" mirrors a service-unit iteration in the paper (Fig. 6):
   3. the backend emulates the storage data transfer (datapath.py) — CPU
      worker threads with map/unmap (baseline) or batched async DSA offload
   4. completions post when BOTH the target time has elapsed AND the copy is
-     done; the closed-loop client resubmits to the same SQ after think time
+     done; the workload generator decides what each completed slot submits
+     next (closed-loop resubmit, open-loop arrival, or nothing for replays)
 
-Two time domains are tracked: *virtual time* (the emulated device's event
-time — fidelity metrics: IOPS, latency vs. the modeled SSD) and the engine's
-own *wall-clock throughput* (measured by benchmarks around ``run``).
+Stages 2-4 are the shared ``DevicePipeline`` (device.py) — the identical
+code path ``StorageClient`` prices application reads with. Two time domains
+are tracked: *virtual time* (the emulated device's event time — fidelity
+metrics: IOPS, latency vs. the modeled SSD) and the engine's own
+*wall-clock throughput* (measured by benchmarks around ``run``).
+
+A multi-drive array is the same jit program ``vmap``-ed over a leading
+device axis: ``simulate(..., num_devices=M)`` emulates M independent drives
+(per-device salted workload streams) in one XLA computation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import datapath, frontend, timing
+from repro.core import frontend
+from repro.core.device import DevicePipeline, DeviceState
+from repro.core import datapath
 from repro.core.frontend import SQRings
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
-    RequestBatch,
     SSDConfig,
-    TimingState,
     WorkloadConfig,
 )
+from repro.workloads import Workload, as_workload
 
 FAR = 3e38  # python float: jnp module constants leak into jaxprs
 
+# Fixed log-spaced latency histogram: HIST_BUCKETS buckets spanning
+# [HIST_LO_US, HIST_LO_US * 10**HIST_DECADES) microseconds; under- and
+# overflow clamp to the edge buckets.
+HIST_BUCKETS = 64
+HIST_LO_US = 1.0
+HIST_DECADES = 5.0
 
-def _hash_u32(x: jax.Array) -> jax.Array:
-    """xorshift-style integer hash (deterministic per-request randomness)."""
-    x = x.astype(jnp.uint32)
-    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
-    return x ^ (x >> 16)
+
+def latency_bucket(lat_us: jax.Array) -> jax.Array:
+    """Histogram bucket index for an E2E latency (elementwise)."""
+    lg = jnp.log10(jnp.maximum(lat_us, 1e-6)) - jnp.log10(
+        jnp.float32(HIST_LO_US)
+    )
+    idx = jnp.clip(lg * (HIST_BUCKETS / HIST_DECADES), 0, HIST_BUCKETS - 1)
+    return idx.astype(jnp.int32)
+
+
+def hist_percentile(hist: jax.Array, q: float) -> jax.Array:
+    """Approximate latency percentile from (possibly device-stacked) hist.
+
+    Leading axes (e.g. a vmap device axis) are summed away, so array runs
+    report the aggregate distribution. Returns the geometric midpoint of the
+    first bucket where the CDF reaches ``q``.
+    """
+    h = hist.reshape(-1, HIST_BUCKETS).sum(axis=0)
+    c = jnp.cumsum(h)
+    idx = jnp.argmax(c >= q * c[-1])
+    return jnp.float32(HIST_LO_US) * 10 ** (
+        (idx.astype(jnp.float32) + 0.5) * HIST_DECADES / HIST_BUCKETS
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -54,11 +84,15 @@ class Metrics:
     sum_proc: jax.Array       # f32 us   (copy-ready - dispatch)
     last_completion: jax.Array  # f32 us  max completion time seen
     first_submit: jax.Array   # f32 us   min submit time seen
+    lat_hist: jax.Array       # (HIST_BUCKETS,) f32 E2E latency histogram
 
     @staticmethod
     def zero() -> "Metrics":
         z = jnp.float32(0)
-        return Metrics(z, z, z, z, z, jnp.float32(0), FAR)
+        return Metrics(
+            z, z, z, z, z, jnp.float32(0), FAR,
+            jnp.zeros((HIST_BUCKETS,), jnp.float32),
+        )
 
     def iops(self) -> jax.Array:
         """Virtual-time sustained IOPS (requests per emulated second)."""
@@ -74,60 +108,57 @@ class Metrics:
     def avg_proc_us(self) -> jax.Array:
         return self.sum_proc / jnp.maximum(self.completed, 1.0)
 
+    def p50_us(self) -> jax.Array:
+        return hist_percentile(self.lat_hist, 0.50)
+
+    def p95_us(self) -> jax.Array:
+        return hist_percentile(self.lat_hist, 0.95)
+
+    def p99_us(self) -> jax.Array:
+        return hist_percentile(self.lat_hist, 0.99)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EngineState:
     rings: SQRings
-    tstate: TimingState
-    disp_time: jax.Array   # (U,) dispatcher busy-until
-    work_time: jax.Array   # (U, W) baseline worker lanes busy-until
-    dsa_time: jax.Array    # (U,) DSA engine busy-until
-    lock_time: jax.Array   # ()  global timing-lock busy-until
-    map_time: jax.Array    # ()  global map/unmap-lock busy-until
+    device: DeviceState    # the unified pipeline's virtual-time state
     clock: jax.Array       # ()  virtual now
     flash: jax.Array       # (num_blocks, block_words) emulated flash
     bufs: jax.Array        # (num_bufs, block_words) I/O buffers
     req_counter: jax.Array  # i32 next request id
+    salt: jax.Array        # i32 per-device workload salt (array emulation)
+    last_submit: jax.Array  # (Q,) f32 newest submit time posted per SQ —
+                            # the anchor open-loop arrival chains extend
     metrics: Metrics
 
 
 # ---------------------------------------------------------------------------
-# Workload initialization (fio / BaM closed loop).
+# Workload initialization.
 # ---------------------------------------------------------------------------
 
 def init_state(
     cfg: EngineConfig,
     ssd: SSDConfig,
-    wl: WorkloadConfig,
+    wl: "Workload | WorkloadConfig",
     block_words: int = 16,
+    salt: "jax.Array | int" = 0,
 ) -> EngineState:
-    """Build rings pre-filled with ``io_depth`` entries per SQ at t~0."""
+    """Build rings pre-filled from the workload generator at t~0.
+
+    ``salt`` differentiates the request streams of the devices in a vmapped
+    multi-SSD array (pass the device index).
+    """
+    wl = as_workload(wl)
     q, dep = cfg.num_sqs, cfg.sq_depth
-    if wl.io_depth > dep:
-        raise ValueError("io_depth exceeds SQ depth")
     rings = SQRings.empty(q, dep)
 
-    d = wl.io_depth
-    req_id = (
-        jnp.arange(q, dtype=jnp.int32)[:, None] * d
-        + jnp.arange(d, dtype=jnp.int32)[None, :]
-    )
-    h = _hash_u32(req_id)
-    lba = (h % jnp.uint32(ssd.num_blocks)).astype(jnp.int32)
-    opcode = (
-        (_hash_u32(req_id + 7919) % jnp.uint32(1000)).astype(jnp.float32)
-        >= wl.read_frac * 1000
-    ).astype(jnp.int32)
-    # Stagger submissions by a few ns to define a total order at t≈0.
-    submit = (
-        jnp.arange(d, dtype=jnp.float32)[None, :] * 1e-3
-        + jnp.arange(q, dtype=jnp.float32)[:, None] * 1e-5
-    )
-    buf_id = (req_id % cfg.num_bufs).astype(jnp.int32)
-    valid = jnp.ones((q, d), bool)
+    pre = wl.prefill(cfg, ssd, salt)
+    n_pre = pre.req_id.shape[0] * pre.req_id.shape[1]
+    buf_id = (pre.req_id % cfg.num_bufs).astype(jnp.int32)
     rings = frontend.submit_grouped(
-        rings, submit, opcode, lba, jnp.ones_like(lba), buf_id, req_id, valid
+        rings, pre.submit, pre.opcode, pre.lba, pre.nblocks, buf_id,
+        pre.req_id, pre.valid,
     )
 
     nb = ssd.num_blocks if cfg.emulate_data else 1
@@ -137,19 +168,19 @@ def init_state(
         + jnp.arange(block_words, dtype=jnp.float32)[None, :] / block_words
     )
     bufs = jnp.zeros((nbuf, block_words), jnp.float32)
-    u = cfg.num_units if cfg.frontend == "distributed" else 1
+    pipe = DevicePipeline(cfg, ssd, PlatformModel())
+    last_submit = jnp.max(
+        jnp.where(pre.valid, pre.submit, 0.0), axis=1
+    )
     return EngineState(
         rings=rings,
-        tstate=TimingState.init(ssd.n_instances),
-        disp_time=jnp.zeros((u,), jnp.float32),
-        work_time=jnp.zeros((u, cfg.workers_per_unit), jnp.float32),
-        dsa_time=jnp.zeros((u,), jnp.float32),
-        lock_time=jnp.float32(0),
-        map_time=jnp.float32(0),
+        device=pipe.init_state(),
         clock=jnp.float32(0),
         flash=flash,
         bufs=bufs,
-        req_counter=jnp.int32(q * d),
+        req_counter=jnp.int32(n_pre),
+        salt=jnp.asarray(salt, jnp.int32),
+        last_submit=last_submit,
         metrics=Metrics.zero(),
     )
 
@@ -158,121 +189,42 @@ def init_state(
 # The engine round.
 # ---------------------------------------------------------------------------
 
-def _lock_pass(
-    lock_time: jax.Array,
-    batch_ready: jax.Array,   # (U,) time each unit's batch is ready
-    n_valid_u: jax.Array,     # (U,) valid requests per unit
-    cfg: EngineConfig,
-    plat: PlatformModel,
-) -> Tuple[jax.Array, jax.Array]:
-    """Serialize dispatchers on the global timing-model lock.
-
-    Returns (lock_time', lock_done (U,)). Units acquire in index order after
-    their batch is ready. Cost = per-request (baseline) or per-batch
-    (aggregated). Local timing scope has no shared lock at all.
-    """
-    if cfg.timing_scope == "local":
-        return lock_time, batch_ready
-    if cfg.mode == "per_request":
-        cost = n_valid_u.astype(jnp.float32) * plat.lock_per_req_us
-    else:
-        cost = jnp.where(n_valid_u > 0, plat.lock_per_batch_us, 0.0)
-
-    def step(t, x):
-        ready, c = x
-        done = jnp.maximum(t, ready) + c
-        return done, done
-
-    lock_end, lock_done = jax.lax.scan(step, lock_time, (batch_ready, cost))
-    return lock_end, lock_done
-
-
 def engine_round(
     state: EngineState,
     cfg: EngineConfig,
     ssd: SSDConfig,
-    wl: WorkloadConfig,
+    wl: "Workload | WorkloadConfig",
     plat: PlatformModel,
 ) -> EngineState:
+    wl = as_workload(wl)
+    pipe = DevicePipeline(cfg, ssd, plat)
     q, f = cfg.num_sqs, cfg.fetch_width
-    u = state.disp_time.shape[0]
+    u = state.device.num_units
     per_unit_rows = q * f // u
 
     # -- 1. frontend fetch ---------------------------------------------------
     if cfg.frontend == "distributed":
         rings, disp_time, batch, fetch_done = frontend.fetch_distributed(
-            state.rings, state.clock, state.disp_time, cfg, plat
+            state.rings, state.clock, state.device.disp_time, cfg, plat
         )
     else:
         rings, disp_time, batch, fetch_done = frontend.fetch_centralized(
-            state.rings, state.clock, state.disp_time, cfg, plat
+            state.rings, state.clock, state.device.disp_time, cfg, plat
         )
     submit_t = batch.arrival                       # provisional = submit time
     n = batch.valid.shape[0]
-    row_unit = jnp.arange(n, dtype=jnp.int32) // per_unit_rows
+    unit = jnp.arange(n, dtype=jnp.int32) // per_unit_rows
 
-    # -- 2. timing model under the global lock -------------------------------
-    n_valid_u = jax.ops.segment_sum(
-        batch.valid.astype(jnp.int32), row_unit, num_segments=u
-    )
-    batch_ready = jax.ops.segment_max(
-        jnp.where(batch.valid, fetch_done, 0.0), row_unit, num_segments=u
-    )
-    lock_time, lock_done = _lock_pass(
-        state.lock_time, batch_ready, n_valid_u, cfg, plat
-    )
-    disp_time = jnp.maximum(disp_time, lock_done)
+    # -- 2+3. the unified device pipeline (timing + data path) ---------------
+    dev = dataclasses.replace(state.device, disp_time=disp_time)
+    dev, res = pipe.process(dev, batch, fetch_done, unit)
 
-    arrival = jnp.maximum(fetch_done, lock_done[row_unit])
-    tbatch = dataclasses.replace(batch, arrival=arrival)
-    if cfg.timing_scope == "local":
-        # Paper's rejected design: per-unit state, 1/U capacity each.
-        k_u = max(ssd.n_instances // u, 1)
-        local_ssd = ssd.replace(t_max_iops=ssd.t_max_iops / u, n_instances=k_u)
-        bu = state.tstate.busy_until.reshape(u, -1)
-        rr_u = jnp.broadcast_to(state.tstate.rr, (u,))
-
-        def per_unit(bu_u, rr_1, val_u, arr_u):
-            inst_u, rr_2 = timing.assign_rr(rr_1, val_u, k_u)
-            comp, nb = timing.aggregated_batch_times(
-                bu_u, arr_u, inst_u, val_u, local_ssd
-            )
-            return nb, rr_2, comp
-
-        nb, rr_new, comp = jax.vmap(per_unit)(
-            bu, rr_u, batch.valid.reshape(u, -1), arrival.reshape(u, -1)
-        )
-        tstate = TimingState(nb.reshape(-1), rr_new[0])
-        target = comp.reshape(-1)
-    else:
-        tstate, target = timing.update(state.tstate, tbatch, ssd, cfg.mode)
-
-    # -- 3. backend data transfer --------------------------------------------
-    if cfg.batched_datapath:
-        # DSA engine also carried the fetch transfer (engine sharing /
-        # interference, paper Fig. 9b): bump cursors by fetch bytes.
-        fetch_bytes_u = jax.ops.segment_sum(
-            jnp.where(batch.valid, jnp.float32(plat.sqe_bytes), 0.0),
-            row_unit, num_segments=u,
-        )
-        dsa_time0 = state.dsa_time + fetch_bytes_u / plat.dsa_bytes_per_us
-        dsa_time, ready = datapath.dsa_worker_times(
-            dsa_time0, arrival, batch, cfg, plat, ssd
-        )
-        work_time = state.work_time
-        map_time = state.map_time
-    else:
-        work_time, map_time, ready = datapath.baseline_worker_times(
-            state.work_time, state.map_time, arrival, batch, cfg, plat, ssd
-        )
-        dsa_time = state.dsa_time
-
-    # -- 4. completion --------------------------------------------------------
-    done = jnp.maximum(target, ready)
+    # -- 4. completion metrics ------------------------------------------------
     valid = batch.valid
+    done = res.done
     e2e = jnp.where(valid, done - submit_t, 0.0)
-    tgt_lat = jnp.where(valid, target - arrival, 0.0)
-    proc = jnp.where(valid, ready - arrival, 0.0)
+    tgt_lat = jnp.where(valid, res.target - res.arrival, 0.0)
+    proc = jnp.where(valid, res.ready - res.arrival, 0.0)
     nvalid = jnp.sum(valid.astype(jnp.float32))
     m = state.metrics
     metrics = Metrics(
@@ -287,6 +239,10 @@ def engine_round(
         first_submit=jnp.minimum(
             m.first_submit, jnp.min(jnp.where(valid, submit_t, FAR))
         ),
+        lat_hist=m.lat_hist + jax.ops.segment_sum(
+            valid.astype(jnp.float32), latency_bucket(e2e),
+            num_segments=HIST_BUCKETS,
+        ),
     )
 
     # -- 5. functional data movement ------------------------------------------
@@ -295,15 +251,21 @@ def engine_round(
         bufs = datapath.apply_reads(flash, bufs, batch, cfg.use_pallas)
         flash = datapath.apply_writes(flash, bufs, batch)
 
-    # -- 6. closed-loop resubmission -------------------------------------------
+    # -- 6. workload-driven resubmission ---------------------------------------
     new_req = state.req_counter + jnp.arange(n, dtype=jnp.int32)
-    h = _hash_u32(new_req)
-    new_lba = (h % jnp.uint32(ssd.num_blocks)).astype(jnp.int32)
-    new_op = (
-        (_hash_u32(new_req + 7919) % jnp.uint32(1000)).astype(jnp.float32)
-        >= wl.read_frac * 1000
-    ).astype(jnp.int32)
-    resub_t = jnp.where(valid, done + wl.resubmit_delay_us, FAR)
+    new_lba = wl.address(new_req, ssd, state.salt)
+    new_op = wl.opcode(new_req, state.salt)
+    anchor = jnp.repeat(state.last_submit, f)
+    resub_t, resub_valid = wl.next_submit(
+        new_req, done, valid, anchor, cfg, ssd, state.salt
+    )
+    resub_t = jnp.where(resub_valid, resub_t, FAR)
+    last_submit = jnp.maximum(
+        state.last_submit,
+        jnp.max(
+            jnp.where(resub_valid, resub_t, 0.0).reshape(q, f), axis=1
+        ),
+    )
     # Rows are SQ-major (q, f); sort each SQ's resubmissions by time.
     rt = resub_t.reshape(q, f)
     order = jnp.argsort(rt, axis=1)
@@ -320,7 +282,7 @@ def engine_round(
         pick(jnp.ones((n,), jnp.int32)),
         pick(batch.buf_id),
         pick(new_req),
-        pick(valid),
+        pick(resub_valid),
     )
 
     # -- 7. clock advance ------------------------------------------------------
@@ -338,10 +300,9 @@ def engine_round(
     clock = jnp.where(nxt < FAR, jnp.maximum(stepped, nxt), stepped)
 
     return EngineState(
-        rings=rings, tstate=tstate, disp_time=disp_time,
-        work_time=work_time, dsa_time=dsa_time, lock_time=lock_time,
-        map_time=map_time, clock=clock, flash=flash, bufs=bufs,
-        req_counter=state.req_counter + jnp.int32(n), metrics=metrics,
+        rings=rings, device=dev, clock=clock, flash=flash, bufs=bufs,
+        req_counter=state.req_counter + jnp.int32(n), salt=state.salt,
+        last_submit=last_submit, metrics=metrics,
     )
 
 
@@ -349,11 +310,12 @@ def run(
     state: EngineState,
     cfg: EngineConfig,
     ssd: SSDConfig,
-    wl: WorkloadConfig,
+    wl: "Workload | WorkloadConfig",
     plat: PlatformModel,
     rounds: int,
 ) -> EngineState:
     """Run ``rounds`` engine rounds under jit (lax.scan over rounds)."""
+    wl = as_workload(wl)
 
     def body(s, _):
         return engine_round(s, cfg, ssd, wl, plat), None
@@ -363,10 +325,11 @@ def run(
 
 
 def make_runner(
-    cfg: EngineConfig, ssd: SSDConfig, wl: WorkloadConfig, plat: PlatformModel,
+    cfg: EngineConfig, ssd: SSDConfig, wl, plat: PlatformModel,
     rounds: int,
 ):
     """jit-compiled engine runner with static configs baked in."""
+    wl = as_workload(wl)
 
     @jax.jit
     def _run(state: EngineState) -> EngineState:
@@ -375,15 +338,68 @@ def make_runner(
     return _run
 
 
+def make_array_runner(
+    cfg: EngineConfig, ssd: SSDConfig, wl, plat: PlatformModel,
+    rounds: int,
+):
+    """jit-compiled M-drive array runner: ``run`` vmapped over the leading
+    device axis of a stacked EngineState — one XLA program per array."""
+    wl = as_workload(wl)
+
+    @jax.jit
+    def _run(states: EngineState) -> EngineState:
+        return jax.vmap(
+            lambda s: run(s, cfg, ssd, wl, plat, rounds)
+        )(states)
+
+    return _run
+
+
+def init_array_state(
+    cfg: EngineConfig,
+    ssd: SSDConfig,
+    wl: "Workload | WorkloadConfig",
+    num_devices: int,
+    block_words: int = 16,
+) -> EngineState:
+    """Stacked EngineState for an M-drive array (device axis leading).
+
+    Each drive gets a distinct workload salt, so salt-aware generators
+    (closed loop, Poisson, Zipf) serve M independent request streams.
+    ``TraceReplay`` ignores the salt and replays the *same* trace on every
+    drive — aggregate numbers then measure M copies of one stream, not an
+    M-way-striped trace.
+    """
+    wl = as_workload(wl)
+    return jax.vmap(
+        lambda salt: init_state(cfg, ssd, wl, block_words, salt=salt)
+    )(jnp.arange(num_devices, dtype=jnp.int32))
+
+
+def aggregate_iops(state: EngineState) -> jax.Array:
+    """Array-aggregate virtual IOPS: sum of per-device sustained rates."""
+    return jnp.sum(state.metrics.iops())
+
+
 def simulate(
     cfg: EngineConfig,
     ssd: SSDConfig,
-    wl: WorkloadConfig,
+    wl: "Workload | WorkloadConfig",
     plat: PlatformModel | None = None,
     rounds: int = 64,
     block_words: int = 16,
+    num_devices: int = 1,
 ) -> EngineState:
-    """Convenience: init + run. Returns the final state."""
+    """Convenience: init + run. Returns the final state.
+
+    With ``num_devices=M > 1`` the returned EngineState has a leading (M,)
+    device axis on every leaf (an emulated M-drive array, one jit program);
+    aggregate throughput is ``aggregate_iops(state)`` and the histogram
+    percentiles already pool across drives.
+    """
     plat = plat or PlatformModel()
-    state = init_state(cfg, ssd, wl, block_words)
-    return make_runner(cfg, ssd, wl, plat, rounds)(state)
+    if num_devices == 1:
+        state = init_state(cfg, ssd, wl, block_words)
+        return make_runner(cfg, ssd, wl, plat, rounds)(state)
+    states = init_array_state(cfg, ssd, wl, num_devices, block_words)
+    return make_array_runner(cfg, ssd, wl, plat, rounds)(states)

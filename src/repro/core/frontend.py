@@ -288,6 +288,58 @@ def fetch_cost(
     return jnp.where(nfetch > 0, cost, plat.doorbell_poll_us)
 
 
+def direct_fetch_times(
+    disp_time: jax.Array,        # (U,) f32 dispatcher busy-until cursors
+    t_submit: jax.Array,         # (N,) f32 virtual submission times
+    valid: jax.Array,            # (N,) bool
+    cfg: EngineConfig,
+    plat: PlatformModel,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ring-less frontend for directly submitted batches (StorageClient).
+
+    Applications issue a flat batch with no SQ machinery: requests are dealt
+    round-robin to the ``U`` service units in contiguous runs, and each
+    unit's dispatcher streams them in — one coalesced transaction per
+    ``fetch_width`` entries (CQR-contiguous bulk transfer) or one
+    transaction per entry when coalescing is off. Cost parameters are the
+    same per-entry/coalesced fetch model as the ring frontends.
+
+    Returns (fetch_done (N,), disp_time' (U,), unit (N,)); ``unit`` is
+    non-decreasing, as the datapath stage requires.
+    """
+    n = t_submit.shape[0]
+    u = disp_time.shape[0]
+    per_unit = -(-n // u)  # ceil
+    idx = jnp.arange(n, dtype=jnp.int32)
+    unit = idx // per_unit
+    rank = idx % per_unit
+    if cfg.transport == "host":
+        txn = jnp.float32(plat.host_txn_base_us)
+        bw = jnp.float32(plat.host_bytes_per_us)
+    else:
+        txn = jnp.float32(plat.txn_base_us)
+        bw = jnp.float32(plat.link_bytes_per_us)
+    start = jnp.maximum(t_submit, disp_time[unit])
+    if cfg.coalesced:
+        # One transaction per fetch_width entries per unit; entries become
+        # visible progressively as the bulk transfer streams.
+        n_txn = rank // cfg.fetch_width + 1
+        fetch_done = (
+            start
+            + n_txn.astype(jnp.float32) * txn
+            + (rank + 1).astype(jnp.float32) * plat.sqe_bytes / bw
+        )
+    else:
+        fetch_done = (
+            start + (rank + 1).astype(jnp.float32) * _per_entry_cost(cfg, plat)
+        )
+    fetch_done = jnp.where(valid, fetch_done, 0.0)
+    disp_time = jnp.maximum(
+        jax.ops.segment_max(fetch_done, unit, num_segments=u), disp_time
+    )
+    return fetch_done, disp_time, unit
+
+
 def _visible_count(rings: SQRings, clock: jax.Array, f: int) -> jax.Array:
     """How many contiguous head entries of each SQ were posted by ``clock``.
 

@@ -160,6 +160,38 @@ def aggregated_update(
     return TimingState(new_busy, rr), completion
 
 
+def local_scope_update(
+    state: TimingState,
+    arrival: jax.Array,     # (N,) f32, N % num_units == 0, unit-major
+    valid: jax.Array,       # (N,) bool
+    ssd: SSDConfig,
+    num_units: int,
+) -> Tuple[TimingState, jax.Array]:
+    """Paper's rejected design (§IV-D ablation): per-unit timing state.
+
+    Each service unit owns a 1/U slice of the device's scheduling instances
+    and capacity, so skewed load caps at 1/U of the target. Rows must be
+    unit-major with equal counts per unit. Returns (state', completion).
+    """
+    u = num_units
+    k_u = max(ssd.n_instances // u, 1)
+    local_ssd = ssd.replace(t_max_iops=ssd.t_max_iops / u, n_instances=k_u)
+    bu = state.busy_until.reshape(u, -1)
+    rr_u = jnp.broadcast_to(state.rr, (u,))
+
+    def per_unit(bu_u, rr_1, val_u, arr_u):
+        inst_u, rr_2 = assign_rr(rr_1, val_u, k_u)
+        comp, nb = aggregated_batch_times(
+            bu_u, arr_u, inst_u, val_u, local_ssd
+        )
+        return nb, rr_2, comp
+
+    nb, rr_new, comp = jax.vmap(per_unit)(
+        bu, rr_u, valid.reshape(u, -1), arrival.reshape(u, -1)
+    )
+    return TimingState(nb.reshape(-1), rr_new[0]), comp.reshape(-1)
+
+
 # ---------------------------------------------------------------------------
 # Distributed global timing model (one collective per batch).
 # ---------------------------------------------------------------------------

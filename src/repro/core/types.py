@@ -167,6 +167,39 @@ class EngineConfig:
     emulate_data: bool = True         # perform functional block copies
     use_pallas: bool = False          # Pallas kernels (TPU) vs jnp reference
 
+    def __post_init__(self) -> None:
+        if self.num_sqs < 1 or self.sq_depth < 1:
+            raise ValueError(
+                f"num_sqs={self.num_sqs} and sq_depth={self.sq_depth} "
+                "must be >= 1"
+            )
+        if self.num_units < 1 or self.workers_per_unit < 1:
+            raise ValueError(
+                f"num_units={self.num_units} and workers_per_unit="
+                f"{self.workers_per_unit} must be >= 1"
+            )
+        if self.fetch_width < 1 or self.fetch_width > self.sq_depth:
+            raise ValueError(
+                f"fetch_width={self.fetch_width} must be in "
+                f"[1, sq_depth={self.sq_depth}] — a dispatcher cannot fetch "
+                "more entries than a ring holds"
+            )
+        if self.frontend not in ("distributed", "centralized"):
+            raise ValueError(f"unknown frontend: {self.frontend!r}")
+        if self.mode not in ("aggregated", "per_request"):
+            raise ValueError(f"unknown timing mode: {self.mode!r}")
+        if self.timing_scope not in ("global", "local"):
+            raise ValueError(f"unknown timing_scope: {self.timing_scope!r}")
+        if self.transport not in ("p2p", "host"):
+            raise ValueError(f"unknown transport: {self.transport!r}")
+        units = self.num_units if self.frontend == "distributed" else 1
+        if self.num_sqs % units != 0:
+            raise ValueError(
+                f"num_sqs={self.num_sqs} must be divisible by num_units="
+                f"{units} — SQs are statically partitioned across service "
+                "units (a remainder would silently mis-shape the fetch batch)"
+            )
+
     def replace(self, **kw: Any) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
 

@@ -59,7 +59,7 @@ class TierState:
 
 def init_tier(ssd: SSDConfig, ecfg: EngineConfig) -> TierState:
     return TierState(
-        client=ClientState.init(ssd, ecfg.num_units),
+        client=StorageClient(ssd, ecfg).init_state(),
         clock=jnp.float32(0),
     )
 

@@ -1,0 +1,18 @@
+"""Workload generators for the SwarmIO-JAX emulation engine."""
+from repro.workloads.base import Prefill, Workload, as_workload
+from repro.workloads.generators import (
+    ClosedLoop,
+    PoissonOpenLoop,
+    TraceReplay,
+    ZipfClosedLoop,
+)
+
+__all__ = [
+    "Prefill",
+    "Workload",
+    "as_workload",
+    "ClosedLoop",
+    "PoissonOpenLoop",
+    "TraceReplay",
+    "ZipfClosedLoop",
+]

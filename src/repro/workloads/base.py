@@ -1,0 +1,146 @@
+"""Workload abstraction for the emulation engine.
+
+A ``Workload`` is a *static* (non-pytree) generator object whose methods are
+jit-traceable. It owns the three decisions the engine used to hard-code:
+
+  * ``prefill``     — what sits in the SQ rings at t=0
+  * ``address`` / ``opcode`` — the request stream's content
+  * ``next_submit`` — when (if ever) a completed slot produces the next
+                      submission: closed loops key off the completion time,
+                      open loops key off the previous *arrival* time (arrival
+                      process independent of service), replays never resubmit.
+
+Determinism: all randomness is counter-based (xorshift hash of the request
+id, the workload seed, and a per-device ``salt``), so workloads are
+reproducible, vmap-able across emulated devices, and need no PRNG state
+threaded through the engine loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EngineConfig, SSDConfig, WorkloadConfig
+
+FAR = 3e38  # python float: jnp module constants leak into jaxprs
+
+
+def hash_u32(x: jax.Array) -> jax.Array:
+    """xorshift-style integer hash (deterministic per-request randomness)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def uniform01(h: jax.Array) -> jax.Array:
+    """Map a u32 hash to (0, 1) — open at both ends (safe for log)."""
+    return (h.astype(jnp.float32) + 0.5) / 4294967296.0
+
+
+class Prefill(NamedTuple):
+    """Entries pre-posted into the SQ rings at t=0; all arrays are (Q, L)."""
+
+    submit: jax.Array   # f32 virtual submission times (row-sorted)
+    opcode: jax.Array   # i32
+    lba: jax.Array      # i32
+    nblocks: jax.Array  # i32
+    req_id: jax.Array   # i32
+    valid: jax.Array    # bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Base closed-loop-shaped workload; subclasses override the hooks."""
+
+    io_depth: int = 64            # outstanding requests per SQ
+    read_frac: float = 1.0        # fraction of reads
+    seed: int = 0
+
+    # -- counter-based randomness -------------------------------------------
+    def _key(self, req_id: jax.Array, salt: jax.Array | int,
+             stream: int = 0) -> jax.Array:
+        base = (
+            req_id.astype(jnp.uint32)
+            + jnp.uint32(self.seed) * jnp.uint32(0x9E3779B9)
+            + jnp.asarray(salt).astype(jnp.uint32) * jnp.uint32(0x632BE5AB)
+            + jnp.uint32(stream) * jnp.uint32(7919)
+        )
+        return hash_u32(base)
+
+    # -- request-content hooks ----------------------------------------------
+    def address(self, req_id: jax.Array, ssd: SSDConfig,
+                salt: jax.Array | int = 0) -> jax.Array:
+        """Uniform-random LBAs."""
+        h = self._key(req_id, salt)
+        return (h % jnp.uint32(ssd.num_blocks)).astype(jnp.int32)
+
+    def opcode(self, req_id: jax.Array,
+               salt: jax.Array | int = 0) -> jax.Array:
+        h = self._key(req_id, salt, stream=1)
+        return (
+            (h % jnp.uint32(1000)).astype(jnp.float32)
+            >= self.read_frac * 1000
+        ).astype(jnp.int32)
+
+    # -- lifecycle hooks -----------------------------------------------------
+    def prefill(self, cfg: EngineConfig, ssd: SSDConfig,
+                salt: jax.Array | int = 0) -> Prefill:
+        """``io_depth`` entries per SQ at t~0 (staggered for a total order)."""
+        q, d = cfg.num_sqs, self.io_depth
+        if d > cfg.sq_depth:
+            raise ValueError(
+                f"io_depth={d} exceeds sq_depth={cfg.sq_depth}"
+            )
+        req_id = (
+            jnp.arange(q, dtype=jnp.int32)[:, None] * d
+            + jnp.arange(d, dtype=jnp.int32)[None, :]
+        )
+        submit = (
+            jnp.arange(d, dtype=jnp.float32)[None, :] * 1e-3
+            + jnp.arange(q, dtype=jnp.float32)[:, None] * 1e-5
+        )
+        return Prefill(
+            submit=submit,
+            opcode=self.opcode(req_id, salt),
+            lba=self.address(req_id, ssd, salt),
+            nblocks=jnp.ones((q, d), jnp.int32),
+            req_id=req_id,
+            valid=jnp.ones((q, d), bool),
+        )
+
+    def next_submit(
+        self,
+        new_req: jax.Array,      # (N,) i32 ids of the would-be new requests
+        done: jax.Array,         # (N,) f32 completion time of the old request
+        valid: jax.Array,        # (N,) bool old request was real
+        anchor: jax.Array,       # (N,) f32 last submit time posted to the
+                                 #     row's SQ (open-loop arrival chaining)
+        cfg: EngineConfig,
+        ssd: SSDConfig,
+        salt: jax.Array | int = 0,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """When the slot's next submission occurs. Returns (time, valid).
+
+        Rows are SQ-major: ``N == num_sqs * fetch_width``, row ``i`` belongs
+        to SQ ``i // fetch_width``. Returned times must be non-decreasing
+        within each SQ's valid rows OR derived from ``done`` (the engine
+        sorts each SQ's batch, but cross-round order must be respected by
+        chaining open-loop arrivals off ``anchor``).
+        """
+        raise NotImplementedError
+
+
+def as_workload(wl: "Workload | WorkloadConfig") -> "Workload":
+    """Adapt a legacy ``WorkloadConfig`` to the closed-loop generator."""
+    if isinstance(wl, Workload):
+        return wl
+    from repro.workloads.generators import ClosedLoop
+
+    return ClosedLoop(
+        io_depth=wl.io_depth, read_frac=wl.read_frac, seed=wl.seed,
+        resubmit_delay_us=wl.resubmit_delay_us,
+    )

@@ -1,0 +1,181 @@
+"""The four workload generators.
+
+``ClosedLoop``    fio/BaM analogue: each slot resubmits after completion plus
+                  think time (the engine's original behavior, refactored in).
+``PoissonOpenLoop``  open-loop arrivals at a configured aggregate rate: each
+                  SQ is an independent Poisson process whose arrival times
+                  chain off the engine-tracked per-SQ anchor, independent of
+                  completions (latency grows without bound past saturation —
+                  the signature open-loop behavior the closed loop can't
+                  show).
+``ZipfClosedLoop``  closed loop with power-law (Zipf-like) LBA skew: a
+                  ``theta``-parameterized hot spot concentrating accesses on
+                  low addresses, for channel-imbalance studies paired with
+                  ``routing="lba_hash"``.
+``TraceReplay``   fixed-trace replay: a (time, lba, opcode) list is dealt
+                  round-robin across SQs at t=0 and never resubmits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EngineConfig, SSDConfig
+from repro.workloads.base import FAR, Prefill, Workload, uniform01
+
+
+@dataclasses.dataclass(frozen=True)
+class ClosedLoop(Workload):
+    """Closed-loop synthetic workload (fio / BaM analogue)."""
+
+    resubmit_delay_us: float = 1.0  # client think time after completion
+
+    def next_submit(self, new_req, done, valid, anchor, cfg, ssd,
+                    salt=0) -> Tuple[jax.Array, jax.Array]:
+        return done + jnp.float32(self.resubmit_delay_us), valid
+
+
+@dataclasses.dataclass(frozen=True)
+class ZipfClosedLoop(ClosedLoop):
+    """Closed loop with power-law address skew (Zipf-like hot spot).
+
+    Addresses follow P(lba <= x) = (x/N)^(1-theta): theta=0 is uniform,
+    theta→1 concentrates nearly all mass on the lowest addresses. (This is
+    the standard continuous hot-spot approximation of a Zipf popularity
+    distribution over blocks, inverse-CDF sampled so it stays hash-based.)
+    """
+
+    theta: float = 0.9
+
+    def address(self, req_id, ssd, salt=0):
+        if not 0.0 <= self.theta < 1.0:
+            raise ValueError(f"theta={self.theta} must be in [0, 1)")
+        u = uniform01(self._key(req_id, salt))
+        alpha = 1.0 / (1.0 - self.theta)
+        x = jnp.power(u, jnp.float32(alpha)) * ssd.num_blocks
+        return jnp.clip(x.astype(jnp.int32), 0, ssd.num_blocks - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonOpenLoop(Workload):
+    """Open-loop Poisson arrivals at ``rate_iops`` aggregate requests/s.
+
+    Each SQ carries an independent Poisson process of rate
+    ``rate_iops / num_sqs``: every posted arrival is the previous arrival in
+    that SQ plus an exponential gap, chained off the engine-tracked per-SQ
+    ``anchor`` — so arrival times never react to completions (open loop) and
+    stay time-sorted within each in-order ring. A completed ring slot merely
+    *materializes* the SQ's next pending arrival, which bounds in-flight
+    work at ``num_sqs * io_depth`` slots; past device saturation arrivals
+    outpace service and queueing latency grows without bound — the
+    signature open-loop behavior the closed loop can't show.
+    """
+
+    rate_iops: float = 1e6
+
+    def mean_gap_us(self, cfg: EngineConfig) -> float:
+        """Mean inter-arrival time within one SQ, in virtual us."""
+        return cfg.num_sqs / self.rate_iops * 1e6
+
+    def gap_us(self, req_id: jax.Array, cfg: EngineConfig,
+               salt: jax.Array | int = 0) -> jax.Array:
+        """Exponential inter-arrival sample for this request id."""
+        u = uniform01(self._key(req_id, salt, stream=2))
+        return -jnp.log(u) * jnp.float32(self.mean_gap_us(cfg))
+
+    def prefill(self, cfg, ssd, salt=0) -> Prefill:
+        base = super().prefill(cfg, ssd, salt)
+        # Chained per-SQ arrivals from t=0: cumulative exponential gaps.
+        submit = jnp.cumsum(self.gap_us(base.req_id, cfg, salt), axis=1)
+        return base._replace(submit=submit)
+
+    def next_submit(self, new_req, done, valid, anchor, cfg, ssd,
+                    salt=0) -> Tuple[jax.Array, jax.Array]:
+        # Rows are SQ-major (num_sqs, fetch_width): each SQ's m completed
+        # slots materialize its next m arrivals, chained off the anchor.
+        gaps = jnp.where(valid, self.gap_us(new_req, cfg, salt), 0.0)
+        chained = jnp.cumsum(
+            gaps.reshape(cfg.num_sqs, -1), axis=1
+        ).reshape(new_req.shape)
+        return anchor + chained, valid
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReplay(Workload):
+    """Replay a fixed (time, lba, opcode) trace; no resubmission.
+
+    The trace is time-sorted and dealt round-robin across SQs (entry i goes
+    to SQ ``i % num_sqs``), which preserves per-SQ time order. Build with
+    ``TraceReplay.from_trace``; the whole trace must fit in the rings.
+    """
+
+    submit: tuple = ()   # static nested tuples, one row per SQ — hashable
+    lba: tuple = ()
+    ops: tuple = ()
+    mask: tuple = ()
+
+    @staticmethod
+    def from_trace(
+        times_us, lbas, opcodes, cfg: EngineConfig
+    ) -> "TraceReplay":
+        times_us = np.asarray(times_us, np.float32)
+        lbas = np.asarray(lbas, np.int32)
+        opcodes = np.asarray(opcodes, np.int32)
+        if not (times_us.shape == lbas.shape == opcodes.shape):
+            raise ValueError("trace arrays must have identical shapes")
+        t = len(times_us)
+        q = cfg.num_sqs
+        length = max(-(-t // q), 1)
+        if length > cfg.sq_depth:
+            raise ValueError(
+                f"trace of {t} entries needs {length} slots/SQ but "
+                f"sq_depth={cfg.sq_depth}"
+            )
+        order = np.argsort(times_us, kind="stable")
+        sub = np.full((q, length), FAR, np.float32)
+        lb = np.zeros((q, length), np.int32)
+        op = np.zeros((q, length), np.int32)
+        va = np.zeros((q, length), bool)
+        j = np.arange(t)
+        rows, cols = j % q, j // q
+        sub[rows, cols] = times_us[order]
+        lb[rows, cols] = lbas[order]
+        op[rows, cols] = opcodes[order]
+        va[rows, cols] = True
+        tup = lambda a: tuple(tuple(r) for r in a.tolist())
+        return TraceReplay(
+            io_depth=length, submit=tup(sub), lba=tup(lb), ops=tup(op),
+            mask=tup(va),
+        )
+
+    @property
+    def num_requests(self) -> int:
+        return int(np.sum(np.asarray(self.mask)))
+
+    def prefill(self, cfg, ssd, salt=0) -> Prefill:
+        sub = jnp.asarray(self.submit, jnp.float32)
+        q, length = sub.shape
+        if q != cfg.num_sqs:
+            raise ValueError(
+                f"trace was built for {q} SQs, engine has {cfg.num_sqs}"
+            )
+        req_id = (
+            jnp.arange(q, dtype=jnp.int32)[:, None] * length
+            + jnp.arange(length, dtype=jnp.int32)[None, :]
+        )
+        return Prefill(
+            submit=sub,
+            opcode=jnp.asarray(self.ops, jnp.int32),
+            lba=jnp.asarray(self.lba, jnp.int32),
+            nblocks=jnp.ones((q, length), jnp.int32),
+            req_id=req_id,
+            valid=jnp.asarray(self.mask, bool),
+        )
+
+    def next_submit(self, new_req, done, valid, anchor, cfg, ssd,
+                    salt=0) -> Tuple[jax.Array, jax.Array]:
+        return jnp.full_like(done, FAR), jnp.zeros_like(valid)

@@ -11,6 +11,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [("starcoder2-3b", "train_4k")])
 def test_dryrun_cell_compiles(arch, shape, tmp_path):
     env = dict(os.environ)

@@ -6,6 +6,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRIVER = os.path.join(REPO, "tests", "elastic_driver.py")
 
@@ -21,12 +23,15 @@ def _run(phase, ckpt_dir):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_elastic_downsize_resume(tmp_path):
     a = _run("A", tmp_path)
     assert "PHASE_A_LOSSES" in a and "OK" in a
     b = _run("B", tmp_path)
     assert "PHASE_B_LOSSES" in b and "OK" in b
-    # Loss continues to decrease across the elastic restart.
+    # Loss continues to decrease across the elastic restart. Per-batch
+    # losses are noisy at these tiny step counts, so compare trajectory
+    # means rather than two individual batches.
     la = eval(a.split("PHASE_A_LOSSES", 1)[1].splitlines()[0])
     lb = eval(b.split("PHASE_B_LOSSES", 1)[1].splitlines()[0])
-    assert lb[-1] < la[0], (la, lb)
+    assert sum(lb) / len(lb) < sum(la) / len(la), (la, lb)

@@ -1,4 +1,6 @@
 """Engine integration tests: conservation, fidelity, configuration matrix."""
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -111,20 +113,13 @@ def test_timing_scope_local_vs_global_skew():
         st = engine.init_state(cfg, fast, WorkloadConfig(io_depth=256))
         # Zero out all SQs but 0 by pushing their submit times to infinity.
         far = jnp.full_like(st.rings.submit_time[1:], 3e38)
-        st = st.__class__(
-            rings=st.rings.__class__(
+        st = dataclasses.replace(
+            st,
+            rings=dataclasses.replace(
+                st.rings,
                 submit_time=st.rings.submit_time.at[1:].set(far),
-                opcode=st.rings.opcode, lba=st.rings.lba,
-                nblocks=st.rings.nblocks, buf_id=st.rings.buf_id,
-                req_id=st.rings.req_id,
-                head=st.rings.head,
                 tail=st.rings.tail.at[1:].set(st.rings.head[1:]),
             ),
-            tstate=st.tstate, disp_time=st.disp_time,
-            work_time=st.work_time, dsa_time=st.dsa_time,
-            lock_time=st.lock_time, map_time=st.map_time,
-            clock=st.clock, flash=st.flash,
-            bufs=st.bufs, req_counter=st.req_counter, metrics=st.metrics,
         )
         return engine.make_runner(cfg, fast, wl, PlatformModel(), 48)(st)
 

@@ -1,6 +1,10 @@
 """Property tests for the segmented-scan primitives."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep"
+)
+st = pytest.importorskip("hypothesis.strategies")
 import jax.numpy as jnp
 import numpy as np
 

@@ -5,12 +5,15 @@ back-to-back scheduling of requests on their target instances", §IV-D). Our
 segmented-(max,+)-scan closed form is exact, so we property-test equality
 against the sequential scan reference under hypothesis-generated workloads.
 """
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep"
+)
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import timing
 from repro.core.types import RequestBatch, SSDConfig, TimingState

@@ -45,3 +45,12 @@ def test_wider_beam_improves_recall_per_iteration():
     narrow = vs.case_study(n=1024, batch=16, width=1, iterations=12)
     wide = vs.case_study(n=1024, batch=16, width=8, iterations=12)
     assert wide["recall"] >= narrow["recall"]
+
+
+def test_multi_device_array_speeds_up_io_bound_search():
+    """Striping fetches over a 4-drive array relieves an I/O-bound search."""
+    solo = vs.case_study(n=1024, batch=64, width=4, t_max_iops=1e6)
+    arr = vs.case_study(n=1024, batch=64, width=4, t_max_iops=1e6,
+                        num_devices=4)
+    assert arr["qps"] > 1.5 * solo["qps"], (solo["qps"], arr["qps"])
+    assert arr["recall"] >= 0.8

@@ -1,0 +1,127 @@
+"""Workload-generator unit + integration tests (all four generators)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import workloads
+from repro.core import engine
+from repro.core.types import EngineConfig, SSDConfig, WorkloadConfig
+
+SSD = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
+                num_blocks=1 << 12)
+CFG = EngineConfig(num_sqs=8, sq_depth=256, fetch_width=32, num_units=4,
+                   emulate_data=False, num_bufs=512)
+
+
+def test_closed_loop_matches_legacy_workload_config():
+    """WorkloadConfig is adapted to ClosedLoop with identical behavior."""
+    legacy = engine.simulate(CFG, SSD, WorkloadConfig(io_depth=32), rounds=24)
+    new = engine.simulate(
+        CFG, SSD, workloads.ClosedLoop(io_depth=32), rounds=24
+    )
+    assert float(legacy.metrics.completed) == float(new.metrics.completed)
+    np.testing.assert_allclose(
+        float(legacy.metrics.sum_e2e), float(new.metrics.sum_e2e), rtol=1e-6
+    )
+
+
+def test_poisson_gap_mean():
+    """Exponential inter-arrival samples match the configured rate."""
+    wl = workloads.PoissonOpenLoop(io_depth=64, rate_iops=1e6)
+    gaps = wl.gap_us(jnp.arange(200_000), CFG)
+    want = CFG.num_sqs / 1e6 * 1e6  # per-SQ mean gap in us
+    assert float(gaps.mean()) == pytest.approx(want, rel=0.02)
+    # Exponential: std == mean.
+    assert float(gaps.std()) == pytest.approx(want, rel=0.05)
+
+
+def test_poisson_open_loop_sustains_offered_rate():
+    """Below device saturation the open loop delivers ~rate_iops."""
+    wl = workloads.PoissonOpenLoop(io_depth=64, rate_iops=1e6)
+    st = engine.simulate(CFG, SSD, wl, rounds=256)
+    assert float(st.metrics.iops()) == pytest.approx(1e6, rel=0.15)
+
+
+def test_poisson_open_loop_overload_blows_up_latency():
+    """Past saturation: throughput caps at T_max, latency grows unboundedly
+    (the open-loop signature a closed loop cannot produce)."""
+    wl = workloads.PoissonOpenLoop(io_depth=64, rate_iops=4e6)
+    st = engine.simulate(CFG, SSD, wl, rounds=256)
+    assert float(st.metrics.iops()) == pytest.approx(SSD.t_max_iops, rel=0.1)
+    assert float(st.metrics.avg_e2e_us()) > 5 * SSD.l_min_us
+    assert float(st.metrics.p99_us()) > float(st.metrics.p50_us())
+
+
+def test_zipf_skew_concentrates_mass():
+    """theta=0.9 puts most accesses on the lowest 10% of addresses."""
+    ids = jnp.arange(100_000)
+    hot = workloads.ZipfClosedLoop(theta=0.9).address(ids, SSD)
+    uni = workloads.ZipfClosedLoop(theta=0.0).address(ids, SSD)
+    cut = SSD.num_blocks // 10
+    hot_frac = float(jnp.mean((hot < cut).astype(jnp.float32)))
+    uni_frac = float(jnp.mean((uni < cut).astype(jnp.float32)))
+    assert hot_frac > 0.7, hot_frac
+    assert uni_frac == pytest.approx(0.1, abs=0.02)
+    assert int(hot.max()) < SSD.num_blocks
+
+
+def test_zipf_runs_through_engine_and_hurts_lba_hash_routing():
+    """Skewed addresses + address-hash routing underperform round-robin
+    (the channel-imbalance sensitivity the generator exists for)."""
+    wl = workloads.ZipfClosedLoop(io_depth=64, theta=0.95)
+    rr = engine.simulate(CFG, SSD, wl, rounds=48)
+    hashed = engine.simulate(
+        CFG, SSD.replace(routing="lba_hash"), wl, rounds=48
+    )
+    assert float(rr.metrics.completed) > 0
+    assert float(hashed.metrics.iops()) < float(rr.metrics.iops())
+
+
+def test_trace_replay_round_trip():
+    """Trace entries survive the ring round trip exactly and all complete."""
+    t = 512
+    rng = np.random.RandomState(0)
+    times = np.sort(rng.uniform(0, 400.0, t).astype(np.float32))
+    lbas = rng.randint(0, SSD.num_blocks, t).astype(np.int32)
+    ops = (rng.uniform(size=t) < 0.2).astype(np.int32)
+    wl = workloads.TraceReplay.from_trace(times, lbas, ops, CFG)
+    assert wl.num_requests == t
+
+    # Round trip: prefill -> flatten valid entries -> original trace order.
+    pre = wl.prefill(CFG, SSD)
+    sub = np.asarray(pre.submit)[np.asarray(pre.valid)]
+    lb = np.asarray(pre.lba)[np.asarray(pre.valid)]
+    op = np.asarray(pre.opcode)[np.asarray(pre.valid)]
+    order = np.argsort(sub, kind="stable")
+    np.testing.assert_allclose(sub[order], times, rtol=1e-6)
+    np.testing.assert_array_equal(lb[order], lbas)
+    np.testing.assert_array_equal(op[order], ops)
+
+    # Replay completes every request exactly once, then the rings drain.
+    st = engine.simulate(CFG, SSD, wl, rounds=96)
+    assert float(st.metrics.completed) == t
+    assert int(np.asarray(st.rings.tail - st.rings.head).sum()) == 0
+
+
+def test_trace_too_long_for_rings_raises():
+    small = CFG.replace(sq_depth=4, fetch_width=4)
+    with pytest.raises(ValueError, match="sq_depth"):
+        workloads.TraceReplay.from_trace(
+            np.arange(64.0), np.zeros(64), np.zeros(64), small
+        )
+
+
+def test_all_generators_run_through_simulate():
+    """The acceptance sweep: every generator executes under jit."""
+    gens = [
+        workloads.ClosedLoop(io_depth=16),
+        workloads.PoissonOpenLoop(io_depth=16, rate_iops=1e6),
+        workloads.ZipfClosedLoop(io_depth=16, theta=0.8),
+        workloads.TraceReplay.from_trace(
+            np.arange(128.0), np.arange(128) % SSD.num_blocks,
+            np.zeros(128), CFG,
+        ),
+    ]
+    for wl in gens:
+        st = engine.simulate(CFG, SSD, wl, rounds=24)
+        assert float(st.metrics.completed) > 0, type(wl).__name__
