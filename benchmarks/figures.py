@@ -149,8 +149,14 @@ def fig12_scalability(quick=False):
         best_iops = max(best_iops, float(out.metrics.iops()))
         rows.append(["wallclock", u, rps / 1e6, rps / base_rps,
                      float(out.metrics.iops()) / 1e6])
-    # (b) sustained virtual IOPS vs configured target.
-    targets = [10e6, 40e6] if quick else [5e6, 10e6, 20e6, 30e6, 40e6, 45e6]
+    # (b) sustained virtual IOPS vs configured target. The 45M point stays
+    # in the quick sweep: CI's bench-smoke job asserts the emulator still
+    # sustains >= 40 MIOPS virtual throughput there (scripts/
+    # check_bench_floor.py).
+    targets = (
+        [10e6, 40e6, 45e6] if quick
+        else [5e6, 10e6, 20e6, 30e6, 40e6, 45e6]
+    )
     for t in targets:
         ssd = C.FUTURE_40M.replace(t_max_iops=t)
         out = C.run_engine(C.swarmio_cfg(), ssd,
@@ -362,6 +368,82 @@ def fig18_workload_sweep(quick=False):
             "p99_us"], rows
 
 
+def fig19_write_mix(quick=False):
+    """Read/write mix sweep through the flash backend: programs serialize
+    per die and GC wakes once sustained writes drain the free pool — p99
+    inflates and throughput bends toward the program ceiling
+    (num_chips / program_us) as the write share grows."""
+    from repro import workloads
+
+    # A die array sized for the drive class (128 dies), benchmarked at
+    # steady state — the honest regime for sustained mixed traffic. The
+    # coarser poll quantum covers enough virtual time per round that the
+    # closed loop cycles its slots many times (write latencies spread
+    # resubmissions over hundreds of us, which the default 10us quantum
+    # would crawl through).
+    cfg = C.swarmio_cfg(poll_quantum_us=50.0)
+    ssd = C.D7_PS1010.replace(
+        num_blocks=1 << 14, num_channels=16, chips_per_channel=8
+    )
+    depth = 32 if quick else 64
+    rounds = 48 if quick else 192
+    mixes = [1.0, 0.7] if quick else [1.0, 0.9, 0.7, 0.5]
+    rows = []
+    for rf in mixes:
+        wl = workloads.SteadyStateMixed(io_depth=depth, read_frac=rf,
+                                        theta=0.9)
+        out = C.run_engine(cfg, ssd, wl, rounds=rounds)
+        m = out.metrics
+        rows.append([
+            rf, float(m.iops()) / 1e6, float(m.p50_us()),
+            float(m.p99_us()), float(out.device.flash.gc_count),
+        ])
+    ro, mix = rows[0], rows[-1]
+    print(f"fig19: p99 {ro[3]:.0f}us read-only -> {mix[3]:.0f}us at "
+          f"{mix[0]:.0%} reads ({mix[3]/max(ro[3], 1e-9):.1f}x, "
+          f"{mix[4]:.0f} GC invocations)")
+    return ["read_frac", "miops", "p50_us", "p99_us", "gc_invocations"], rows
+
+
+def fig20_steady_state(quick=False):
+    """Fresh vs steady-state drive under a 70/30 Zipf mix. The fresh drive
+    writes into free over-provisioned pages for the whole run; the
+    preconditioned drive starts fully written, so greedy GC fires from the
+    first write bursts — the fresh-drive numbers overstate sustained
+    performance."""
+    from repro import workloads
+
+    # Drive sized so the run's write volume crosses the steady-state
+    # drive's GC watermark while the fresh drive's much larger free pool
+    # (the whole physical space) stays untouched — the contrast is the
+    # figure.
+    cfg = C.swarmio_cfg(poll_quantum_us=50.0)
+    ssd = C.D7_PS1010.replace(
+        num_blocks=1 << 15, num_channels=16, chips_per_channel=8
+    )
+    depth = 32 if quick else 64
+    rounds = 48 if quick else 192
+    rows = []
+    for name, wl_cls in [
+        ("fresh", workloads.MixedReadWrite),
+        ("steady_state", workloads.SteadyStateMixed),
+    ]:
+        wl = wl_cls(io_depth=depth, read_frac=0.7, theta=0.9)
+        out = C.run_engine(cfg, ssd, wl, rounds=rounds)
+        m = out.metrics
+        rows.append([
+            name, float(m.iops()) / 1e6, float(m.p50_us()),
+            float(m.p99_us()), float(out.device.flash.gc_count),
+            float(out.device.flash.free_pages),
+        ])
+    fresh, steady = rows
+    print(f"fig20: fresh {fresh[1]:.2f} MIOPS p99={fresh[3]:.0f}us vs "
+          f"steady-state {steady[1]:.2f} MIOPS p99={steady[3]:.0f}us "
+          f"({steady[4]:.0f} GC invocations vs {fresh[4]:.0f})")
+    return ["drive", "miops", "p50_us", "p99_us", "gc_invocations",
+            "free_pages"], rows
+
+
 ALL = [
     ("fig03_frontend", fig03_frontend_plateau),
     ("fig04_per_request_overhead", fig04_per_request_overhead),
@@ -374,4 +456,6 @@ ALL = [
     ("fig16_vector_search", fig16_vector_search),
     ("fig17_array_scaling", fig17_array_scaling),
     ("fig18_workload_sweep", fig18_workload_sweep),
+    ("fig19_write_mix", fig19_write_mix),
+    ("fig20_steady_state", fig20_steady_state),
 ]

@@ -66,3 +66,22 @@ po = engine.simulate(cfg, ssd, open_wl, rounds=64)
 pm = po.metrics
 print(f"open-loop 24M : sustained {float(pm.iops())/1e6:.1f} MIOPS, "
       f"p99 {float(pm.p99_us()):.0f} us")
+
+# 7. Turn on the flash-level backend's hard cases: a 70/30 read/write mix
+#    on a steady-state (fully written) drive. Write programs serialize per
+#    chip and greedy GC steals die time once the free-page pool drains —
+#    watch the tail inflate relative to the read-only runs above.
+mixed = workloads.SteadyStateMixed(io_depth=1024, read_frac=0.7, theta=0.9)
+mx = engine.simulate(cfg, ssd, mixed, rounds=64)
+mm = mx.metrics
+print(f"70/30 steady  : {float(mm.iops())/1e6:.2f} MIOPS, "
+      f"p99 {float(mm.p99_us()):.0f} us, "
+      f"{float(mx.device.flash.gc_count):.0f} GC invocations")
+
+# 8. Cold mapping state: a 50% cached-mapping-table hit rate charges a
+#    translation-page read on every miss (the KV-SSD random-read story).
+cold = engine.simulate(
+    cfg, ssd.replace(mapping_hit_rate=0.5), wl, rounds=64
+)
+print(f"CMT 50% hits  : avg E2E {float(cold.metrics.avg_e2e_us()):.0f} us "
+      f"vs {float(m.avg_e2e_us()):.0f} us all-hit")

@@ -1,0 +1,63 @@
+"""CI bench-smoke gate: the emulator must still hit its headline number.
+
+Reads the fig12 scalability CSV produced by ``benchmarks/run.py`` and
+fails (exit 1) unless some fig12 point sustains at least ``--min-miops``
+of *virtual* throughput — the 40-MIOPS-class device the paper's
+IOPS-optimized targets are calibrated against. Wall-clock speed varies
+with the CI machine; virtual throughput must not, so a regression here
+means the device model or the engine got slower in emulated time, not
+that the runner was busy.
+
+    PYTHONPATH=src python scripts/check_bench_floor.py --min-miops 40
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+from pathlib import Path
+
+
+def best_virtual_miops(csv_path: Path) -> float:
+    best = 0.0
+    with csv_path.open() as f:
+        for row in csv.DictReader(f):
+            # Sustained rows carry virtual MIOPS in `miops`; wallclock
+            # rows carry it in `virtual_miops`.
+            cell = (
+                row["miops"]
+                if row.get("kind") == "sustained"
+                else row.get("virtual_miops", "")
+            )
+            try:
+                best = max(best, float(cell))
+            except ValueError:
+                continue
+    return best
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-miops", type=float, default=40.0)
+    ap.add_argument(
+        "--csv",
+        default="experiments/bench/fig12_scalability.csv",
+        help="fig12 CSV written by benchmarks/run.py",
+    )
+    args = ap.parse_args()
+
+    path = Path(args.csv)
+    if not path.exists():
+        print(f"FAIL: {path} missing — did the benchmark run?")
+        return 1
+    best = best_virtual_miops(path)
+    verdict = "OK" if best >= args.min_miops else "FAIL"
+    print(
+        f"{verdict}: best fig12 virtual throughput {best:.1f} MIOPS "
+        f"(floor {args.min_miops:.0f})"
+    )
+    return 0 if best >= args.min_miops else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Local dry-run of .github/workflows/ci.yml (act-equivalent).
+
+Parses the workflow and executes every ``run:`` step of every job in
+order, with the workflow's ``env:`` applied. Steps whose executable is
+not installed locally (e.g. ``ruff`` on a runtime-only box) are reported
+as SKIPPED rather than failed — CI still runs them; this script tells
+you everything that *can* be validated locally passes.
+
+    python scripts/ci_dryrun.py [job ...]
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import yaml
+
+REPO = Path(__file__).resolve().parent.parent
+WORKFLOW = REPO / ".github/workflows/ci.yml"
+
+
+def main() -> int:
+    wf = yaml.safe_load(WORKFLOW.read_text())
+    only = set(sys.argv[1:])
+    env = dict(os.environ)
+    env.update({k: str(v) for k, v in (wf.get("env") or {}).items()})
+
+    failed, skipped, ran = [], [], []
+    for job_name, job in wf["jobs"].items():
+        if only and job_name not in only:
+            continue
+        for step in job["steps"]:
+            cmd = step.get("run")
+            if cmd is None:
+                continue  # uses: actions are CI-side only
+            label = f"{job_name} / {step.get('name', cmd.split()[0])}"
+            tool = cmd.strip().split()[0]
+            if shutil.which(tool) is None:
+                print(f"SKIP  {label} ({tool} not installed here)")
+                skipped.append(label)
+                continue
+            if tool == "pip":
+                print(f"SKIP  {label} (no package installs in dry-run)")
+                skipped.append(label)
+                continue
+            print(f"RUN   {label}")
+            t0 = time.time()
+            proc = subprocess.run(cmd, shell=True, env=env, cwd=REPO)
+            dt = time.time() - t0
+            if proc.returncode != 0:
+                print(f"FAIL  {label} (exit {proc.returncode}, {dt:.0f}s)")
+                failed.append(label)
+            else:
+                print(f"PASS  {label} ({dt:.0f}s)")
+                ran.append(label)
+
+    print(
+        f"\nci dry-run: {len(ran)} passed, {len(skipped)} skipped, "
+        f"{len(failed)} failed"
+    )
+    for f in failed:
+        print(f"  FAILED: {f}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -109,12 +109,18 @@ def search(
     ecfg: EngineConfig | None = None,
     plat: PlatformModel | None = None,
     num_devices: int = 1,
+    write_back: bool = False,
 ) -> dict:
     """Returns results + virtual-time QPS accounting.
 
     ``num_devices > 1`` stripes the vector fetches round-robin over an
     emulated M-drive array (one vmapped pipeline — the dataset exceeds a
     single drive's IOPS budget long before it exceeds its capacity).
+
+    ``write_back=True`` persists each query's top-k result vectors to a
+    result-log region through the same storage client after the search —
+    the writes are priced by the full pipeline (flash program latency and
+    GC back-pressure included), so QPS honestly pays for durable results.
     """
     b, d = queries.shape
     n = vecs.shape[0]
@@ -191,6 +197,36 @@ def search(
         length=cfg.iterations,
     )
     total_us = float(clock)
+
+    writeback_us = 0.0
+    if write_back:
+        k = cfg.top_k
+        res_i = idx[:, :k]
+        res_vecs = vecs[jnp.maximum(res_i, 0).reshape(-1)]   # (B*K, D)
+        log = jnp.zeros((b * k, d), jnp.float32)
+        lba = jnp.arange(b * k, dtype=jnp.int32)
+        wvalid = (res_i >= 0).reshape(-1)
+        if num_devices == 1:
+            cstate, log, wdone = storage.write(
+                cstate, log, res_vecs, lba, clock, wvalid
+            )
+        else:
+            m = num_devices
+            if (b * k) % m != 0:
+                raise ValueError(
+                    f"batch*top_k={b * k} must be divisible by "
+                    f"num_devices={m} for array write-back"
+                )
+            cstate, log, wdone = storage.write_array(
+                cstate, log, res_vecs.reshape(m, -1, d),
+                lba.reshape(m, -1), clock, wvalid.reshape(m, -1),
+            )
+            wdone = wdone.reshape(-1)
+        writeback_us = max(
+            float(jnp.max(jnp.where(wvalid, wdone, 0.0))) - total_us, 0.0
+        )
+        total_us += writeback_us
+
     return {
         "indices": idx[:, : cfg.top_k],
         "distances": dist[:, : cfg.top_k],
@@ -199,6 +235,7 @@ def search(
         "avg_iter_us": float(jnp.mean(step_us)),
         "gpu_iter_us": float(gpu_us),
         "reads_per_iter": b * cfg.beam_width * cfg.degree,
+        "writeback_us": writeback_us,
     }
 
 
@@ -222,6 +259,7 @@ def case_study(
     t_max_iops: float = 2.5e6,
     seed: int = 0,
     num_devices: int = 1,
+    write_back: bool = False,
 ) -> dict:
     """One (batch, width, IOPS) cell of the paper's Fig. 16 study."""
     cfg = SearchConfig(beam_width=width, iterations=iterations)
@@ -235,7 +273,10 @@ def case_study(
         n_instances=max(64, int(t_max_iops // 4e4)),
         num_blocks=n,
     )
-    out = search(queries, vecs, graph, cfg, ssd, num_devices=num_devices)
+    out = search(
+        queries, vecs, graph, cfg, ssd, num_devices=num_devices,
+        write_back=write_back,
+    )
     truth = ground_truth(vecs, queries, cfg.top_k)
     out["recall"] = recall_at_k(out["indices"], truth)
     return out

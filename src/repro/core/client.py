@@ -1,22 +1,24 @@
 """Accelerator-initiated storage client (virtual time).
 
 Applications (the SSD-backed KV tier, the vector-search case study) do not
-need the full SQ-ring machinery — they issue *batched* block reads and need
-(a) the data, functionally, and (b) faithful virtual-time completion times
-under a configured device model. ``StorageClient`` provides exactly that:
-each ``read`` models GPU-initiated submission across the configured service
-units and returns per-request completion times plus the gathered blocks.
+need the full SQ-ring machinery — they issue *batched* block reads and
+writes and need (a) the data moved, functionally, and (b) faithful
+virtual-time completion times under a configured device model.
+``StorageClient`` provides exactly that: each ``read``/``write`` models
+GPU-initiated submission across the configured service units and returns
+per-request completion times plus the moved blocks.
 
 All cost modeling lives in the unified ``DevicePipeline`` (device.py) — the
 same stages the closed-loop engine runs — so the client and the engine
-provably price I/O identically: ``read`` is ``fetch_direct`` (stage 1,
-ring-less variant) followed by the shared ``process`` (stages 2+3). The
-client carries no cost formulas of its own.
+provably price I/O identically: ``read``/``write`` are ``fetch_direct``
+(stage 1, ring-less variant) followed by the shared ``process`` (stages
+2-4; writes pick up flash program latency, GC back-pressure, and mapping
+misses from stage 4). The client carries no cost formulas of its own.
 
-``read_array``/``read_striped`` extend the same program to an M-drive
-array: the per-device pipeline is ``vmap``-ed over a leading device axis,
-so one jit program prices the whole array (paper-title 100-MIOPS regime at
-M x 40-MIOPS drives).
+``read_array``/``write_array``/``read_striped`` extend the same program to
+an M-drive array: the per-device pipeline is ``vmap``-ed over a leading
+device axis, so one jit program prices the whole array (paper-title
+100-MIOPS regime at M x 40-MIOPS drives).
 """
 from __future__ import annotations
 
@@ -33,6 +35,7 @@ from repro.core.device import (
     make_direct_batch,
 )
 from repro.core.types import (
+    OP_WRITE,
     EngineConfig,
     PlatformModel,
     SSDConfig,
@@ -95,9 +98,37 @@ class StorageClient:
         Returns (state', data (N, block_words), completion_times (N,)).
         """
         batch = make_direct_batch(lba, t_submit, valid)
-        dev, res = self.pipeline.read(state.dev, batch)
+        dev, res = self.pipeline.submit(state.dev, batch)
         data = flash[jnp.where(batch.valid, batch.lba, 0)]
         return ClientState(dev=dev), data, res.done
+
+    def write(
+        self,
+        state: ClientState,
+        flash: jax.Array,      # (num_blocks, block_words)
+        data: jax.Array,       # (N, block_words) blocks to persist
+        lba: jax.Array,        # (N,) i32 destination block addresses
+        t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
+        valid: jax.Array | None = None,
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Issue N block writes at ``t_submit``.
+
+        Priced by the identical pipeline as ``read`` — the OP_WRITE opcode
+        routes stage 4 to flash programs (and GC once the free pool
+        drains), so sustained writes are honestly slower than reads.
+        Returns (state', flash' with the blocks scattered in,
+        completion_times (N,)). If the batch writes the same LBA more
+        than once, which copy lands is unspecified (XLA scatter with
+        duplicate indices) — dedupe before submitting when that matters.
+        """
+        n = lba.shape[0]
+        batch = make_direct_batch(
+            lba, t_submit, valid, opcode=jnp.full((n,), OP_WRITE, jnp.int32)
+        )
+        dev, res = self.pipeline.submit(state.dev, batch)
+        dst = jnp.where(batch.valid, batch.lba, flash.shape[0])
+        flash = flash.at[dst].set(data, mode="drop")
+        return ClientState(dev=dev), flash, res.done
 
     def read_array(
         self,
@@ -118,12 +149,51 @@ class StorageClient:
 
         def one(dev, lba_d, t_d, valid_d):
             batch = make_direct_batch(lba_d, t_d, valid_d)
-            dev, res = self.pipeline.read(dev, batch)
+            dev, res = self.pipeline.submit(dev, batch)
             return dev, res.done
 
         dev, done = jax.vmap(one)(state.dev, lba, t_submit, valid)
         data = flash[jnp.where(valid, lba, 0)]
         return ClientState(dev=dev), data, done
+
+    def write_array(
+        self,
+        state: ClientState,    # stacked: every leaf has a leading (M,) axis
+        flash: jax.Array,      # (num_blocks, block_words) — shared store
+        data: jax.Array,       # (M, N, block_words) per-device payloads
+        lba: jax.Array,        # (M, N) i32 per-device block addresses
+        t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
+        valid: jax.Array | None = None,   # (M, N) bool
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Per-device batched writes over an M-drive array, one vmap.
+
+        Virtual-time pricing is per drive (each device's pipeline carries
+        its own chips/GC state); the functional scatter lands in the
+        shared block store afterwards. If multiple rows (within or across
+        devices) target the same LBA, which copy lands is unspecified
+        (XLA scatter with duplicate indices) — partition the address
+        space across drives when that matters.
+        """
+        m, n = lba.shape
+        t_submit = jnp.asarray(t_submit, jnp.float32)
+        if t_submit.ndim == 1:
+            t_submit = t_submit[:, None]
+        t_submit = jnp.broadcast_to(t_submit, (m, n))
+        if valid is None:
+            valid = jnp.ones((m, n), bool)
+        op = jnp.full((n,), OP_WRITE, jnp.int32)
+
+        def one(dev, lba_d, t_d, valid_d):
+            batch = make_direct_batch(lba_d, t_d, valid_d, opcode=op)
+            dev, res = self.pipeline.submit(dev, batch)
+            return dev, res.done
+
+        dev, done = jax.vmap(one)(state.dev, lba, t_submit, valid)
+        dst = jnp.where(valid, lba, flash.shape[0]).reshape(-1)
+        flash = flash.at[dst].set(
+            data.reshape((m * n,) + data.shape[2:]), mode="drop"
+        )
+        return ClientState(dev=dev), flash, done
 
     def read_striped(
         self,
@@ -147,12 +217,15 @@ class StorageClient:
         if valid is None:
             valid = jnp.ones((n,), bool)
         t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
+
         # (N,) -> (M, N//M): request i = stripe (i % M, i // M).
-        to_dev = lambda x: x.reshape(n // m, m).T
+        def to_dev(x):
+            return x.reshape(n // m, m).T
+
+        def from_dev(x):
+            return jnp.swapaxes(x, 0, 1).reshape((n,) + x.shape[2:])
+
         state, data, done = self.read_array(
             state, flash, to_dev(lba), to_dev(t_submit), to_dev(valid)
-        )
-        from_dev = lambda x: jnp.swapaxes(x, 0, 1).reshape(
-            (n,) + x.shape[2:]
         )
         return state, from_dev(data), from_dev(done)

@@ -20,7 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.segops import queueing_scan, segment_rank
-from repro.core.types import EngineConfig, PlatformModel, RequestBatch, SSDConfig
+from repro.core.types import (
+    EngineConfig,
+    PlatformModel,
+    RequestBatch,
+    SSDConfig,
+)
 
 
 # ---------------------------------------------------------------------------

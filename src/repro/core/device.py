@@ -1,7 +1,7 @@
 """The unified, layered device pipeline (single source of truth for cost).
 
 Every consumer of the emulated SSD — the closed-loop engine and the
-application-facing ``StorageClient`` — prices I/O through the same three
+application-facing ``StorageClient`` — prices I/O through the same four
 stages over one ``DeviceState`` pytree:
 
     stage 1  frontend fetch      how/when request descriptors become visible
@@ -13,14 +13,19 @@ stages over one ``DeviceState`` pytree:
     stage 3  data path           when the emulated transfer lands (batched
                                  DSA offload or baseline worker threads —
                                  datapath.py)
+    stage 4  flash backend       channel/chip occupancy for writes, greedy
+                                 GC, and cached-mapping-table misses —
+                                 surcharges the simple timing model omits
+                                 (flash.py; exact no-op for all-hit
+                                 read-only traffic)
 
-``DevicePipeline.process`` composes stages 2+3 for a fetched
-``RequestBatch`` and returns per-request (arrival, target, ready, done);
-the stage-1 variants differ only in where descriptors come from, so the
-engine runs ``frontend.fetch_{distributed,centralized}`` and the client
-runs ``DevicePipeline.fetch_direct``, then both call the identical
-``process``. A multi-drive array is the same program ``vmap``-ed over a
-leading device axis (see ``engine.simulate(num_devices=...)`` and
+``DevicePipeline.process`` composes stages 2-4 for a fetched
+``RequestBatch`` and returns per-request (arrival, target, ready,
+flash_done, done); the stage-1 variants differ only in where descriptors
+come from, so the engine runs ``frontend.fetch_{distributed,centralized}``
+and the client runs ``DevicePipeline.fetch_direct``, then both call the
+identical ``process``. A multi-drive array is the same program ``vmap``-ed
+over a leading device axis (see ``engine.simulate(num_devices=...)`` and
 ``StorageClient.read_striped``).
 """
 from __future__ import annotations
@@ -32,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import datapath, frontend, timing
+from repro.core.flash import FlashState, flash_stage
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
@@ -52,6 +58,7 @@ class DeviceState:
     dsa_time: jax.Array    # (U,) DSA engine busy-until cursors
     lock_time: jax.Array   # ()  global timing-lock busy-until
     map_time: jax.Array    # ()  global map/unmap-lock busy-until
+    flash: FlashState      # stage-4 flash-array state (chips, pages, GC)
 
     @staticmethod
     def init(ssd: SSDConfig, num_units: int, workers_per_unit: int = 1
@@ -63,6 +70,7 @@ class DeviceState:
             dsa_time=jnp.zeros((num_units,), jnp.float32),
             lock_time=jnp.float32(0),
             map_time=jnp.float32(0),
+            flash=FlashState.init(ssd),
         )
 
     @property
@@ -75,10 +83,11 @@ class DeviceState:
 class PipelineResult:
     """Per-request virtual-time outcome of one pipeline pass (all (N,))."""
 
-    arrival: jax.Array  # post-lock dispatch time seen by the timing model
-    target: jax.Array   # timing-model completion (device fidelity)
-    ready: jax.Array    # data-path completion (copy landed)
-    done: jax.Array     # max(target, ready), 0 for invalid rows
+    arrival: jax.Array     # post-lock dispatch time seen by the timing model
+    target: jax.Array      # timing-model completion (device fidelity)
+    ready: jax.Array       # data-path completion (copy landed)
+    flash_done: jax.Array  # flash-backend completion (programs/GC/misses)
+    done: jax.Array        # max(target, ready, flash_done), 0 if invalid
 
 
 def lock_pass(
@@ -153,7 +162,8 @@ class DevicePipeline:
         fetch_done: jax.Array,  # (N,) per-row fetch completion times
         unit: jax.Array,        # (N,) i32 non-decreasing service-unit ids
     ) -> Tuple[DeviceState, PipelineResult]:
-        """Timing model under the global lock, then the backend data path."""
+        """Timing model under the global lock, then the backend data path,
+        then the flash-level backend (writes/GC/mapping misses)."""
         cfg, ssd, plat = self.cfg, self.ssd, self.plat
         u = state.num_units
         valid = batch.valid
@@ -200,25 +210,45 @@ class DevicePipeline:
             )
             dsa_time = state.dsa_time
 
-        done = jnp.where(valid, jnp.maximum(target, ready), 0.0)
+        # -- stage 4: flash-level backend (writes, GC, mapping misses).
+        if ssd.flash_backend:
+            fstate, flash_done = flash_stage(
+                state.flash, batch, arrival, target, ssd
+            )
+        else:
+            fstate, flash_done = state.flash, jnp.where(valid, arrival, 0.0)
+
+        done = jnp.where(
+            valid, jnp.maximum(jnp.maximum(target, ready), flash_done), 0.0
+        )
         new_state = DeviceState(
             tstate=tstate, disp_time=disp_time, work_time=work_time,
             dsa_time=dsa_time, lock_time=lock_time, map_time=map_time,
+            flash=fstate,
         )
         return new_state, PipelineResult(
-            arrival=arrival, target=target, ready=ready, done=done
+            arrival=arrival, target=target, ready=ready,
+            flash_done=flash_done, done=done,
         )
 
-    def read(
+    def submit(
         self,
         state: DeviceState,
         batch: RequestBatch,
     ) -> Tuple[DeviceState, PipelineResult]:
-        """Full pipeline for a direct batch: fetch_direct + process."""
+        """Full pipeline for a direct batch: fetch_direct + process.
+
+        Op-agnostic — the batch's ``opcode`` decides read vs write pricing
+        (stage 2/3 cost both identically; stage 4 charges programs, GC,
+        and mapping misses where they apply).
+        """
         state, fetch_done, unit = self.fetch_direct(
             state, batch.arrival, batch.valid
         )
         return self.process(state, batch, fetch_done, unit)
+
+    # Back-compat alias from the read-only PR-1 pipeline surface.
+    read = submit
 
 
 def init_array_state(pipe: DevicePipeline, num_devices: int) -> DeviceState:

@@ -7,12 +7,16 @@ One engine "round" mirrors a service-unit iteration in the paper (Fig. 6):
      the global lock, entered per-request (baseline) or per-batch (SwarmIO)
   3. the backend emulates the storage data transfer (datapath.py) — CPU
      worker threads with map/unmap (baseline) or batched async DSA offload
-  4. completions post when BOTH the target time has elapsed AND the copy is
-     done; the workload generator decides what each completed slot submits
-     next (closed-loop resubmit, open-loop arrival, or nothing for replays)
+  4. the flash backend prices flash-level events    (flash.py) — write
+     programs serializing per chip, greedy GC stealing die time, and
+     cached-mapping-table misses (epoch-batched per round)
+  5. completions post when the target time has elapsed AND the copy is
+     done AND the flash-side work finished; the workload generator decides
+     what each completed slot submits next (closed-loop resubmit,
+     open-loop arrival, or nothing for replays)
 
 Stages 2-4 are the shared ``DevicePipeline`` (device.py) — the identical
-code path ``StorageClient`` prices application reads with. Two time domains
+code path ``StorageClient`` prices application I/O with. Two time domains
 are tracked: *virtual time* (the emulated device's event time — fidelity
 metrics: IOPS, latency vs. the modeled SSD) and the engine's own
 *wall-clock throughput* (measured by benchmarks around ``run``).
@@ -150,6 +154,9 @@ def init_state(
     multi-SSD array (pass the device index).
     """
     wl = as_workload(wl)
+    if getattr(wl, "precondition_drive", False):
+        # Steady-state generators start the flash array fully written.
+        ssd = ssd.replace(preconditioned=True)
     q, dep = cfg.num_sqs, cfg.sq_depth
     rings = SQRings.empty(q, dep)
 
@@ -251,7 +258,7 @@ def engine_round(
         bufs = datapath.apply_reads(flash, bufs, batch, cfg.use_pallas)
         flash = datapath.apply_writes(flash, bufs, batch)
 
-    # -- 6. workload-driven resubmission ---------------------------------------
+    # -- 6. workload-driven resubmission --------------------------------------
     new_req = state.req_counter + jnp.arange(n, dtype=jnp.int32)
     new_lba = wl.address(new_req, ssd, state.salt)
     new_op = wl.opcode(new_req, state.salt)
@@ -285,7 +292,7 @@ def engine_round(
         pick(resub_valid),
     )
 
-    # -- 7. clock advance ------------------------------------------------------
+    # -- 7. clock advance -----------------------------------------------------
     # Discrete-event step with a poll quantum: each round ingests the
     # submissions of a bounded virtual-time window (dispatchers poll
     # continuously in the real emulator; the quantum is our emulation

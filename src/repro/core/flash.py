@@ -1,0 +1,230 @@
+"""Flash-level backend: channels/chips, writes, GC, mapping misses.
+
+Pipeline stage 4 (device.py). The simple timing model (stage 2) already
+prices the *calibrated read path* — ``sched_us``/``l_min_us`` encode the
+device's sustained random-read behavior, flash parallelism included. What
+it cannot express are the flash-level events an IOPS-optimized device
+actually spends time on once writes and cold mapping state enter the
+picture. This stage models exactly those surcharges over a
+``C channels x W chips`` die array (SimpleSSD-style holistic modeling,
+scoped to what changes completion times):
+
+  * **writes** occupy their die for ``flash_program_us`` and serialize
+    per chip (a program blocks the die, not the whole device);
+  * **mapping misses** (cached-mapping-table misses, the KV-SSD line's
+    dominant random-read cost) charge a translation-page read on the
+    mapped die before the data read's device service can begin;
+  * **garbage collection** runs greedily when the free-page pool drops
+    below a watermark, stealing die time for victim migration + erase.
+
+All accounting is *epoch-batched* in the spirit of SwarmIO's lazy timing
+updates: one ``flash_stage`` call prices a whole fetched batch — requests
+observe the die cursors as of epoch start, the batch's events advance
+them once, and GC triggers at most once per epoch with its cost spread
+across the dies. With ``mapping_hit_rate=1.0`` and no writes the stage is
+an exact no-op (cursors never move, every surcharge is zero), so
+read-only workloads reproduce the 3-stage pipeline bit-exactly — the
+PR-1 parity contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segops import (
+    NEG,
+    hash_u32,
+    queueing_scan,
+    sort_by_segment,
+    uniform01,
+)
+from repro.core.types import OP_WRITE, RequestBatch, SSDConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlashState:
+    """Flash-array state for one emulated device (vmap-able over drives)."""
+
+    chip_busy: jax.Array    # (C*W,) f32 per-die busy-until cursors
+    free_pages: jax.Array   # () f32 free (erased) physical pages
+    valid_pages: jax.Array  # () f32 physical pages holding live data
+    io_seq: jax.Array       # () i32 ops priced so far (CMT-miss hash salt)
+    prog_seq: jax.Array     # () i32 programs placed so far (rr write cursor)
+    gc_count: jax.Array     # () f32 total GC invocations
+
+    @staticmethod
+    def init(ssd: SSDConfig) -> "FlashState":
+        """Fresh or steady-state drive per ``ssd.preconditioned``.
+
+        A preconditioned drive starts fully written (every logical page
+        live), so its free pool is only the over-provisioned spare area
+        and sustained writes hit the GC watermark almost immediately —
+        the steady-state regime fresh-drive benchmarks overstate.
+        """
+        phys = jnp.float32(ssd.phys_pages)
+        valid = jnp.float32(ssd.num_blocks if ssd.preconditioned else 0.0)
+        return FlashState(
+            chip_busy=jnp.zeros((ssd.num_chips,), jnp.float32),
+            free_pages=phys - valid,
+            valid_pages=valid,
+            io_seq=jnp.int32(0),
+            prog_seq=jnp.int32(0),
+            gc_count=jnp.float32(0),
+        )
+
+    @property
+    def num_chips(self) -> int:
+        return self.chip_busy.shape[0]
+
+
+def chip_of(lba: jax.Array, ssd: SSDConfig) -> jax.Array:
+    """Map an LBA to its die (channel striping by address hash)."""
+    h = (lba.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(16)
+    return (h % jnp.uint32(ssd.num_chips)).astype(jnp.int32)
+
+
+def mapping_miss(
+    fstate: FlashState, batch: RequestBatch, ssd: SSDConfig
+) -> jax.Array:
+    """Which valid reads miss the cached mapping table this epoch.
+
+    Counter-based: hashed from the request id, the accessed LBA, and the
+    device's running op count, so the miss stream is deterministic and
+    distinct across epochs — and diverges across vmapped array drives,
+    whose salted workloads access different addresses even when their
+    request-id streams coincide. ``mapping_hit_rate=1.0`` can never
+    miss — ``uniform01`` is open at 1.0.
+    """
+    is_read = batch.valid & (batch.opcode != OP_WRITE)
+    h = hash_u32(
+        batch.req_id.astype(jnp.uint32)
+        + batch.lba.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+        + fstate.io_seq.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    )
+    return is_read & (uniform01(h) >= jnp.float32(ssd.mapping_hit_rate))
+
+
+def flash_stage(
+    fstate: FlashState,
+    batch: RequestBatch,
+    arrival: jax.Array,   # (N,) f32 post-lock dispatch times
+    target: jax.Array,    # (N,) f32 stage-2 timing-model completions
+    ssd: SSDConfig,
+) -> Tuple[FlashState, jax.Array]:
+    """Price one epoch's flash-level events. Returns (state', flash_done).
+
+    ``flash_done[i]`` is the earliest time request i's flash-side work can
+    be complete; the pipeline takes ``max(target, ready, flash_done)``.
+    Per row:
+
+      * hit read    — no event; blocked only behind die work already
+                      scheduled at epoch start (programs/GC on its die);
+      * miss read   — a translation-page read queues on the die, then the
+                      data read's device service (``target - arrival``)
+                      restarts after it;
+      * write       — a program queues on the die and completes there.
+
+    Die cursors only ever move forward: events advance them via a
+    per-chip queueing scan, GC adds non-negative stolen time.
+    """
+    k = ssd.num_chips
+    valid = batch.valid
+    is_write = valid & (batch.opcode == OP_WRITE)
+    miss = mapping_miss(fstate, batch, ssd)
+
+    # Die placement. Reads go where the data lives (address-hash channel
+    # striping); writes go wherever a free page is open — a page-mapped
+    # FTL allocates log-structured, round-robin across dies, so even a
+    # Zipf-hot write stream spreads over the array instead of hammering
+    # one die. ``prog_seq`` carries the allocation cursor across epochs.
+    chip = chip_of(batch.lba, ssd)
+    w_rank = jnp.cumsum(is_write.astype(jnp.int32)) - 1
+    w_chip = (fstate.prog_seq + jnp.maximum(w_rank, 0)) % k
+    chip = jnp.where(is_write, w_chip, chip)
+    cost = jnp.where(is_write, jnp.float32(ssd.flash_program_us), 0.0)
+    cost = cost + jnp.where(miss, jnp.float32(ssd.flash_read_us), 0.0)
+    event = cost > 0.0
+
+    # Queue event rows per die (dispatch order within a die); rows without
+    # an event sort into a trailing pseudo-segment and touch nothing.
+    key = jnp.where(event, chip, jnp.int32(k))
+    order, heads, _ = sort_by_segment(key)
+    safe = jnp.clip(key[order], 0, k - 1)
+    busy_sorted = queueing_scan(
+        arrival[order], cost[order], heads, fstate.chip_busy[safe]
+    )
+    busy = jnp.zeros_like(busy_sorted).at[order].set(busy_sorted)
+    chip_busy = jnp.maximum(
+        fstate.chip_busy,
+        jax.ops.segment_max(
+            jnp.where(event, busy, NEG),
+            jnp.clip(key, 0, k - 1),
+            num_segments=k,
+        ),
+    )
+
+    # Epoch-start view for non-event rows: reads contend with die work
+    # scheduled in *previous* epochs but are otherwise already priced.
+    epoch_view = jnp.maximum(arrival, fstate.chip_busy[chip])
+    flash_done = jnp.where(
+        is_write,
+        busy,
+        jnp.where(miss, busy + (target - arrival), epoch_view),
+    )
+    flash_done = jnp.where(valid, flash_done, 0.0)
+
+    # --- page-pool accounting + greedy GC (once per epoch) ----------------
+    cap = jnp.float32(ssd.num_blocks)
+    phys = jnp.float32(ssd.phys_pages)
+    n_w = jnp.sum(is_write.astype(jnp.float32))
+    # A write consumes one free page; it creates a live page unless it
+    # overwrites an already-live logical page (probability valid/cap under
+    # uniform addressing), in which case the old copy turns invalid.
+    valid_pages = jnp.minimum(
+        fstate.valid_pages + n_w * (1.0 - fstate.valid_pages / cap), cap
+    )
+    free_pages = fstate.free_pages - n_w
+    gc_count = fstate.gc_count
+    if ssd.gc_watermark > 0.0:
+        # Greedy victim selection under uniform invalidation: a victim
+        # block's live fraction tracks overall utilization, so each
+        # collection migrates live*pages_per_block pages (read + program
+        # each), erases the block, and nets (1-live)*pages_per_block
+        # fresh pages. Enough collections run back-to-back to restore the
+        # watermark; their cost lands on the dies (spread evenly — each
+        # die collects its share of victims) starting after this epoch's
+        # newest dispatch.
+        live = jnp.clip(valid_pages / phys, 0.0, 1.0)
+        net = jnp.maximum(ssd.pages_per_block * (1.0 - live), 1.0)
+        per_gc_us = (
+            ssd.pages_per_block
+            * live
+            * (ssd.flash_read_us + ssd.flash_program_us)
+            + ssd.flash_erase_us
+        )
+        invalid = jnp.maximum(phys - free_pages - valid_pages, 0.0)
+        deficit = jnp.float32(ssd.gc_watermark) * phys - free_pages
+        n_gc = jnp.ceil(jnp.maximum(deficit, 0.0) / net)
+        n_gc = jnp.clip(n_gc, 0.0, jnp.floor(invalid / net))
+        free_pages = free_pages + n_gc * net
+        t_now = jnp.max(jnp.where(valid, arrival, 0.0))
+        chip_busy = jnp.where(
+            n_gc > 0.0,
+            jnp.maximum(chip_busy, t_now) + n_gc * per_gc_us / k,
+            chip_busy,
+        )
+        gc_count = gc_count + n_gc
+
+    new_state = FlashState(
+        chip_busy=chip_busy,
+        free_pages=free_pages,
+        valid_pages=valid_pages,
+        io_seq=fstate.io_seq + jnp.sum(valid).astype(jnp.int32),
+        prog_seq=(fstate.prog_seq + jnp.sum(is_write.astype(jnp.int32))) % k,
+        gc_count=gc_count,
+    )
+    return new_state, flash_done

@@ -7,6 +7,11 @@ transactions. The *distributed* frontend partitions SQs across service units
 and fetches all units' SQs in parallel; the *centralized* baseline models
 NVMeVirt's single dispatcher that serializes over every SQ and fetches one
 entry per transaction.
+
+Fetching is op-agnostic: each ring entry carries its NVMe ``opcode``
+(OP_READ/OP_WRITE) end to end, so the downstream pipeline stages — and in
+particular the flash backend, which prices programs and GC — see the
+read/write mix exactly as submitted.
 """
 from __future__ import annotations
 

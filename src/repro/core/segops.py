@@ -15,6 +15,24 @@ import jax.numpy as jnp
 NEG = -3e38  # python float: jnp module constants leak into jaxprs
 
 
+def hash_u32(x: jax.Array) -> jax.Array:
+    """xorshift-style integer hash (deterministic per-request randomness).
+
+    Shared by the workload generators and the flash backend's CMT-miss
+    model: counter-based hashing needs no PRNG state threaded through the
+    engine loop and vmaps cleanly across emulated devices.
+    """
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def uniform01(h: jax.Array) -> jax.Array:
+    """Map a u32 hash to (0, 1) — open at both ends (safe for log)."""
+    return (h.astype(jnp.float32) + 0.5) / 4294967296.0
+
+
 def segmented_prefix_max(values: jax.Array, heads: jax.Array) -> jax.Array:
     """Inclusive prefix max restarting at each ``heads[i]==True``."""
 
@@ -49,7 +67,7 @@ def sort_by_segment(
 
 
 def segment_rank(key: jax.Array) -> jax.Array:
-    """Within-segment rank in *original* order (count of earlier equal keys)."""
+    """Within-segment rank in original order (count of earlier equal keys)."""
     n = key.shape[0]
     order, _, rank = sort_by_segment(key)
     out = jnp.zeros((n,), jnp.int32).at[order].set(rank)

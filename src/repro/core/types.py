@@ -77,10 +77,65 @@ class SSDConfig:
     # balances; "lba_hash" models channel striping by address (exposes
     # hash-imbalance idle time, used in sensitivity studies).
     routing: str = "round_robin"
+    # --- Flash backend (pipeline stage 4, flash.py). The simple timing
+    # model above already prices the *calibrated read path* (sched/l_min);
+    # the flash backend adds the internals that model leaves out: program
+    # latency and per-chip serialization for writes, greedy GC stealing
+    # chip time when the free pool drains, and cached-mapping-table (CMT)
+    # misses that cost an extra translation-page read. With
+    # ``mapping_hit_rate=1.0`` and no writes the stage is an exact no-op,
+    # so read-only workloads reproduce the 3-stage pipeline bit-exactly.
+    flash_backend: bool = True
+    num_channels: int = 8              # C — flash channels
+    chips_per_channel: int = 4         # W — chips (dies) per channel
+    flash_read_us: float = 40.0        # page (translation) read latency
+    flash_program_us: float = 200.0    # page program latency
+    flash_erase_us: float = 1000.0     # block erase latency
+    pages_per_block: int = 64          # pages migrated/freed per GC victim
+    over_provision: float = 0.07       # physical spare-capacity fraction
+    gc_watermark: float = 0.02         # free-page fraction triggering GC
+                                       # (<= 0 disables GC entirely)
+    mapping_hit_rate: float = 1.0      # CMT hit probability (1.0 = cached)
+    preconditioned: bool = False       # start fully written (steady state)
+
+    def __post_init__(self) -> None:
+        if self.num_channels < 1 or self.chips_per_channel < 1:
+            raise ValueError(
+                f"num_channels={self.num_channels} and chips_per_channel="
+                f"{self.chips_per_channel} must be >= 1"
+            )
+        if not 0.0 <= self.mapping_hit_rate <= 1.0:
+            raise ValueError(
+                f"mapping_hit_rate={self.mapping_hit_rate} must be in [0, 1]"
+            )
+        if self.over_provision <= 0.0:
+            raise ValueError(
+                f"over_provision={self.over_provision} must be > 0 — with no "
+                "spare capacity every write immediately deadlocks on GC"
+            )
+        if self.gc_watermark >= self.over_provision / (
+            1.0 + self.over_provision
+        ):
+            raise ValueError(
+                f"gc_watermark={self.gc_watermark} must be below the "
+                f"over-provisioned free fraction "
+                f"{self.over_provision / (1.0 + self.over_provision):.4f} — "
+                "a fresh drive would start below its own GC trigger"
+            )
 
     @property
     def sched_us(self) -> float:
         return self.n_instances / self.t_max_iops * 1e6
+
+    @property
+    def num_chips(self) -> int:
+        """Total flash dies = channels x chips/channel."""
+        return self.num_channels * self.chips_per_channel
+
+    @property
+    def phys_pages(self) -> float:
+        """Physical page count including over-provisioned spare area."""
+        return self.num_blocks * (1.0 + self.over_provision)
 
     def replace(self, **kw: Any) -> "SSDConfig":
         return dataclasses.replace(self, **kw)

@@ -2,7 +2,9 @@
 from repro.workloads.base import Prefill, Workload, as_workload
 from repro.workloads.generators import (
     ClosedLoop,
+    MixedReadWrite,
     PoissonOpenLoop,
+    SteadyStateMixed,
     TraceReplay,
     ZipfClosedLoop,
 )
@@ -12,7 +14,9 @@ __all__ = [
     "Workload",
     "as_workload",
     "ClosedLoop",
+    "MixedReadWrite",
     "PoissonOpenLoop",
+    "SteadyStateMixed",
     "TraceReplay",
     "ZipfClosedLoop",
 ]

@@ -23,22 +23,19 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.segops import hash_u32, uniform01
 from repro.core.types import EngineConfig, SSDConfig, WorkloadConfig
 
 FAR = 3e38  # python float: jnp module constants leak into jaxprs
 
-
-def hash_u32(x: jax.Array) -> jax.Array:
-    """xorshift-style integer hash (deterministic per-request randomness)."""
-    x = x.astype(jnp.uint32)
-    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
-    return x ^ (x >> 16)
-
-
-def uniform01(h: jax.Array) -> jax.Array:
-    """Map a u32 hash to (0, 1) — open at both ends (safe for log)."""
-    return (h.astype(jnp.float32) + 0.5) / 4294967296.0
+__all__ = [
+    "FAR",
+    "Prefill",
+    "Workload",
+    "as_workload",
+    "hash_u32",
+    "uniform01",
+]
 
 
 class Prefill(NamedTuple):
@@ -59,6 +56,10 @@ class Workload:
     io_depth: int = 64            # outstanding requests per SQ
     read_frac: float = 1.0        # fraction of reads
     seed: int = 0
+    # Steady-state studies: a generator may declare that the drive it
+    # drives should start fully written (``engine.init_state`` then builds
+    # the flash array preconditioned, as if ``ssd.preconditioned=True``).
+    precondition_drive: bool = False
 
     # -- counter-based randomness -------------------------------------------
     def _key(self, req_id: jax.Array, salt: jax.Array | int,

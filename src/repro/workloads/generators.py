@@ -1,4 +1,4 @@
-"""The four workload generators.
+"""The workload generators.
 
 ``ClosedLoop``    fio/BaM analogue: each slot resubmits after completion plus
                   think time (the engine's original behavior, refactored in).
@@ -12,6 +12,14 @@
                   ``theta``-parameterized hot spot concentrating accesses on
                   low addresses, for channel-imbalance studies paired with
                   ``routing="lba_hash"``.
+``MixedReadWrite``  closed loop with a read/write mix (default 70/30) and
+                  optional Zipf skew — the flash backend's bread-and-butter
+                  load: programs serialize per chip and sustained writes
+                  drain the free-page pool toward the GC watermark.
+``SteadyStateMixed``  the same mix on a *preconditioned* drive: the
+                  generator asks the engine to start the flash array fully
+                  written, so GC price is paid from the first write batch
+                  (the steady-state regime fresh-drive runs overstate).
 ``TraceReplay``   fixed-trace replay: a (time, lba, opcode) list is dealt
                   round-robin across SQs at t=0 and never resubmits.
 """
@@ -24,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import EngineConfig, SSDConfig
+from repro.core.types import EngineConfig
 from repro.workloads.base import FAR, Prefill, Workload, uniform01
 
 
@@ -40,16 +48,21 @@ class ClosedLoop(Workload):
 
 
 @dataclasses.dataclass(frozen=True)
-class ZipfClosedLoop(ClosedLoop):
-    """Closed loop with power-law address skew (Zipf-like hot spot).
+class MixedReadWrite(ClosedLoop):
+    """Closed loop mixing reads and writes, optionally Zipf-skewed.
 
-    Addresses follow P(lba <= x) = (x/N)^(1-theta): theta=0 is uniform,
-    theta→1 concentrates nearly all mass on the lowest addresses. (This is
-    the standard continuous hot-spot approximation of a Zipf popularity
-    distribution over blocks, inverse-CDF sampled so it stays hash-based.)
+    ``read_frac`` (inherited) sets the read/write split per request —
+    0.7 models the canonical 70/30 mix. Addresses follow
+    P(lba <= x) = (x/N)^(1-theta): theta=0 is uniform, theta→1
+    concentrates nearly all mass on the lowest addresses (the standard
+    continuous hot-spot approximation of a Zipf popularity distribution
+    over blocks, inverse-CDF sampled so it stays hash-based). One
+    generator covers the mixed-skewed loads the flash backend's GC and
+    chip-contention studies need.
     """
 
-    theta: float = 0.9
+    read_frac: float = 0.7
+    theta: float = 0.0
 
     def address(self, req_id, ssd, salt=0):
         if not 0.0 <= self.theta < 1.0:
@@ -58,6 +71,27 @@ class ZipfClosedLoop(ClosedLoop):
         alpha = 1.0 / (1.0 - self.theta)
         x = jnp.power(u, jnp.float32(alpha)) * ssd.num_blocks
         return jnp.clip(x.astype(jnp.int32), 0, ssd.num_blocks - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZipfClosedLoop(MixedReadWrite):
+    """Read-only closed loop with power-law address skew (Zipf hot spot)."""
+
+    read_frac: float = 1.0
+    theta: float = 0.9
+
+
+@dataclasses.dataclass(frozen=True)
+class SteadyStateMixed(MixedReadWrite):
+    """Mixed read/write load on a steady-state (fully written) drive.
+
+    Declares ``precondition_drive`` so ``engine.init_state`` starts the
+    flash array with every logical page live: only the over-provisioned
+    spare pool separates the first write burst from the GC watermark,
+    which is where production drives actually operate.
+    """
+
+    precondition_drive: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,7 +180,9 @@ class TraceReplay(Workload):
         lb[rows, cols] = lbas[order]
         op[rows, cols] = opcodes[order]
         va[rows, cols] = True
-        tup = lambda a: tuple(tuple(r) for r in a.tolist())
+        def tup(a):
+            return tuple(tuple(r) for r in a.tolist())
+
         return TraceReplay(
             io_depth=length, submit=tup(sub), lba=tup(lb), ops=tup(op),
             mask=tup(va),

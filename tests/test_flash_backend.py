@@ -1,0 +1,290 @@
+"""Flash-backend (pipeline stage 4) tests.
+
+The stage's contract: with ``mapping_hit_rate=1.0``, no writes, and GC
+idle it is an exact no-op (PR-1 read latencies reproduce bit-exactly);
+with writes/misses/GC it only ever adds time, and die cursors never move
+backwards.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.client import ClientState, StorageClient
+from repro.core.flash import FlashState, chip_of, flash_stage
+from repro.core.types import (
+    OP_WRITE,
+    EngineConfig,
+    PlatformModel,
+    SSDConfig,
+    WorkloadConfig,
+)
+from repro import workloads
+
+SSD = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
+                num_blocks=1 << 12)
+CFG = EngineConfig(num_sqs=8, sq_depth=256, fetch_width=32, num_units=4,
+                   emulate_data=False, num_bufs=512)
+
+
+def _flash_store(n_blocks=None, words=8):
+    n = n_blocks or SSD.num_blocks
+    return jnp.arange(n, dtype=jnp.float32)[:, None] * jnp.ones((1, words))
+
+
+# ---------------------------------------------------------------------------
+# Parity: the 4-stage pipeline reproduces PR-1 completions bit-exactly.
+# ---------------------------------------------------------------------------
+
+def test_engine_parity_read_only_bit_exact():
+    """flash_backend on vs off: identical virtual-time results for a
+    read-only workload at mapping_hit_rate=1.0 (GC never wakes)."""
+    wl = WorkloadConfig(io_depth=32)
+    on = engine.simulate(CFG, SSD, wl, rounds=24)
+    off = engine.simulate(CFG, SSD.replace(flash_backend=False), wl,
+                          rounds=24)
+    for got, want in [
+        (on.metrics.sum_e2e, off.metrics.sum_e2e),
+        (on.metrics.lat_hist, off.metrics.lat_hist),
+        (on.metrics.last_completion, off.metrics.last_completion),
+        (on.device.tstate.busy_until, off.device.tstate.busy_until),
+        (on.device.dsa_time, off.device.dsa_time),
+    ]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # The stage really was a no-op: no die ever became busy, no GC ran.
+    assert float(jnp.max(on.device.flash.chip_busy)) == 0.0
+    assert float(on.device.flash.gc_count) == 0.0
+
+
+def test_client_parity_read_only_bit_exact():
+    """StorageClient reads at hit rate 1.0 are bit-identical with the
+    flash backend enabled and disabled."""
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    flash = _flash_store()
+    lba = (jnp.arange(512, dtype=jnp.int32) * 37) % SSD.num_blocks
+    on = StorageClient(SSD, cfg)
+    off = StorageClient(SSD.replace(flash_backend=False), cfg)
+    _, _, done_on = on.read(on.init_state(), flash, lba, jnp.float32(3.0))
+    _, _, done_off = off.read(off.init_state(), flash, lba, jnp.float32(3.0))
+    np.testing.assert_array_equal(np.asarray(done_on), np.asarray(done_off))
+
+
+def test_preconditioned_read_only_still_parity():
+    """A steady-state drive without writes never GCs: free pool (the
+    over-provisioned spare area) sits above the watermark."""
+    ssd = SSD.replace(preconditioned=True)
+    wl = WorkloadConfig(io_depth=32)
+    on = engine.simulate(CFG, ssd, wl, rounds=16)
+    off = engine.simulate(CFG, SSD.replace(flash_backend=False), wl,
+                          rounds=16)
+    np.testing.assert_array_equal(
+        np.asarray(on.metrics.lat_hist), np.asarray(off.metrics.lat_hist)
+    )
+    assert float(on.device.flash.gc_count) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Mapping (CMT) misses.
+# ---------------------------------------------------------------------------
+
+def test_mapping_miss_adds_translation_read():
+    """hit_rate=0: every read pays at least one extra flash_read_us."""
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    flash = _flash_store()
+    lba = (jnp.arange(256, dtype=jnp.int32) * 13) % SSD.num_blocks
+    hit = StorageClient(SSD, cfg)
+    mis = StorageClient(SSD.replace(mapping_hit_rate=0.0), cfg)
+    _, _, dh = hit.read(hit.init_state(), flash, lba, jnp.float32(0))
+    _, _, dm = mis.read(mis.init_state(), flash, lba, jnp.float32(0))
+    assert float(jnp.min(dm - dh)) >= SSD.flash_read_us - 1e-3
+
+
+def test_mapping_miss_rate_tracks_config():
+    """The deterministic miss hash approximates the configured rate and
+    differs across epochs (io_seq-salted)."""
+    from repro.core.device import make_direct_batch
+    from repro.core.flash import mapping_miss
+
+    ssd = SSD.replace(mapping_hit_rate=0.7)
+    n = 4096
+    batch = make_direct_batch(jnp.zeros((n,), jnp.int32), jnp.float32(0))
+
+    st0 = FlashState.init(ssd)
+    st1 = dataclasses.replace(st0, io_seq=jnp.int32(7919))
+    m0 = mapping_miss(st0, batch, ssd)
+    m1 = mapping_miss(st1, batch, ssd)
+    assert float(jnp.mean(m0.astype(jnp.float32))) == pytest.approx(
+        0.3, abs=0.03
+    )
+    assert bool(jnp.any(m0 != m1))
+    # Address-salted: identical req_id streams over different LBAs (two
+    # array drives with salted workloads) produce different miss sets.
+    other = dataclasses.replace(
+        batch, lba=jnp.full((n,), 17, jnp.int32)
+    )
+    m2 = mapping_miss(st0, other, ssd)
+    assert bool(jnp.any(m0 != m2))
+
+
+# ---------------------------------------------------------------------------
+# Writes + GC.
+# ---------------------------------------------------------------------------
+
+def test_writes_pay_program_latency_and_serialize():
+    """Every write takes >= program_us; sustained writes queue at the
+    die-array program ceiling, not the timing-model read ceiling."""
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    client = StorageClient(SSD, cfg)
+    flash = _flash_store()
+    n = 512
+    lba = (jnp.arange(n, dtype=jnp.int32) * 29) % SSD.num_blocks
+    data = jnp.ones((n, 8), jnp.float32)
+    st, flash2, done = client.write(
+        client.init_state(), flash, data, lba, jnp.float32(0)
+    )
+    lat = np.asarray(done)
+    assert (lat >= SSD.flash_program_us - 1e-3).all()
+    # Log-structured round-robin placement: the batch spreads evenly, so
+    # the makespan is ~n/num_chips programs deep, far below one die's
+    # serial time.
+    per_chip = n / SSD.num_chips
+    assert float(done.max()) >= per_chip * SSD.flash_program_us - 1e-3
+    assert float(done.max()) < 2.5 * per_chip * SSD.flash_program_us
+    # Functional write landed.
+    np.testing.assert_array_equal(np.asarray(flash2[lba]), np.asarray(data))
+
+
+def test_gc_never_schedules_chips_backwards():
+    """Across many engine rounds of a steady-state mixed workload, die
+    cursors are monotonically non-decreasing and GC only accumulates."""
+    ssd = SSD.replace(num_blocks=1 << 12)
+    wl = workloads.SteadyStateMixed(io_depth=32, read_frac=0.5, theta=0.9)
+    plat = PlatformModel()
+    st = engine.init_state(CFG, ssd, wl)
+    chips = np.asarray(st.device.flash.chip_busy)
+    gc = 0.0
+    free_min = float(st.device.flash.free_pages)
+    for _ in range(20):
+        st = engine.engine_round(st, CFG, ssd, wl, plat)
+        new_chips = np.asarray(st.device.flash.chip_busy)
+        assert (new_chips >= chips - 1e-6).all()
+        new_gc = float(st.device.flash.gc_count)
+        assert new_gc >= gc
+        chips, gc = new_chips, new_gc
+        free_min = min(free_min, float(st.device.flash.free_pages))
+    assert gc > 0.0, "steady-state mixed load must trigger GC"
+    # GC kept the pool from collapsing to zero.
+    assert float(st.device.flash.free_pages) > 0.0
+
+
+def test_steady_state_inflates_tail_vs_fresh():
+    """Same 70/30 mix: the preconditioned drive GCs and its p99 blows up
+    relative to the fresh drive (fig20's contrast)."""
+    ssd = SSD.replace(num_blocks=1 << 12)
+    cfg = CFG.replace(poll_quantum_us=50.0)
+    fresh = engine.simulate(
+        cfg, ssd, workloads.MixedReadWrite(io_depth=32, read_frac=0.7),
+        rounds=48,
+    )
+    steady = engine.simulate(
+        cfg, ssd, workloads.SteadyStateMixed(io_depth=32, read_frac=0.7),
+        rounds=48,
+    )
+    assert float(steady.device.flash.gc_count) > float(
+        fresh.device.flash.gc_count
+    )
+    assert float(steady.metrics.p99_us()) > float(fresh.metrics.p99_us())
+
+
+# ---------------------------------------------------------------------------
+# Array (vmap) invariants.
+# ---------------------------------------------------------------------------
+
+def test_write_array_matches_per_device_loop():
+    """write_array's vmapped pricing equals M independent single-device
+    writes, bit-exactly."""
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    client = StorageClient(SSD, cfg)
+    flash = _flash_store()
+    m, n = 4, 128
+    lba = jnp.stack(
+        [(jnp.arange(n, dtype=jnp.int32) * (3 + i)) % SSD.num_blocks
+         for i in range(m)]
+    )
+    data = jnp.ones((m, n, 8), jnp.float32) * 5.0
+    astate = client.init_array_state(m)
+    astate2, _, adone = client.write_array(
+        astate, flash, data, lba, jnp.float32(0)
+    )
+    for i in range(m):
+        sti = ClientState(dev=jax.tree.map(lambda x: x[i], astate.dev))
+        sti2, _, di = client.write(
+            sti, flash, data[i], lba[i], jnp.float32(0)
+        )
+        np.testing.assert_array_equal(np.asarray(adone[i]), np.asarray(di))
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.map(lambda x: x[i], astate2.dev.flash)
+                       .chip_busy),
+            np.asarray(sti2.dev.flash.chip_busy),
+        )
+
+
+def test_multi_device_array_with_writes():
+    """The vmapped M-drive array carries independent per-drive flash
+    state (leading device axis on every FlashState leaf)."""
+    wl = workloads.MixedReadWrite(io_depth=16, read_frac=0.7)
+    arr = engine.simulate(CFG, SSD, wl, rounds=16, num_devices=3)
+    assert arr.device.flash.chip_busy.shape == (3, SSD.num_chips)
+    assert arr.device.flash.free_pages.shape == (3,)
+    # Per-drive streams are salted: die usage diverges across drives.
+    chips = np.asarray(arr.device.flash.chip_busy)
+    assert not np.array_equal(chips[0], chips[1])
+    assert float(engine.aggregate_iops(arr)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Unit-level stage behavior + config validation.
+# ---------------------------------------------------------------------------
+
+def test_flash_stage_writes_advance_only_their_dies():
+    """Direct stage call: a write-only batch advances exactly the dies
+    the round-robin allocator placed programs on."""
+    ssd = SSD
+    n = ssd.num_chips // 2  # fewer writes than dies
+    from repro.core.device import make_direct_batch
+
+    batch = make_direct_batch(
+        jnp.arange(n, dtype=jnp.int32), jnp.float32(0),
+        opcode=jnp.full((n,), OP_WRITE, jnp.int32),
+    )
+    st = FlashState.init(ssd)
+    arrival = jnp.zeros((n,), jnp.float32)
+    target = jnp.full((n,), ssd.l_min_us, jnp.float32)
+    st2, flash_done = flash_stage(st, batch, arrival, target, ssd)
+    busy = np.asarray(st2.chip_busy)
+    assert (busy[:n] == ssd.flash_program_us).all()
+    assert (busy[n:] == 0.0).all()
+    np.testing.assert_allclose(
+        np.asarray(flash_done), ssd.flash_program_us, rtol=1e-6
+    )
+
+
+def test_chip_of_spreads_addresses():
+    lba = jnp.arange(10_000, dtype=jnp.int32)
+    counts = np.bincount(np.asarray(chip_of(lba, SSD)),
+                         minlength=SSD.num_chips)
+    assert counts.min() > 0.5 * counts.mean()
+
+
+def test_ssd_config_validation():
+    with pytest.raises(ValueError, match="mapping_hit_rate"):
+        SSDConfig(mapping_hit_rate=1.5)
+    with pytest.raises(ValueError, match="num_channels"):
+        SSDConfig(num_channels=0)
+    with pytest.raises(ValueError, match="over_provision"):
+        SSDConfig(over_provision=0.0)
+    with pytest.raises(ValueError, match="gc_watermark"):
+        SSDConfig(over_provision=0.05, gc_watermark=0.05)
