@@ -85,3 +85,32 @@ cold = engine.simulate(
 )
 print(f"CMT 50% hits  : avg E2E {float(cold.metrics.avg_e2e_us()):.0f} us "
       f"vs {float(m.avg_e2e_us()):.0f} us all-hit")
+
+# 9. The queue-pair completion path and the GPU page cache. By default
+#    both are neutral: completions post to CQ rings and reap with zero
+#    added time. Turning the knobs on shows the two tradeoffs:
+#    (a) completion coalescing — with a per-doorbell cost, batching 16
+#    completions per CQ doorbell recovers IOPS an uncoalesced stream
+#    loses to doorbell serialization (fig21);
+#    (b) a Zipf-hot workload in front of a GPU-side page cache — hits
+#    complete at GPU-local latency and never post an SQE, so delivered
+#    IOPS amplify with the hit rate (fig22).
+from repro.core.types import CacheConfig, QPConfig
+
+bell = QPConfig(cq_coalesce_n=1, cq_coalesce_us=50.0, cq_doorbell_us=1.0)
+coal = bell.replace(cq_coalesce_n=16)
+slow_cq = engine.simulate(cfg.replace(qp=bell), ssd, wl, rounds=64)
+fast_cq = engine.simulate(cfg.replace(qp=coal), ssd, wl, rounds=64)
+print(f"CQ coalescing : 1/doorbell {float(slow_cq.metrics.iops())/1e6:.1f} "
+      f"MIOPS -> 16/doorbell {float(fast_cq.metrics.iops())/1e6:.1f} MIOPS")
+
+cached_cfg = cfg.replace(
+    cache=CacheConfig(enabled=True, num_sets=1024, ways=4, hit_us=0.5)
+)
+zipf = workloads.ZipfClosedLoop(io_depth=1024, theta=0.9)
+uncached = engine.simulate(cfg, ssd, zipf, rounds=64)
+cached = engine.simulate(cached_cfg, ssd, zipf, rounds=64)
+cm = cached.metrics
+print(f"page cache    : Zipf {float(uncached.metrics.iops())/1e6:.1f} MIOPS "
+      f"-> {float(cm.iops())/1e6:.1f} MIOPS at "
+      f"{float(cm.hit_rate())*100:.0f}% hit rate")

@@ -1,10 +1,13 @@
 """Local dry-run of .github/workflows/ci.yml (act-equivalent).
 
 Parses the workflow and executes every ``run:`` step of every job in
-order, with the workflow's ``env:`` applied. Steps whose executable is
-not installed locally (e.g. ``ruff`` on a runtime-only box) are reported
-as SKIPPED rather than failed — CI still runs them; this script tells
-you everything that *can* be validated locally passes.
+order, with the workflow's ``env:`` applied — so new steps register here
+automatically (the bench-smoke job currently runs the fig12 floor check
+plus the fig21 CQ-coalescing and fig22 cache-hit-rate quick benchmarks).
+Steps whose executable is not installed locally (e.g. ``ruff`` on a
+runtime-only box) are reported as SKIPPED rather than failed — CI still
+runs them; this script tells you everything that *can* be validated
+locally passes.
 
     python scripts/ci_dryrun.py [job ...]
 """

@@ -1,4 +1,5 @@
 """Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/."""
+
 import glob
 import json
 
@@ -13,21 +14,25 @@ for f in sorted(glob.glob("experiments/dryrun/*__single.json")):
         continue
     rows.append((r["arch"], r["shape"], r))
 
-print("| arch | shape | compute (s) | memory (s) | collective (s) | "
-      "bottleneck | roofline frac | useful ratio | HBM peak (GB) |")
+print(
+    "| arch | shape | compute (s) | memory (s) | collective (s) | "
+    "bottleneck | roofline frac | useful ratio | HBM peak (GB) |"
+)
 print("|---|---|---|---|---|---|---|---|---|")
 for arch, shape, r in rows:
     if r is None:
-        print(f"| {arch} | {shape} | — | — | — | skipped (full-attention, "
-              f"per assignment) | — | — | — |")
+        print(
+            f"| {arch} | {shape} | — | — | — | skipped (full-attention, "
+            f"per assignment) | — | — | — |"
+        )
         continue
     u = r.get("useful_compute_ratio")
+    useful = f"{u:.2f}" if u is not None else "—"
     print(
         f"| {arch} | {shape} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
         f"| {r['collective_s']:.3e} | {r['bottleneck']} "
-        f"| {r['roofline_fraction']:.3f} | "
-        f"{u:.2f} |" if u else "—",
-        f" {r['hbm_peak_bytes']/1e9:.1f} |",
+        f"| {r['roofline_fraction']:.3f} | {useful} "
+        f"| {r['hbm_peak_bytes'] / 1e9:.1f} |"
     )
 
 print()

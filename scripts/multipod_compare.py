@@ -1,4 +1,5 @@
 """Single-pod vs multi-pod roofline comparison (train_4k cells)."""
+
 import glob
 import json
 
@@ -8,6 +9,8 @@ for f in sorted(glob.glob("experiments/dryrun/*__train_4k__*.json")):
     r = json.load(open(f))
     if r["status"] != "ok":
         continue
-    print(f"| {r['arch']} | {r['mesh']} | {r['compute_s']:.2e} "
-          f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
-          f"| {r['roofline_fraction']:.3f} |")
+    print(
+        f"| {r['arch']} | {r['mesh']} | {r['compute_s']:.2e} "
+        f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+        f"| {r['roofline_fraction']:.3f} |"
+    )

@@ -8,11 +8,17 @@ faults their neighbors' vectors in through the SwarmIO storage client
 the top-L candidate list.
 
 Virtual-time accounting: per iteration the storage reads are priced by the
-configured SSD model (batch × width × degree parallel reads); the GPU
-compute is a calibrated per-iteration cost model. QPS therefore responds
-to device IOPS exactly as the paper's Fig. 16 study: small batches can't
-generate enough parallel I/O to exploit a faster device; larger batches
-can, and the optimal search width W shifts upward with IOPS.
+configured SSD model (batch × width × degree parallel reads) through the
+same SQ/CQ queue-pair path as the engine; the GPU compute is a calibrated
+per-iteration cost model. QPS therefore responds to device IOPS exactly
+as the paper's Fig. 16 study: small batches can't generate enough
+parallel I/O to exploit a faster device; larger batches can, and the
+optimal search width W shifts upward with IOPS.
+
+With ``EngineConfig.cache.enabled`` (see ``case_study(cache_sets=...)``)
+a GPU-side page cache sits in front of submission: beam searches revisit
+hub vectors across queries and iterations, so hits amplify QPS without
+touching the device — the fig22 regime.
 """
 from __future__ import annotations
 
@@ -24,7 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.client import StorageClient
-from repro.core.types import EngineConfig, PlatformModel, SSDConfig
+from repro.core.types import (
+    CacheConfig,
+    EngineConfig,
+    PlatformModel,
+    SSDConfig,
+)
 
 BIG = 3e38  # python float: jnp module constants leak into jaxprs
 
@@ -260,8 +271,14 @@ def case_study(
     seed: int = 0,
     num_devices: int = 1,
     write_back: bool = False,
+    cache_sets: int = 0,
 ) -> dict:
-    """One (batch, width, IOPS) cell of the paper's Fig. 16 study."""
+    """One (batch, width, IOPS) cell of the paper's Fig. 16 study.
+
+    ``cache_sets > 0`` enables the GPU-side page cache in front of the
+    vector fetches (4-way set-associative, ``cache_sets`` sets) — the
+    fig22 hit-rate-amplification study.
+    """
     cfg = SearchConfig(beam_width=width, iterations=iterations)
     vecs, graph = _cached_index(n, cfg.dim, cfg.degree, seed)
     queries = jax.random.normal(
@@ -273,9 +290,14 @@ def case_study(
         n_instances=max(64, int(t_max_iops // 4e4)),
         num_blocks=n,
     )
+    ecfg = EngineConfig(
+        num_units=8, fetch_width=64,
+        cache=CacheConfig(enabled=cache_sets > 0,
+                          num_sets=max(cache_sets, 1)),
+    )
     out = search(
-        queries, vecs, graph, cfg, ssd, num_devices=num_devices,
-        write_back=write_back,
+        queries, vecs, graph, cfg, ssd, ecfg=ecfg,
+        num_devices=num_devices, write_back=write_back,
     )
     truth = ground_truth(vecs, queries, cfg.top_k)
     out["recall"] = recall_at_k(out["indices"], truth)

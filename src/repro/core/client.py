@@ -1,24 +1,32 @@
 """Accelerator-initiated storage client (virtual time).
 
-Applications (the SSD-backed KV tier, the vector-search case study) do not
-need the full SQ-ring machinery — they issue *batched* block reads and
-writes and need (a) the data moved, functionally, and (b) faithful
-virtual-time completion times under a configured device model.
-``StorageClient`` provides exactly that: each ``read``/``write`` models
-GPU-initiated submission across the configured service units and returns
-per-request completion times plus the moved blocks.
+Applications (the SSD-backed KV tier, the vector-search case study) issue
+*batched* block reads and writes and need (a) the data moved,
+functionally, and (b) faithful virtual-time completion times under a
+configured device model. ``StorageClient`` provides exactly that.
 
-All cost modeling lives in the unified ``DevicePipeline`` (device.py) — the
-same stages the closed-loop engine runs — so the client and the engine
-provably price I/O identically: ``read``/``write`` are ``fetch_direct``
-(stage 1, ring-less variant) followed by the shared ``process`` (stages
-2-4; writes pick up flash program latency, GC back-pressure, and mapping
-misses from stage 4). The client carries no cost formulas of its own.
+The client runs the *same queue-pair path as the engine* at every layer:
+each ``read``/``write`` posts SQEs into real ``SQRings`` (requests dealt
+round-robin across the service units' SQs), the configured frontend
+fetches them (``frontend.fetch_distributed``/``fetch_centralized`` — the
+identical ring-fetch code ``engine_round`` runs), the shared
+``DevicePipeline.process`` prices stages 2-4, and every completion is
+posted to the paired CQ and reaped by the consumer (stage 5, qp.py).
+Batches larger than one fetch window (``num_sqs * fetch_width``) drain
+the rings over multiple statically unrolled fetch passes. The client
+carries no cost formulas of its own, and the test suite asserts its
+completion times reproduce ``engine_round`` bit-exactly for the same
+request stream.
 
-``read_array``/``write_array``/``read_striped`` extend the same program to
-an M-drive array: the per-device pipeline is ``vmap``-ed over a leading
-device axis, so one jit program prices the whole array (paper-title
-100-MIOPS regime at M x 40-MIOPS drives).
+Stage 0: with ``EngineConfig.cache.enabled`` a GPU-side page cache
+(cache.py) filters read hits *before* SQ submission — they complete at
+GPU-local latency and never touch the rings or the device; completed
+reads and writes fill the cache (write-allocate).
+
+``read_array``/``write_array``/``read_striped`` extend the same program
+to an M-drive array: the per-device pipeline is ``vmap``-ed over a
+leading device axis, so one jit program prices the whole array
+(paper-title 100-MIOPS regime at M x 40-MIOPS drives).
 """
 from __future__ import annotations
 
@@ -28,12 +36,15 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import cache as cache_mod
+from repro.core import frontend
+from repro.core.cache import CacheState
 from repro.core.device import (
     DevicePipeline,
     DeviceState,
-    init_array_state,
-    make_direct_batch,
+    init_array_state as _stack_states,
 )
+from repro.core.frontend import SQRings
 from repro.core.types import (
     OP_WRITE,
     EngineConfig,
@@ -48,6 +59,7 @@ class ClientState:
     """Virtual-time device state carried across application steps."""
 
     dev: DeviceState
+    cache: "CacheState | None" = None   # stage-0 GPU page cache
 
     @staticmethod
     def init(ssd: SSDConfig, num_units: int,
@@ -77,13 +89,75 @@ class StorageClient:
         """Fresh state with unit/worker shapes derived from ``cfg`` — the
         exact shapes ``engine_round`` prices with (parity-safe for every
         frontend/datapath combination)."""
-        return ClientState(dev=self.pipeline.init_state())
+        return ClientState(
+            dev=self.pipeline.init_state(),
+            cache=(
+                CacheState.init(self.cfg.cache)
+                if self.cfg.cache.enabled else None
+            ),
+        )
 
     def init_array_state(self, num_devices: int) -> ClientState:
         """Fresh stacked state for an M-drive array, cfg-derived shapes."""
-        return ClientState(
-            dev=init_array_state(self.pipeline, num_devices)
+        return _stack_states(lambda _: self.init_state(), num_devices)
+
+    # -- the shared SQ -> pipeline -> CQ ring path --------------------------
+    def _submit_through_rings(
+        self,
+        dev: DeviceState,
+        lba: jax.Array,        # (N,) i32
+        t_submit: jax.Array,   # (N,) f32
+        valid: jax.Array,      # (N,) bool
+        opcode: jax.Array,     # (N,) i32
+    ) -> Tuple[DeviceState, jax.Array]:
+        """Post a flat batch as SQEs, fetch + process + reap via the CQs.
+
+        The exact engine path: entries are dealt round-robin across the
+        service units' SQs (time-sorted, so rings stay in-order), the
+        configured ring frontend fetches them in as many passes as the
+        fetch window requires, and completion times are the CQ-reaped
+        times. Returns (dev', done (N,) in the original request order).
+        """
+        cfg, plat, pipe = self.cfg, self.plat, self.pipeline
+        n = lba.shape[0]
+        q, f = cfg.num_sqs, cfg.fetch_width
+        if n > q * cfg.sq_depth:
+            raise ValueError(
+                f"batch of {n} requests exceeds ring capacity "
+                f"num_sqs*sq_depth={q * cfg.sq_depth}"
+            )
+
+        # Deal time-sorted requests across SQs; req_id carries the
+        # original index so completions scatter back to request order.
+        order = jnp.argsort(t_submit, stable=True)
+        sq_id = frontend.deal_sqs(n, cfg)
+        zeros = jnp.zeros((n,), jnp.int32)
+        rings = SQRings.empty(q, cfg.sq_depth)
+        rings = frontend.submit(
+            rings, sq_id, t_submit[order], opcode[order], lba[order],
+            jnp.ones((n,), jnp.int32), zeros, order.astype(jnp.int32),
+            valid[order],
         )
+
+        cq = pipe.init_cq()
+        row_unit = frontend.fetch_row_units(cfg)
+        clock = jnp.max(jnp.where(valid, t_submit, 0.0))
+        done = jnp.zeros((n,), jnp.float32)
+        passes = -(-n // (q * f))  # ceil: fetch window per pass
+        for _ in range(passes):
+            # Dispatchers poll again as soon as they are free (all
+            # entries are already posted and visible).
+            clock = jnp.maximum(clock, jnp.max(dev.disp_time))
+            rings, disp_time, batch, fetch_done = frontend.fetch(
+                rings, clock, dev.disp_time, cfg, plat
+            )
+            dev = dataclasses.replace(dev, disp_time=disp_time)
+            dev, cq, res = pipe.process(
+                dev, batch, fetch_done, row_unit, cq
+            )
+            idx = jnp.where(batch.valid, batch.req_id, n)
+            done = done.at[idx].set(res.reaped, mode="drop")
+        return dev, done
 
     def read(
         self,
@@ -93,14 +167,37 @@ class StorageClient:
         t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
         valid: jax.Array | None = None,
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
-        """Issue N block reads at ``t_submit``.
+        """Issue N block reads at ``t_submit`` through the SQ/CQ rings.
 
         Returns (state', data (N, block_words), completion_times (N,)).
+        With the stage-0 cache enabled, hits complete at ``hit_us`` and
+        never post an SQE; completed reads fill the cache.
         """
-        batch = make_direct_batch(lba, t_submit, valid)
-        dev, res = self.pipeline.submit(state.dev, batch)
-        data = flash[jnp.where(batch.valid, batch.lba, 0)]
-        return ClientState(dev=dev), data, res.done
+        n = lba.shape[0]
+        lba = lba.astype(jnp.int32)
+        t_submit = jnp.broadcast_to(
+            jnp.asarray(t_submit, jnp.float32), (n,)
+        )
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+
+        cstate = state.cache
+        submit_valid = valid
+        if self.cfg.cache.enabled:
+            hit, hit_done = cache_mod.serve(
+                cstate, lba, valid, t_submit, self.cfg.cache
+            )
+            submit_valid = valid & ~hit
+
+        dev, done = self._submit_through_rings(
+            state.dev, lba, t_submit, submit_valid,
+            jnp.zeros((n,), jnp.int32),
+        )
+        if self.cfg.cache.enabled:
+            done = jnp.where(hit, hit_done, done)
+            cstate = cache_mod.insert(cstate, lba, valid, self.cfg.cache)
+        data = flash[jnp.where(valid, lba, 0)]
+        return ClientState(dev=dev, cache=cstate), data, done
 
     def write(
         self,
@@ -111,24 +208,35 @@ class StorageClient:
         t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
         valid: jax.Array | None = None,
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
-        """Issue N block writes at ``t_submit``.
+        """Issue N block writes at ``t_submit`` through the SQ/CQ rings.
 
         Priced by the identical pipeline as ``read`` — the OP_WRITE opcode
         routes stage 4 to flash programs (and GC once the free pool
         drains), so sustained writes are honestly slower than reads.
+        Writes always reach the device (durability); with the cache
+        enabled they fill it (write-allocate), so reads-after-writes hit.
         Returns (state', flash' with the blocks scattered in,
         completion_times (N,)). If the batch writes the same LBA more
         than once, which copy lands is unspecified (XLA scatter with
         duplicate indices) — dedupe before submitting when that matters.
         """
         n = lba.shape[0]
-        batch = make_direct_batch(
-            lba, t_submit, valid, opcode=jnp.full((n,), OP_WRITE, jnp.int32)
+        lba = lba.astype(jnp.int32)
+        t_submit = jnp.broadcast_to(
+            jnp.asarray(t_submit, jnp.float32), (n,)
         )
-        dev, res = self.pipeline.submit(state.dev, batch)
-        dst = jnp.where(batch.valid, batch.lba, flash.shape[0])
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        dev, done = self._submit_through_rings(
+            state.dev, lba, t_submit, valid,
+            jnp.full((n,), OP_WRITE, jnp.int32),
+        )
+        cstate = state.cache
+        if self.cfg.cache.enabled:
+            cstate = cache_mod.insert(cstate, lba, valid, self.cfg.cache)
+        dst = jnp.where(valid, lba, flash.shape[0])
         flash = flash.at[dst].set(data, mode="drop")
-        return ClientState(dev=dev), flash, res.done
+        return ClientState(dev=dev, cache=cstate), flash, done
 
     def read_array(
         self,
@@ -147,14 +255,13 @@ class StorageClient:
         if valid is None:
             valid = jnp.ones((m, n), bool)
 
-        def one(dev, lba_d, t_d, valid_d):
-            batch = make_direct_batch(lba_d, t_d, valid_d)
-            dev, res = self.pipeline.submit(dev, batch)
-            return dev, res.done
+        def one(st, lba_d, t_d, valid_d):
+            st, _, done = self.read(st, flash, lba_d, t_d, valid_d)
+            return st, done
 
-        dev, done = jax.vmap(one)(state.dev, lba, t_submit, valid)
+        state, done = jax.vmap(one)(state, lba, t_submit, valid)
         data = flash[jnp.where(valid, lba, 0)]
-        return ClientState(dev=dev), data, done
+        return state, data, done
 
     def write_array(
         self,
@@ -181,19 +288,23 @@ class StorageClient:
         t_submit = jnp.broadcast_to(t_submit, (m, n))
         if valid is None:
             valid = jnp.ones((m, n), bool)
-        op = jnp.full((n,), OP_WRITE, jnp.int32)
+        zero_store = jnp.zeros((1,) + data.shape[2:], data.dtype)
 
-        def one(dev, lba_d, t_d, valid_d):
-            batch = make_direct_batch(lba_d, t_d, valid_d, opcode=op)
-            dev, res = self.pipeline.submit(dev, batch)
-            return dev, res.done
+        def one(st, data_d, lba_d, t_d, valid_d):
+            # Price + cache via the single-device path against a dummy
+            # store; the real scatter into the shared store happens once
+            # below (identical semantics, no M copies of the store).
+            st, _, done = self.write(
+                st, zero_store, data_d, lba_d, t_d, valid_d
+            )
+            return st, done
 
-        dev, done = jax.vmap(one)(state.dev, lba, t_submit, valid)
+        state, done = jax.vmap(one)(state, data, lba, t_submit, valid)
         dst = jnp.where(valid, lba, flash.shape[0]).reshape(-1)
         flash = flash.at[dst].set(
             data.reshape((m * n,) + data.shape[2:]), mode="drop"
         )
-        return ClientState(dev=dev), flash, done
+        return state, flash, done
 
     def read_striped(
         self,

@@ -1,12 +1,15 @@
 """The unified, layered device pipeline (single source of truth for cost).
 
 Every consumer of the emulated SSD — the closed-loop engine and the
-application-facing ``StorageClient`` — prices I/O through the same four
+application-facing ``StorageClient`` — prices I/O through the same
 stages over one ``DeviceState`` pytree:
 
-    stage 1  frontend fetch      how/when request descriptors become visible
-                                 to a service unit (ring fetch or direct
-                                 batch fetch — both in frontend.py)
+    stage 0  page cache          GPU-side set-associative cache filters
+                                 hits *before* SQ submission (cache.py;
+                                 applied by the consumers, not here)
+    stage 1  frontend fetch      how/when posted SQ entries become visible
+                                 to a service unit (ring fetch, distributed
+                                 or centralized — frontend.py)
     stage 2  timing model        target completion times under the global
                                  lock (aggregated / per-request, global /
                                  local scope — timing.py)
@@ -18,15 +21,25 @@ stages over one ``DeviceState`` pytree:
                                  surcharges the simple timing model omits
                                  (flash.py; exact no-op for all-hit
                                  read-only traffic)
+    stage 5  CQ completion path  every completion is *posted* to the CQ
+                                 paired with its SQ and *reaped* by the
+                                 GPU consumer — coalescing, doorbell
+                                 serialization, poll cost (qp.py; exact
+                                 no-op under the neutral QPConfig)
 
-``DevicePipeline.process`` composes stages 2-4 for a fetched
-``RequestBatch`` and returns per-request (arrival, target, ready,
-flash_done, done); the stage-1 variants differ only in where descriptors
-come from, so the engine runs ``frontend.fetch_{distributed,centralized}``
-and the client runs ``DevicePipeline.fetch_direct``, then both call the
-identical ``process``. A multi-drive array is the same program ``vmap``-ed
-over a leading device axis (see ``engine.simulate(num_devices=...)`` and
-``StorageClient.read_striped``).
+``DevicePipeline.process`` composes stages 2-5 for a fetched
+``RequestBatch``: it threads the ``CQRings`` through and returns per-
+request (arrival, target, ready, flash_done, done, reaped), where
+``reaped`` — not ``done`` — is what consumers observe. Both the engine
+and the client run ``frontend.fetch_{distributed,centralized}`` over the
+same SQ rings and then call the identical ``process``; the queue-pair
+layer is symmetric end to end. A multi-drive array is the same program
+``vmap``-ed over a leading device axis (see
+``engine.simulate(num_devices=...)`` and ``StorageClient.read_striped``).
+
+The ring-less direct path (``fetch_direct``/``submit_direct``) is a
+test-only shortcut for unit tests that probe stages 2-4 in isolation —
+no production consumer uses it.
 """
 from __future__ import annotations
 
@@ -36,8 +49,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import datapath, frontend, timing
+from repro.core import datapath, frontend, qp, timing
 from repro.core.flash import FlashState, flash_stage
+from repro.core.qp import CQRings
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
@@ -88,6 +102,9 @@ class PipelineResult:
     ready: jax.Array       # data-path completion (copy landed)
     flash_done: jax.Array  # flash-backend completion (programs/GC/misses)
     done: jax.Array        # max(target, ready, flash_done), 0 if invalid
+    reaped: jax.Array      # when the consumer observed the completion via
+                           # the CQ (== done when no CQ is threaded or the
+                           # QP config is neutral)
 
 
 def lock_pass(
@@ -136,16 +153,20 @@ class DevicePipeline:
             self.ssd, self.num_units, self.cfg.workers_per_unit
         )
 
-    # -- stage 1 (direct variant; ring variants live in frontend.py) --------
+    # -- stage 1 (ring variants live in frontend.py) -------------------------
     def fetch_direct(
         self,
         state: DeviceState,
         t_submit: jax.Array,   # (N,) f32
         valid: jax.Array,      # (N,) bool
     ) -> Tuple[DeviceState, jax.Array, jax.Array]:
-        """Fetch a directly submitted flat batch (no SQ rings).
+        """TEST-ONLY: fetch a directly submitted flat batch (no SQ rings).
 
-        Returns (state', fetch_done (N,), unit (N,)).
+        Production consumers (engine *and* client) submit through the SQ
+        rings and fetch via ``frontend.fetch_{distributed,centralized}``;
+        this ring-less shortcut exists so unit tests can probe stages
+        2-4 without ring machinery. Returns (state', fetch_done (N,),
+        unit (N,)).
         """
         fetch_done, disp_time, unit = frontend.direct_fetch_times(
             state.disp_time, t_submit, valid, self.cfg, self.plat
@@ -154,16 +175,26 @@ class DevicePipeline:
             dataclasses.replace(state, disp_time=disp_time), fetch_done, unit
         )
 
-    # -- stages 2+3 ----------------------------------------------------------
+    def init_cq(self) -> CQRings:
+        """Fresh CQ rings shaped to mirror the configured SQ rings."""
+        return CQRings.empty(self.cfg.num_sqs, self.cfg.sq_depth)
+
+    # -- stages 2-5 ----------------------------------------------------------
     def process(
         self,
         state: DeviceState,
         batch: RequestBatch,
         fetch_done: jax.Array,  # (N,) per-row fetch completion times
         unit: jax.Array,        # (N,) i32 non-decreasing service-unit ids
-    ) -> Tuple[DeviceState, PipelineResult]:
+        cq: CQRings | None = None,
+    ) -> Tuple[DeviceState, CQRings | None, PipelineResult]:
         """Timing model under the global lock, then the backend data path,
-        then the flash-level backend (writes/GC/mapping misses)."""
+        then the flash-level backend (writes/GC/mapping misses), then the
+        CQ completion path: every completion is posted to the CQ paired
+        with its SQ (``batch.sq_id``) and reaped by the consumer —
+        ``result.reaped`` is the consumer-observed completion time.
+
+        ``cq=None`` (test-only) skips stage 5: ``reaped == done``."""
         cfg, ssd, plat = self.cfg, self.ssd, self.plat
         u = state.num_units
         valid = batch.valid
@@ -226,37 +257,49 @@ class DevicePipeline:
             dsa_time=dsa_time, lock_time=lock_time, map_time=map_time,
             flash=fstate,
         )
-        return new_state, PipelineResult(
+
+        # -- stage 5: post to the CQ and reap (queue-pair layer).
+        if cq is None:
+            reaped = done
+        else:
+            cq, reaped = qp.post_and_reap(
+                cq, batch.sq_id, done, batch.req_id, valid, cfg.qp
+            )
+        return new_state, cq, PipelineResult(
             arrival=arrival, target=target, ready=ready,
-            flash_done=flash_done, done=done,
+            flash_done=flash_done, done=done, reaped=reaped,
         )
 
-    def submit(
+    def submit_direct(
         self,
         state: DeviceState,
         batch: RequestBatch,
     ) -> Tuple[DeviceState, PipelineResult]:
-        """Full pipeline for a direct batch: fetch_direct + process.
+        """TEST-ONLY: fetch_direct + process with no rings on either side.
 
         Op-agnostic — the batch's ``opcode`` decides read vs write pricing
         (stage 2/3 cost both identically; stage 4 charges programs, GC,
-        and mapping misses where they apply).
+        and mapping misses where they apply). Production consumers go
+        through the SQ/CQ rings instead (see ``StorageClient``).
         """
         state, fetch_done, unit = self.fetch_direct(
             state, batch.arrival, batch.valid
         )
-        return self.process(state, batch, fetch_done, unit)
-
-    # Back-compat alias from the read-only PR-1 pipeline surface.
-    read = submit
+        state, _, res = self.process(state, batch, fetch_done, unit)
+        return state, res
 
 
-def init_array_state(pipe: DevicePipeline, num_devices: int) -> DeviceState:
-    """Stacked DeviceState with a leading (M,) device axis for vmap."""
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (num_devices,) + x.shape),
-        pipe.init_state(),
-    )
+def init_array_state(init_fn, num_devices: int):
+    """Stacked per-device state with a leading (M,) axis for vmap.
+
+    ``init_fn(salt)`` builds one device's state pytree from its i32
+    device index (salt-aware initializers — e.g. the engine's workload
+    prefill — produce distinct per-drive streams; salt-oblivious ones —
+    e.g. ``DevicePipeline.init_state`` — broadcast identically). This is
+    the single device-layer stacking helper; ``engine.init_array_state``
+    and ``StorageClient.init_array_state`` are thin adapters over it.
+    """
+    return jax.vmap(init_fn)(jnp.arange(num_devices, dtype=jnp.int32))
 
 
 def make_direct_batch(
@@ -266,7 +309,7 @@ def make_direct_batch(
     opcode: jax.Array | None = None,
     nblocks: jax.Array | None = None,
 ) -> RequestBatch:
-    """RequestBatch for ring-less direct submission (client-style reads)."""
+    """RequestBatch for ring-less direct submission (test-only path)."""
     n = lba.shape[0]
     z = jnp.zeros((n,), jnp.int32)
     if valid is None:

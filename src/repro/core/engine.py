@@ -10,12 +10,15 @@ One engine "round" mirrors a service-unit iteration in the paper (Fig. 6):
   4. the flash backend prices flash-level events    (flash.py) — write
      programs serializing per chip, greedy GC stealing die time, and
      cached-mapping-table misses (epoch-batched per round)
-  5. completions post when the target time has elapsed AND the copy is
-     done AND the flash-side work finished; the workload generator decides
-     what each completed slot submits next (closed-loop resubmit,
-     open-loop arrival, or nothing for replays)
+  5. completions are *posted* to the CQ paired with each request's SQ and
+     *reaped* by the GPU consumer (qp.py) — coalesced doorbells, per-CQ
+     doorbell serialization, and poll cost; the workload generator decides
+     what each reaped slot submits next (closed-loop resubmit, open-loop
+     arrival, or nothing for replays), and an optional stage-0 GPU page
+     cache (cache.py) filters proposed reads that hit before they ever
+     post an SQE
 
-Stages 2-4 are the shared ``DevicePipeline`` (device.py) — the identical
+Stages 2-5 are the shared ``DevicePipeline`` (device.py) — the identical
 code path ``StorageClient`` prices application I/O with. Two time domains
 are tracked: *virtual time* (the emulated device's event time — fidelity
 metrics: IOPS, latency vs. the modeled SSD) and the engine's own
@@ -32,11 +35,15 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import frontend
+from repro.core import cache as cache_mod
+from repro.core import datapath, frontend
+from repro.core.cache import CacheState
 from repro.core.device import DevicePipeline, DeviceState
-from repro.core import datapath
+from repro.core.device import init_array_state as _stack_states
 from repro.core.frontend import SQRings
+from repro.core.qp import CQRings
 from repro.core.types import (
+    OP_READ,
     EngineConfig,
     PlatformModel,
     SSDConfig,
@@ -81,21 +88,22 @@ def hist_percentile(hist: jax.Array, q: float) -> jax.Array:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Metrics:
-    completed: jax.Array      # f32 count
+    completed: jax.Array      # f32 count (device completions + cache hits)
     fetched: jax.Array        # f32 count
-    sum_e2e: jax.Array        # f32 us   (completion - submit)
+    sum_e2e: jax.Array        # f32 us   (reap - submit, consumer-observed)
     sum_target: jax.Array     # f32 us   (timing-model latency)
     sum_proc: jax.Array       # f32 us   (copy-ready - dispatch)
     last_completion: jax.Array  # f32 us  max completion time seen
     first_submit: jax.Array   # f32 us   min submit time seen
     lat_hist: jax.Array       # (HIST_BUCKETS,) f32 E2E latency histogram
+    cache_hits: jax.Array     # f32 count of stage-0 page-cache hits
 
     @staticmethod
     def zero() -> "Metrics":
         z = jnp.float32(0)
         return Metrics(
             z, z, z, z, z, jnp.float32(0), FAR,
-            jnp.zeros((HIST_BUCKETS,), jnp.float32),
+            jnp.zeros((HIST_BUCKETS,), jnp.float32), z,
         )
 
     def iops(self) -> jax.Array:
@@ -112,6 +120,10 @@ class Metrics:
     def avg_proc_us(self) -> jax.Array:
         return self.sum_proc / jnp.maximum(self.completed, 1.0)
 
+    def hit_rate(self) -> jax.Array:
+        """Fraction of completed requests served by the stage-0 cache."""
+        return self.cache_hits / jnp.maximum(self.completed, 1.0)
+
     def p50_us(self) -> jax.Array:
         return hist_percentile(self.lat_hist, 0.50)
 
@@ -125,8 +137,10 @@ class Metrics:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EngineState:
-    rings: SQRings
+    rings: SQRings         # submission half of the queue pairs
+    cq: CQRings            # completion half (SQ q pairs with CQ q)
     device: DeviceState    # the unified pipeline's virtual-time state
+    cache: "CacheState | None"  # stage-0 GPU page cache (None = disabled)
     clock: jax.Array       # ()  virtual now
     flash: jax.Array       # (num_blocks, block_words) emulated flash
     bufs: jax.Array        # (num_bufs, block_words) I/O buffers
@@ -181,7 +195,11 @@ def init_state(
     )
     return EngineState(
         rings=rings,
+        cq=pipe.init_cq(),
         device=pipe.init_state(),
+        cache=(
+            CacheState.init(cfg.cache) if cfg.cache.enabled else None
+        ),
         clock=jnp.float32(0),
         flash=flash,
         bufs=bufs,
@@ -206,59 +224,38 @@ def engine_round(
     wl = as_workload(wl)
     pipe = DevicePipeline(cfg, ssd, plat)
     q, f = cfg.num_sqs, cfg.fetch_width
-    u = state.device.num_units
-    per_unit_rows = q * f // u
 
     # -- 1. frontend fetch ---------------------------------------------------
-    if cfg.frontend == "distributed":
-        rings, disp_time, batch, fetch_done = frontend.fetch_distributed(
-            state.rings, state.clock, state.device.disp_time, cfg, plat
-        )
-    else:
-        rings, disp_time, batch, fetch_done = frontend.fetch_centralized(
-            state.rings, state.clock, state.device.disp_time, cfg, plat
-        )
+    rings, disp_time, batch, fetch_done = frontend.fetch(
+        state.rings, state.clock, state.device.disp_time, cfg, plat
+    )
     submit_t = batch.arrival                       # provisional = submit time
     n = batch.valid.shape[0]
-    unit = jnp.arange(n, dtype=jnp.int32) // per_unit_rows
+    unit = frontend.fetch_row_units(cfg)
 
-    # -- 2+3. the unified device pipeline (timing + data path) ---------------
+    # -- 2-5. the unified device pipeline (timing + data path + QP) ----------
     dev = dataclasses.replace(state.device, disp_time=disp_time)
-    dev, res = pipe.process(dev, batch, fetch_done, unit)
+    dev, cqr, res = pipe.process(dev, batch, fetch_done, unit, state.cq)
 
-    # -- 4. completion metrics ------------------------------------------------
+    # -- completion metrics: the consumer observes ``reaped`` (post-CQ) ------
     valid = batch.valid
-    done = res.done
+    done = res.reaped
     e2e = jnp.where(valid, done - submit_t, 0.0)
     tgt_lat = jnp.where(valid, res.target - res.arrival, 0.0)
     proc = jnp.where(valid, res.ready - res.arrival, 0.0)
     nvalid = jnp.sum(valid.astype(jnp.float32))
-    m = state.metrics
-    metrics = Metrics(
-        completed=m.completed + nvalid,
-        fetched=m.fetched + nvalid,
-        sum_e2e=m.sum_e2e + jnp.sum(e2e),
-        sum_target=m.sum_target + jnp.sum(tgt_lat),
-        sum_proc=m.sum_proc + jnp.sum(proc),
-        last_completion=jnp.maximum(
-            m.last_completion, jnp.max(jnp.where(valid, done, 0.0))
-        ),
-        first_submit=jnp.minimum(
-            m.first_submit, jnp.min(jnp.where(valid, submit_t, FAR))
-        ),
-        lat_hist=m.lat_hist + jax.ops.segment_sum(
-            valid.astype(jnp.float32), latency_bucket(e2e),
-            num_segments=HIST_BUCKETS,
-        ),
+    lat_hist = jax.ops.segment_sum(
+        valid.astype(jnp.float32), latency_bucket(e2e),
+        num_segments=HIST_BUCKETS,
     )
 
-    # -- 5. functional data movement ------------------------------------------
+    # -- functional data movement --------------------------------------------
     flash, bufs = state.flash, state.bufs
     if cfg.emulate_data:
         bufs = datapath.apply_reads(flash, bufs, batch, cfg.use_pallas)
         flash = datapath.apply_writes(flash, bufs, batch)
 
-    # -- 6. workload-driven resubmission --------------------------------------
+    # -- workload-driven resubmission (stage-0 cache filters first) ----------
     new_req = state.req_counter + jnp.arange(n, dtype=jnp.int32)
     new_lba = wl.address(new_req, ssd, state.salt)
     new_op = wl.opcode(new_req, state.salt)
@@ -266,6 +263,82 @@ def engine_round(
     resub_t, resub_valid = wl.next_submit(
         new_req, done, valid, anchor, cfg, ssd, state.salt
     )
+
+    cstate = state.cache
+    ccfg = cfg.cache
+    hits_count = jnp.float32(0)
+    hit_e2e = jnp.float32(0)
+    hit_last = jnp.float32(0)
+    hit_first = jnp.float32(FAR)
+    hit_bucket = jnp.zeros((HIST_BUCKETS,), jnp.float32)
+    ids_per_round = n
+    if ccfg.enabled:
+        # Fills: this round's completed device reads are now GPU-resident.
+        cstate = cache_mod.insert(
+            cstate, batch.lba, valid & (batch.opcode == OP_READ), ccfg
+        )
+        # Hit chase: a proposed read that hits completes at GPU-local
+        # latency without ever posting an SQE, and the slot immediately
+        # proposes its next request — up to ``chase`` hits per slot per
+        # round; the survivor (first miss or chase-truncated request)
+        # is what actually enters the rings.
+        for k in range(ccfg.chase):
+            hit, done_h = cache_mod.serve(
+                cstate, new_lba,
+                resub_valid & (new_op == OP_READ), resub_t, ccfg,
+            )
+            nh = jnp.sum(hit.astype(jnp.float32))
+            hits_count = hits_count + nh
+            hit_e2e = hit_e2e + nh * jnp.float32(ccfg.hit_us)
+            hit_last = jnp.maximum(
+                hit_last, jnp.max(jnp.where(hit, done_h, 0.0))
+            )
+            hit_first = jnp.minimum(
+                hit_first, jnp.min(jnp.where(hit, resub_t, FAR))
+            )
+            hit_bucket = hit_bucket.at[
+                latency_bucket(jnp.float32(ccfg.hit_us))
+            ].add(nh)
+            ids = (
+                state.req_counter
+                + n * (k + 1)
+                + jnp.arange(n, dtype=jnp.int32)
+            )
+            s_lba = wl.address(ids, ssd, state.salt)
+            s_op = wl.opcode(ids, state.salt)
+            s_t, s_valid = wl.next_submit(
+                ids, done_h, hit, anchor, cfg, ssd, state.salt
+            )
+            new_lba = jnp.where(hit, s_lba, new_lba)
+            new_op = jnp.where(hit, s_op, new_op)
+            new_req = jnp.where(hit, ids, new_req)
+            resub_t = jnp.where(hit, s_t, resub_t)
+            resub_valid = jnp.where(hit, s_valid, resub_valid)
+        ids_per_round = n * (ccfg.chase + 1)
+
+    m = state.metrics
+    metrics = Metrics(
+        completed=m.completed + nvalid + hits_count,
+        fetched=m.fetched + nvalid,
+        sum_e2e=m.sum_e2e + jnp.sum(e2e) + hit_e2e,
+        sum_target=m.sum_target + jnp.sum(tgt_lat),
+        sum_proc=m.sum_proc + jnp.sum(proc),
+        last_completion=jnp.maximum(
+            jnp.maximum(
+                m.last_completion, jnp.max(jnp.where(valid, done, 0.0))
+            ),
+            hit_last,
+        ),
+        first_submit=jnp.minimum(
+            jnp.minimum(
+                m.first_submit, jnp.min(jnp.where(valid, submit_t, FAR))
+            ),
+            hit_first,
+        ),
+        lat_hist=m.lat_hist + lat_hist + hit_bucket,
+        cache_hits=m.cache_hits + hits_count,
+    )
+
     resub_t = jnp.where(resub_valid, resub_t, FAR)
     last_submit = jnp.maximum(
         state.last_submit,
@@ -292,7 +365,7 @@ def engine_round(
         pick(resub_valid),
     )
 
-    # -- 7. clock advance -----------------------------------------------------
+    # -- clock advance --------------------------------------------------------
     # Discrete-event step with a poll quantum: each round ingests the
     # submissions of a bounded virtual-time window (dispatchers poll
     # continuously in the real emulator; the quantum is our emulation
@@ -307,9 +380,10 @@ def engine_round(
     clock = jnp.where(nxt < FAR, jnp.maximum(stepped, nxt), stepped)
 
     return EngineState(
-        rings=rings, device=dev, clock=clock, flash=flash, bufs=bufs,
-        req_counter=state.req_counter + jnp.int32(n), salt=state.salt,
-        last_submit=last_submit, metrics=metrics,
+        rings=rings, cq=cqr, device=dev, cache=cstate, clock=clock,
+        flash=flash, bufs=bufs,
+        req_counter=state.req_counter + jnp.int32(ids_per_round),
+        salt=state.salt, last_submit=last_submit, metrics=metrics,
     )
 
 
@@ -378,9 +452,10 @@ def init_array_state(
     M-way-striped trace.
     """
     wl = as_workload(wl)
-    return jax.vmap(
-        lambda salt: init_state(cfg, ssd, wl, block_words, salt=salt)
-    )(jnp.arange(num_devices, dtype=jnp.int32))
+    return _stack_states(
+        lambda salt: init_state(cfg, ssd, wl, block_words, salt=salt),
+        num_devices,
+    )
 
 
 def aggregate_iops(state: EngineState) -> jax.Array:

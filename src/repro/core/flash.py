@@ -24,7 +24,8 @@ them once, and GC triggers at most once per epoch with its cost spread
 across the dies. With ``mapping_hit_rate=1.0`` and no writes the stage is
 an exact no-op (cursors never move, every surcharge is zero), so
 read-only workloads reproduce the 3-stage pipeline bit-exactly — the
-PR-1 parity contract.
+PR-1 parity contract, preserved through the queue-pair completion layer
+(stage 5, qp.py) whose neutral default likewise adds zero time.
 """
 from __future__ import annotations
 

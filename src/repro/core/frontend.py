@@ -1,7 +1,9 @@
 """Frontend: submission-queue rings, doorbells, and request fetching.
 
-SQ entries live in contiguous ring buffers (the CQR-bit analogue — paper
-§IV-B), so a coalesced fetch of n entries is a single bulk transfer whose
+The submission half of the queue-pair layer — ``qp.CQRings`` is the
+symmetric completion half (SQ q pairs with CQ q). SQ entries live in
+contiguous ring buffers (the CQR-bit analogue — paper §IV-B), so a
+coalesced fetch of n entries is a single bulk transfer whose
 virtual-time cost is ``txn_base + n*sqe_bytes/bw`` instead of n separate
 transactions. The *distributed* frontend partitions SQs across service units
 and fetches all units' SQs in parallel; the *centralized* baseline models
@@ -254,6 +256,29 @@ def fetch_centralized(
     return rings, disp_time, batch, fetch_done
 
 
+def fetch(
+    rings: SQRings,
+    clock: jax.Array,
+    disp_time: jax.Array,
+    cfg: EngineConfig,
+    plat: PlatformModel,
+) -> Tuple[SQRings, jax.Array, RequestBatch, jax.Array]:
+    """Dispatch to the configured ring frontend — the single fetch entry
+    point shared by ``engine_round`` and ``StorageClient`` (divergence
+    here would silently break their bit-exact parity contract)."""
+    if cfg.frontend == "distributed":
+        return fetch_distributed(rings, clock, disp_time, cfg, plat)
+    return fetch_centralized(rings, clock, disp_time, cfg, plat)
+
+
+def fetch_row_units(cfg: EngineConfig) -> jax.Array:
+    """(Q*F,) i32 service-unit id per fetch-batch row (SQ-major layout),
+    non-decreasing as the pipeline's datapath stage requires."""
+    u = cfg.num_units if cfg.frontend == "distributed" else 1
+    rows = cfg.num_sqs * cfg.fetch_width
+    return jnp.arange(rows, dtype=jnp.int32) // (rows // u)
+
+
 def _per_entry_cost(cfg: EngineConfig, plat: PlatformModel):
     """Non-coalesced per-SQE fetch cost by transport/engine."""
     if cfg.transport == "host":
@@ -293,6 +318,20 @@ def fetch_cost(
     return jnp.where(nfetch > 0, cost, plat.doorbell_poll_us)
 
 
+def deal_sqs(n: int, cfg: EngineConfig) -> jax.Array:
+    """SQ assignment for a flat application batch: request i's SQ, (N,).
+
+    Requests interleave across service units first and then round-robin
+    over each unit's SQs, so a small batch spreads over all dispatchers
+    instead of serializing behind one unit's SQ-drain pass. Within each
+    SQ, assigned requests keep ascending batch order (in-order rings).
+    """
+    u = cfg.num_units if cfg.frontend == "distributed" else 1
+    per_unit = cfg.num_sqs // u
+    i = jnp.arange(n, dtype=jnp.int32)
+    return (i % u) * per_unit + (i // u) % per_unit
+
+
 def direct_fetch_times(
     disp_time: jax.Array,        # (U,) f32 dispatcher busy-until cursors
     t_submit: jax.Array,         # (N,) f32 virtual submission times
@@ -300,7 +339,10 @@ def direct_fetch_times(
     cfg: EngineConfig,
     plat: PlatformModel,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Ring-less frontend for directly submitted batches (StorageClient).
+    """TEST-ONLY ring-less frontend for directly submitted batches.
+
+    Production consumers submit through the SQ rings; this shortcut
+    backs ``DevicePipeline.fetch_direct`` for stage-2-4 unit tests.
 
     Applications issue a flat batch with no SQ machinery: requests are dealt
     round-robin to the ``U`` service units in contiguous runs, and each

@@ -189,6 +189,96 @@ class PlatformModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class QPConfig:
+    """Queue-pair completion-side knobs (the CQ mirror of the SQ rings).
+
+    The device *posts* completion entries to per-SQ completion queues and
+    rings a CQ doorbell; the GPU consumer *polls* and *reaps* them. The
+    defaults are neutral (no coalescing, zero posting/poll cost), so the
+    completion path is virtual-time-transparent and reproduces the
+    pre-QP pipeline bit-exactly — every knob only ever adds time.
+
+    ``cq_coalesce_n``   completions batched per doorbell (1 = off)
+    ``cq_coalesce_us``  timer bound: a partial batch flushes once its
+                        oldest pending completion has waited this long
+    ``cq_doorbell_us``  device-side cost to post one doorbell (serialized
+                        per CQ — the completion-path analogue of the
+                        fetch path's per-transaction cost)
+    ``cq_poll_us``      GPU poll-pass cost per reaped doorbell batch
+    ``cqe_reap_us``     GPU per-CQE read cost within a reaped batch
+    """
+
+    cq_coalesce_n: int = 1
+    cq_coalesce_us: float = 0.0
+    cq_doorbell_us: float = 0.0
+    cq_poll_us: float = 0.0
+    cqe_reap_us: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.cq_coalesce_n < 1:
+            raise ValueError(
+                f"cq_coalesce_n={self.cq_coalesce_n} must be >= 1"
+            )
+        for name in (
+            "cq_coalesce_us", "cq_doorbell_us", "cq_poll_us", "cqe_reap_us"
+        ):
+            if getattr(self, name) < 0.0:
+                raise ValueError(f"{name} must be >= 0")
+
+    @property
+    def neutral(self) -> bool:
+        """True iff the completion path cannot change any virtual time."""
+        return (
+            self.cq_coalesce_n == 1
+            and self.cq_coalesce_us == 0.0
+            and self.cq_doorbell_us == 0.0
+            and self.cq_poll_us == 0.0
+            and self.cqe_reap_us == 0.0
+        )
+
+    def replace(self, **kw: Any) -> "QPConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """GPU-side set-associative page cache (pipeline stage 0).
+
+    Hits are filtered *before* SQ submission: they complete at
+    ``hit_us`` of GPU-local latency and never consume ring slots,
+    frontend transactions, or device time. ``chase`` bounds how many
+    consecutive hits one closed-loop slot may chain within a single
+    engine round (each hit immediately proposes the slot's next request,
+    which may hit again). ``readahead`` inserts the next R sequential
+    blocks alongside every miss fill.
+    """
+
+    enabled: bool = False
+    num_sets: int = 512
+    ways: int = 4
+    hit_us: float = 0.5
+    chase: int = 2
+    readahead: int = 0
+
+    def __post_init__(self) -> None:
+        if self.num_sets < 1 or self.ways < 1:
+            raise ValueError(
+                f"num_sets={self.num_sets} and ways={self.ways} must be >= 1"
+            )
+        if self.chase < 1:
+            raise ValueError(f"chase={self.chase} must be >= 1")
+        if self.hit_us < 0.0 or self.readahead < 0:
+            raise ValueError("hit_us and readahead must be >= 0")
+
+    @property
+    def capacity(self) -> int:
+        return self.num_sets * self.ways
+
+    def replace(self, **kw: Any) -> "CacheConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadConfig:
     """Closed-loop synthetic workload (fio / BaM analogue)."""
 
@@ -221,6 +311,9 @@ class EngineConfig:
     poll_quantum_us: float = 10.0     # virtual-time window batched per round
     emulate_data: bool = True         # perform functional block copies
     use_pallas: bool = False          # Pallas kernels (TPU) vs jnp reference
+    # Sub-configs (split out rather than growing this class flat):
+    qp: QPConfig = QPConfig()         # completion-side (CQ) model
+    cache: CacheConfig = CacheConfig()  # GPU-side page cache (stage 0)
 
     def __post_init__(self) -> None:
         if self.num_sqs < 1 or self.sq_depth < 1:

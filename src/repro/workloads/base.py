@@ -10,6 +10,14 @@ jit-traceable. It owns the three decisions the engine used to hard-code:
                       open loops key off the previous *arrival* time (arrival
                       process independent of service), replays never resubmit.
 
+Two engine-side layers interact with these hooks transparently:
+completion times fed to ``next_submit`` are the CQ-*reaped* times (the
+queue-pair layer, qp.py — identical to device completion under the
+neutral QPConfig), and with the stage-0 page cache enabled a proposed
+read that hits is completed at GPU-local latency and ``next_submit`` is
+re-invoked with that hit completion to chain the slot's next request
+(engine.py's bounded hit chase).
+
 Determinism: all randomness is counter-based (xorshift hash of the request
 id, the workload seed, and a per-device ``salt``), so workloads are
 reproducible, vmap-able across emulated devices, and need no PRNG state

@@ -1,10 +1,10 @@
 """Unified-pipeline tests: engine/client parity + config validation.
 
 The refactor's contract: there is ONE device cost model (device.py), and
-both consumers are thin frontends over it — ``engine_round`` feeds it
-ring-fetched batches, ``StorageClient.read`` feeds it direct batches. The
-parity tests prove both call paths produce bit-identical virtual-time
-state/completions for the same request stream.
+both consumers run the identical SQ -> pipeline -> CQ queue-pair path —
+``engine_round`` over its persistent rings, ``StorageClient`` over
+per-call rings. The parity tests prove both produce bit-identical
+virtual-time state/completions for the same request stream.
 """
 import dataclasses
 
@@ -14,7 +14,8 @@ import pytest
 
 from repro.core import engine, frontend
 from repro.core.client import ClientState, StorageClient
-from repro.core.device import DevicePipeline, make_direct_batch
+from repro.core.device import DevicePipeline
+from repro.core.frontend import SQRings
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
@@ -26,9 +27,10 @@ SSD = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
                 num_blocks=1 << 12)
 
 
-def test_client_read_equals_pipeline_composition():
-    """StorageClient.read == fetch_direct + process (the same ``process``
-    engine_round invokes) on an identical request stream."""
+def test_client_read_equals_ring_pipeline_composition():
+    """StorageClient.read == SQ submit + ring fetch + the shared
+    ``process`` with a CQ (the exact stages engine_round invokes) on an
+    identical request stream."""
     cfg = EngineConfig(num_units=4, fetch_width=64)
     plat = PlatformModel()
     pipe = DevicePipeline(cfg, SSD, plat)
@@ -36,22 +38,41 @@ def test_client_read_equals_pipeline_composition():
 
     n = 512
     lba = (jnp.arange(n, dtype=jnp.int32) * 37) % SSD.num_blocks
+    t = jnp.float32(3.0)
     flash = jnp.arange(SSD.num_blocks, dtype=jnp.float32)[:, None] * jnp.ones(
         (1, 8)
     )
     cstate = ClientState.init(SSD, 4)
-    cstate2, data, done_client = client.read(
-        cstate, flash, lba, jnp.float32(3.0)
-    )
+    cstate2, data, done_client = client.read(cstate, flash, lba, t)
 
-    batch = make_direct_batch(lba, jnp.float32(3.0))
+    # Replicate by hand: deal SQEs, ring-fetch, shared process + CQ reap.
+    q = cfg.num_sqs
+    rings = SQRings.empty(q, cfg.sq_depth)
+    rings = frontend.submit(
+        rings, frontend.deal_sqs(n, cfg), jnp.full((n,), t),
+        jnp.zeros((n,), jnp.int32), lba, jnp.ones((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.ones((n,), bool),
+    )
     dstate = pipe.init_state()
-    dstate, fetch_done, unit = pipe.fetch_direct(
-        dstate, batch.arrival, batch.valid
+    cq = pipe.init_cq()
+    rings, disp_time, batch, fetch_done = frontend.fetch_distributed(
+        rings, t, dstate.disp_time, cfg, plat
     )
-    dstate, res = pipe.process(dstate, batch, fetch_done, unit)
+    dstate = dataclasses.replace(dstate, disp_time=disp_time)
+    unit = jnp.arange(q * cfg.fetch_width, dtype=jnp.int32) // (
+        q * cfg.fetch_width // cfg.num_units
+    )
+    dstate, cq, res = pipe.process(dstate, batch, fetch_done, unit, cq)
+    done_manual = (
+        jnp.zeros((n,), jnp.float32)
+        .at[jnp.where(batch.valid, batch.req_id, n)]
+        .set(res.reaped, mode="drop")
+    )
 
-    np.testing.assert_array_equal(np.asarray(done_client), np.asarray(res.done))
+    np.testing.assert_array_equal(
+        np.asarray(done_client), np.asarray(done_manual)
+    )
     np.testing.assert_array_equal(
         np.asarray(cstate2.dev.tstate.busy_until),
         np.asarray(dstate.tstate.busy_until),
@@ -90,7 +111,7 @@ def test_engine_round_prices_through_shared_pipeline(mode, batched):
         cfg.num_sqs * cfg.fetch_width // cfg.num_units
     )
     dev = dataclasses.replace(st.device, disp_time=disp_time)
-    dev, res = pipe.process(dev, batch, fetch_done, unit)
+    dev, _, res = pipe.process(dev, batch, fetch_done, unit, st.cq)
 
     for got, want in [
         (out.device.tstate.busy_until, dev.tstate.busy_until),

@@ -1,0 +1,279 @@
+"""Queue-pair layer tests: CQ posting/reaping, coalescing, parity.
+
+Contracts under test:
+  * neutral QPConfig is an exact no-op — ``reaped == done`` bit-exactly,
+    so PR-2-era completion times reproduce (the acceptance parity bar);
+  * every QP knob only ever adds time;
+  * completion coalescing trades doorbell rate for delivered IOPS;
+  * the client's SQ/CQ ring path reproduces ``engine_round`` completion
+    times bit-exactly for the same request stream;
+  * ``latency_bucket``/``hist_percentile`` edge cases.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, frontend
+from repro.core.client import StorageClient
+from repro.core.device import DevicePipeline, make_direct_batch
+from repro.core.engine import (
+    HIST_BUCKETS,
+    hist_percentile,
+    latency_bucket,
+)
+from repro.core.qp import CQRings, post_and_reap
+from repro.core.types import (
+    EngineConfig,
+    PlatformModel,
+    QPConfig,
+    SSDConfig,
+    WorkloadConfig,
+)
+from repro import workloads
+
+SSD = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
+                num_blocks=1 << 12)
+CFG = EngineConfig(num_sqs=8, sq_depth=256, fetch_width=32, num_units=4,
+                   emulate_data=False, num_bufs=512)
+
+
+# ---------------------------------------------------------------------------
+# Stage-5 unit behavior.
+# ---------------------------------------------------------------------------
+
+def _toy_completions(n=32, q=4):
+    cq_id = jnp.arange(n, dtype=jnp.int32) % q
+    done = 100.0 + jnp.arange(n, dtype=jnp.float32) * 3.0
+    req_id = jnp.arange(n, dtype=jnp.int32)
+    valid = jnp.ones((n,), bool)
+    return cq_id, done, req_id, valid
+
+
+def test_neutral_qp_is_transparent():
+    """Neutral config: reaped == done bit-exactly, entries recorded."""
+    cq = CQRings.empty(4, 64)
+    cq_id, done, req_id, valid = _toy_completions()
+    cq2, reaped = post_and_reap(cq, cq_id, done, req_id, valid, QPConfig())
+    np.testing.assert_array_equal(np.asarray(reaped), np.asarray(done))
+    assert (np.asarray(cq2.tail) == 8).all()
+    assert (np.asarray(cq2.head) == 8).all()     # consumer drained all
+    assert (np.asarray(cq2.bell_time) == 0.0).all()
+
+
+def test_qp_knobs_only_add_time():
+    """Any non-neutral knob yields reaped >= done for every valid row."""
+    cq_id, done, req_id, valid = _toy_completions()
+    for qp in [
+        QPConfig(cq_doorbell_us=0.7),
+        QPConfig(cq_poll_us=1.1),
+        QPConfig(cqe_reap_us=0.2),
+        QPConfig(cq_coalesce_n=4, cq_coalesce_us=50.0),
+        QPConfig(cq_coalesce_n=8, cq_coalesce_us=5.0, cq_doorbell_us=0.5,
+                 cq_poll_us=0.3, cqe_reap_us=0.05),
+    ]:
+        cq = CQRings.empty(4, 64)
+        _, reaped = post_and_reap(cq, cq_id, done, req_id, valid, qp)
+        assert (np.asarray(reaped) >= np.asarray(done) - 1e-6).all(), qp
+
+
+def test_coalescing_groups_wait_for_doorbell():
+    """n completions share one doorbell: early members wait for the
+    group's last completion (bounded by the coalescing timer)."""
+    n, q = 16, 1
+    cq_id = jnp.zeros((n,), jnp.int32)
+    done = 100.0 + jnp.arange(n, dtype=jnp.float32)  # 1us apart
+    qp = QPConfig(cq_coalesce_n=4, cq_coalesce_us=1e6)
+    cq = CQRings.empty(q, 64)
+    _, reaped = post_and_reap(
+        cq, cq_id, done, jnp.arange(n, dtype=jnp.int32),
+        jnp.ones((n,), bool), qp,
+    )
+    r = np.asarray(reaped).reshape(4, 4)
+    # Every member of a group observes the group's last completion time.
+    np.testing.assert_allclose(r, r[:, -1:].repeat(4, axis=1), rtol=1e-6)
+    # Timer bound: a tight cq_coalesce_us caps the wait.
+    qp_t = QPConfig(cq_coalesce_n=4, cq_coalesce_us=1.5)
+    _, reaped_t = post_and_reap(
+        CQRings.empty(q, 64), cq_id, done,
+        jnp.arange(n, dtype=jnp.int32), jnp.ones((n,), bool), qp_t,
+    )
+    assert (np.asarray(reaped_t) <= np.asarray(done) + 1.5 + 1e-5).all()
+
+
+def test_poll_and_reap_costs_are_charged():
+    cq_id, done, req_id, valid = _toy_completions()
+    qp = QPConfig(cq_poll_us=2.0, cqe_reap_us=0.5)
+    _, reaped = post_and_reap(
+        CQRings.empty(4, 64), cq_id, done, req_id, valid, qp
+    )
+    assert (np.asarray(reaped) >= np.asarray(done) + 2.5 - 1e-6).all()
+
+
+def test_invalid_rows_untouched():
+    cq_id, done, req_id, valid = _toy_completions()
+    valid = valid.at[::2].set(False)
+    qp = QPConfig(cq_coalesce_n=2, cq_doorbell_us=1.0)
+    cq2, reaped = post_and_reap(
+        CQRings.empty(4, 64), cq_id, done, req_id, valid, qp
+    )
+    assert (np.asarray(reaped)[::2] == 0.0).all()
+    assert int(np.asarray(cq2.tail).sum()) == int(valid.sum())
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity + coalescing economics.
+# ---------------------------------------------------------------------------
+
+def test_engine_neutral_qp_matches_no_cq_pipeline():
+    """process with a CQ under the neutral config == process with no CQ
+    (the pre-QP pipeline), bit-exactly — state and completions."""
+    import jax
+
+    plat = PlatformModel()
+    pipe = DevicePipeline(CFG, SSD, plat)
+    n = 256
+    batch = make_direct_batch(
+        (jnp.arange(n, dtype=jnp.int32) * 17) % SSD.num_blocks,
+        jnp.float32(1.0),
+    )
+    st = pipe.init_state()
+    st1, fetch_done, unit = pipe.fetch_direct(st, batch.arrival, batch.valid)
+    out_cq, cq, res_cq = pipe.process(st1, batch, fetch_done, unit,
+                                      pipe.init_cq())
+    out_no, none_cq, res_no = pipe.process(st1, batch, fetch_done, unit)
+    assert none_cq is None
+    np.testing.assert_array_equal(
+        np.asarray(res_cq.reaped), np.asarray(res_no.done)
+    )
+    for a, b in zip(jax.tree.leaves(out_cq), jax.tree.leaves(out_no)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cq_rings_track_completions_per_round():
+    """Engine CQ tails advance by exactly the completed count and the
+    consumer reaps everything it posts."""
+    wl = WorkloadConfig(io_depth=16)
+    out = engine.simulate(CFG, SSD, wl, rounds=12)
+    posted = int(np.asarray(out.cq.tail).sum())
+    assert posted == int(float(out.metrics.completed))
+    np.testing.assert_array_equal(np.asarray(out.cq.head),
+                                  np.asarray(out.cq.tail))
+
+
+def test_coalescing_recovers_doorbell_throughput():
+    """With a doorbell cost, 1 completion/doorbell throttles IOPS; deeper
+    coalescing recovers toward the neutral ceiling."""
+    wl = WorkloadConfig(io_depth=256)
+    def run(qp):
+        return float(
+            engine.simulate(CFG.replace(qp=qp), SSD, wl, rounds=24)
+            .metrics.iops()
+        )
+
+    qp1 = QPConfig(cq_coalesce_n=1, cq_doorbell_us=2.0)
+    qp16 = QPConfig(cq_coalesce_n=16, cq_coalesce_us=100.0,
+                    cq_doorbell_us=2.0)
+    neutral = run(QPConfig())
+    assert run(qp1) < run(qp16) <= neutral * 1.001
+
+
+# ---------------------------------------------------------------------------
+# Ring-path parity: StorageClient == engine_round, bit-exactly.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qp", [
+    QPConfig(),
+    QPConfig(cq_coalesce_n=4, cq_coalesce_us=40.0, cq_doorbell_us=0.5,
+             cq_poll_us=0.3, cqe_reap_us=0.05),
+])
+def test_client_ring_path_reproduces_engine_round(qp):
+    """StorageClient via SQ/CQ reproduces engine_round completion times
+    bit-exactly for the same request stream (same per-SQ entries)."""
+    cfg = CFG.replace(fetch_width=64, qp=qp)
+    plat = PlatformModel()
+    n, t0 = 256, 2.0
+    lba = (jnp.arange(n, dtype=jnp.int32) * 37) % SSD.num_blocks
+
+    client = StorageClient(SSD, cfg, plat)
+    flash = jnp.ones((SSD.num_blocks, 8))
+    _, _, done_client = client.read(
+        client.init_state(), flash, lba, jnp.float32(t0)
+    )
+
+    # The same stream through the engine: a trace laid out so TraceReplay
+    # deals each SQ the exact per-SQ (time, lba) sequence the client's
+    # deal produced (both deal time-sorted rank r; the trace is permuted
+    # so rank r of SQ s matches).
+    q = cfg.num_sqs
+    sq = np.asarray(frontend.deal_sqs(n, cfg))
+    order = np.lexsort((np.arange(n), sq))
+    per_sq = [list(order[sq[order] == s]) for s in range(q)]
+    trace_idx = np.array([per_sq[j % q][j // q] for j in range(n)])
+    wl = workloads.TraceReplay.from_trace(
+        np.full(n, t0, np.float32), np.asarray(lba)[trace_idx],
+        np.zeros(n), cfg,
+    )
+    st = engine.init_state(cfg, SSD, wl)
+    st = dataclasses.replace(st, clock=jnp.float32(t0))
+    out = engine.engine_round(st, cfg, SSD, wl, plat)
+    m = out.metrics
+
+    assert float(m.completed) == n
+    assert float(m.last_completion) == float(jnp.max(done_client))
+    assert float(m.sum_e2e) == float(jnp.sum(done_client - t0))
+    hist_client = np.bincount(
+        np.asarray(latency_bucket(done_client - t0)),
+        minlength=HIST_BUCKETS,
+    )
+    np.testing.assert_array_equal(
+        hist_client, np.asarray(m.lat_hist).astype(int)
+    )
+
+
+# ---------------------------------------------------------------------------
+# latency_bucket / hist_percentile edge cases.
+# ---------------------------------------------------------------------------
+
+def test_latency_bucket_edges():
+    lat = jnp.asarray([0.0, 1e-9, 1.0, 1e5, 1e30], jnp.float32)
+    b = np.asarray(latency_bucket(lat))
+    assert b[0] == 0 and b[1] == 0 and b[2] == 0     # clamp below floor
+    assert b[3] == HIST_BUCKETS - 1                  # top of range
+    assert b[4] == HIST_BUCKETS - 1                  # overflow clamps
+    mono = np.asarray(
+        latency_bucket(jnp.logspace(0, 5, 50, dtype=jnp.float32))
+    )
+    assert (np.diff(mono) >= 0).all()
+
+
+def test_hist_percentile_empty_histogram():
+    """All-zero histogram degrades to the first bucket's midpoint (no
+    NaN/inf), for any q."""
+    h = jnp.zeros((HIST_BUCKETS,), jnp.float32)
+    for q in (0.0, 0.5, 1.0):
+        v = float(hist_percentile(h, q))
+        assert np.isfinite(v) and v > 0.0
+    assert float(hist_percentile(h, 0.5)) == float(hist_percentile(h, 0.99))
+
+
+def test_hist_percentile_q_extremes_and_single_bucket():
+    h = jnp.zeros((HIST_BUCKETS,), jnp.float32).at[7].set(42.0)
+    p_lo = float(hist_percentile(h, 0.0))
+    p_mid = float(hist_percentile(h, 0.5))
+    p_hi = float(hist_percentile(h, 1.0))
+    # q=0: cumsum >= 0 is true at bucket 0; q>0 finds the single bucket.
+    assert p_lo == float(hist_percentile(jnp.ones_like(h), 0.0))
+    assert p_mid == p_hi
+    lo_edge = 10 ** (7 * 5.0 / HIST_BUCKETS)
+    hi_edge = 10 ** (8 * 5.0 / HIST_BUCKETS)
+    assert lo_edge <= p_mid <= hi_edge
+
+
+def test_hist_percentile_pools_device_axis():
+    h = jnp.zeros((3, HIST_BUCKETS), jnp.float32).at[:, 5].set(1.0)
+    single = jnp.zeros((HIST_BUCKETS,), jnp.float32).at[5].set(3.0)
+    assert float(hist_percentile(h, 0.9)) == float(
+        hist_percentile(single, 0.9)
+    )
