@@ -515,6 +515,132 @@ def fig22_cache_hit_rate(quick=False):
             "p99_us"], rows
 
 
+def fig23_fabric_roofline(quick=False):
+    """Disaggregated remote all-flash array: aggregate MIOPS vs per-link
+    bandwidth and RTT. Each of the 4x40M drives sits behind its own
+    NIC/link; a read returns ~528 B (CQE + 512B payload) over the RX
+    direction, so the link — not the drive — becomes the roof once
+    bandwidth drops below ~frame_bytes x drive_IOPS. An unconstrained
+    link recovers the local-array aggregate (>= 150 MIOPS at 4x40M)."""
+    import math
+
+    from repro.core import engine
+    from repro.core.types import FabricConfig
+
+    wl = WorkloadConfig(io_depth=1024)
+    m_dev = 4
+    frame = FabricConfig().cqe_bytes + C.FUTURE_40M.block_bytes  # RX bytes
+    rows = []
+    bws = (
+        [1000.0, 8000.0, float("inf")] if quick
+        else [500.0, 1000.0, 2000.0, 4000.0, 8000.0, 16000.0, 32000.0,
+              float("inf")]
+    )
+    for bw in bws:
+        fab = FabricConfig(
+            remote=True,
+            rtt_us=10.0 if math.isfinite(bw) else 0.0,
+            tx_bytes_per_us=bw, rx_bytes_per_us=bw,
+            wire_txn_us=0.2 if math.isfinite(bw) else 0.0,
+            mtu_batch=16 if math.isfinite(bw) else 1,
+            mtu_timeout_us=20.0 if math.isfinite(bw) else 0.0,
+        )
+        out = C.run_engine(
+            C.swarmio_cfg(fabric=fab), C.FUTURE_40M, wl, rounds=24,
+            num_devices=m_dev,
+        )
+        agg = float(engine.aggregate_iops(out))
+        roof = m_dev * bw / frame * 1e6 if math.isfinite(bw) else float("inf")
+        m = out.metrics
+        rows.append([
+            "bw_sweep", bw if math.isfinite(bw) else "inf", 10.0,
+            agg / 1e6,
+            roof / 1e6 if math.isfinite(roof) else "",
+            float(m.p50_us()), float(m.p99_us()),
+        ])
+    rtts = [0.0, 100.0] if quick else [0.0, 5.0, 20.0, 100.0]
+    for rtt in rtts:
+        fab = FabricConfig(remote=True, rtt_us=rtt)
+        out = C.run_engine(
+            C.swarmio_cfg(fabric=fab), C.FUTURE_40M, wl, rounds=24,
+            num_devices=m_dev,
+        )
+        m = out.metrics
+        rows.append([
+            "rtt_sweep", "inf", rtt,
+            float(engine.aggregate_iops(out)) / 1e6, "",
+            float(m.p50_us()), float(m.p99_us()),
+        ])
+    clamped = rows[0]
+    free = next(r for r in rows if r[0] == "bw_sweep" and r[1] == "inf")
+    print(f"fig23: link {clamped[1]:.0f} B/us clamps the 4x40M array to "
+          f"{clamped[3]:.1f} MIOPS (link roof {clamped[4]:.1f}); "
+          f"unconstrained link recovers {free[3]:.0f} MIOPS "
+          f"({'>=' if free[3] >= 150 else '<'}150 target)")
+    return ["sweep", "link_bytes_per_us", "rtt_us", "aggregate_miops",
+            "link_roof_miops", "p50_us", "p99_us"], rows
+
+
+def fig24_stripe_replication(quick=False):
+    """Stripe-width x replication placement over a remote 4-drive array
+    (client path, fabric-limited links). Widening the stripe engages
+    more links for one batch, scaling delivered IOPS toward the W-link
+    roof; replica reads take a placement-skewed batch (every block
+    homed on drive 0) and spread it over R candidate links by
+    least-loaded routing, recovering most of the lost parallelism."""
+    import jax.numpy as jnp
+
+    from repro.core.client import StorageClient
+    from repro.core.types import EngineConfig, FabricConfig
+
+    m_dev = 4
+    ssd = C.FUTURE_40M
+    fab = FabricConfig(
+        remote=True, rtt_us=5.0, tx_bytes_per_us=8000.0,
+        rx_bytes_per_us=2000.0, wire_txn_us=0.2, mtu_batch=8,
+        mtu_timeout_us=20.0,
+    )
+    cfg = EngineConfig(num_units=8, fetch_width=64, fabric=fab)
+    client = StorageClient(ssd, cfg)
+    flash = jnp.zeros((ssd.num_blocks, 8), jnp.float32)
+    n = 1024 if quick else 4096
+    rows = []
+
+    def stats(kind, value, done):
+        lat = jnp.sort(done)
+        makespan = float(jnp.max(done))
+        rows.append([
+            kind, value, n / makespan,  # delivered K-IOPS... MIOPS below
+            float(jnp.mean(done)),
+            float(lat[int(0.99 * (n - 1))]),
+        ])
+
+    uniform = (jnp.arange(n, dtype=jnp.int32) * 13) % ssd.num_blocks
+    for w in range(1, m_dev + 1):
+        state = client.init_array_state(m_dev)
+        _, _, done = client.read_striped(
+            state, flash, uniform, jnp.float32(0), stripe_width=w
+        )
+        stats("stripe_width", w, done)
+    # Placement skew: every block's home drive is 0; only replication
+    # can re-engage the other links.
+    skewed = ((jnp.arange(n, dtype=jnp.int32) * 13) % ssd.num_blocks) \
+        // m_dev * m_dev
+    for r in range(1, m_dev + 1):
+        state = client.init_array_state(m_dev)
+        _, _, done = client.read_replicated(
+            state, flash, skewed, jnp.float32(0), replicas=r
+        )
+        stats("replicas", r, done)
+    w1, w4 = rows[0], rows[m_dev - 1]
+    r1, r4 = rows[m_dev], rows[-1]
+    print(f"fig24: stripe width 1->{m_dev} lifts batch throughput "
+          f"{w1[2]:.2f}->{w4[2]:.2f} Mreq/s; replicas 1->{m_dev} on a "
+          f"skewed batch {r1[2]:.2f}->{r4[2]:.2f} Mreq/s "
+          f"(p99 {r1[4]:.0f}->{r4[4]:.0f} us)")
+    return ["sweep", "value", "mreq_per_s", "mean_us", "p99_us"], rows
+
+
 ALL = [
     ("fig03_frontend", fig03_frontend_plateau),
     ("fig04_per_request_overhead", fig04_per_request_overhead),
@@ -531,4 +657,6 @@ ALL = [
     ("fig20_steady_state", fig20_steady_state),
     ("fig21_cq_coalescing", fig21_cq_coalescing),
     ("fig22_cache_hit_rate", fig22_cache_hit_rate),
+    ("fig23_fabric_roofline", fig23_fabric_roofline),
+    ("fig24_stripe_replication", fig24_stripe_replication),
 ]

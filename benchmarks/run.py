@@ -20,19 +20,21 @@ def main() -> None:
     from benchmarks import common as C
     from benchmarks.figures import ALL
 
-    t0 = time.time()
+    # perf_counter everywhere: the same monotonic clock benchmarks/common.py
+    # times the engine with (time.time() can step under NTP adjustment).
+    t0 = time.perf_counter()
     for name, fn in ALL:
         if args.only and args.only not in name:
             continue
-        t = time.time()
+        t = time.perf_counter()
         try:
             header, rows = fn(quick=args.quick)
             path = C.write_csv(name, header, rows)
-            print(f"  -> {path} ({time.time()-t:.1f}s)")
+            print(f"  -> {path} ({time.perf_counter()-t:.1f}s)")
         except Exception as e:  # noqa: BLE001
             print(f"  !! {name} FAILED: {type(e).__name__}: {e}")
             raise
-    print(f"all benchmarks done in {time.time()-t0:.1f}s")
+    print(f"all benchmarks done in {time.perf_counter()-t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -114,3 +114,27 @@ cm = cached.metrics
 print(f"page cache    : Zipf {float(uncached.metrics.iops())/1e6:.1f} MIOPS "
       f"-> {float(cm.iops())/1e6:.1f} MIOPS at "
       f"{float(cm.hit_rate())*100:.0f}% hit rate")
+
+# 10. Disaggregate: put every drive of the 4-drive array behind its own
+#     NIC/link (remote all-flash array). Reads return ~528 B per request
+#     over the RX direction, so at 40M IOPS/drive the *wire* becomes the
+#     roof long before the flash does: a 2 GB/s-class link clamps each
+#     drive near rx_bytes_per_us/528 IOPS, while an unconstrained link
+#     (the `remote=True` default) reproduces the local array bit-exactly.
+#     Sweeps: benchmarks fig23 (bandwidth/RTT roofline) and fig24
+#     (stripe-width x replication via StorageClient.read_striped /
+#     read_replicated over the per-link load cursors).
+from repro.core.types import FabricConfig
+
+link = FabricConfig(
+    remote=True, rtt_us=10.0,           # network round trip
+    tx_bytes_per_us=8000.0,             # SQEs + write payloads ->
+    rx_bytes_per_us=2000.0,             # <- CQEs + read payloads (binding)
+    wire_txn_us=0.2, mtu_batch=8, mtu_timeout_us=20.0,  # NIC doorbells
+)
+remote = engine.simulate(cfg.replace(fabric=link), ssd, wl, rounds=64,
+                         num_devices=4)
+print(f"remote array  : {float(engine.aggregate_iops(remote))/1e6:.0f} MIOPS "
+      f"aggregate behind 4x2 GB/s links "
+      f"(local array above: {float(engine.aggregate_iops(arr))/1e6:.0f}; "
+      f"p99 {float(remote.metrics.p99_us()):.0f} us)")

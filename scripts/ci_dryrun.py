@@ -3,7 +3,8 @@
 Parses the workflow and executes every ``run:`` step of every job in
 order, with the workflow's ``env:`` applied — so new steps register here
 automatically (the bench-smoke job currently runs the fig12 floor check
-plus the fig21 CQ-coalescing and fig22 cache-hit-rate quick benchmarks).
+plus the fig21 CQ-coalescing, fig22 cache-hit-rate, fig23 fabric-
+roofline, and fig24 stripe/replication quick benchmarks).
 Steps whose executable is not installed locally (e.g. ``ruff`` on a
 runtime-only box) are reported as SKIPPED rather than failed — CI still
 runs them; this script tells you everything that *can* be validated
@@ -51,9 +52,9 @@ def main() -> int:
                 skipped.append(label)
                 continue
             print(f"RUN   {label}")
-            t0 = time.time()
+            t0 = time.perf_counter()  # monotonic, matches benchmarks/common
             proc = subprocess.run(cmd, shell=True, env=env, cwd=REPO)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             if proc.returncode != 0:
                 print(f"FAIL  {label} (exit {proc.returncode}, {dt:.0f}s)")
                 failed.append(label)

@@ -33,8 +33,17 @@ from repro.core.client import StorageClient
 from repro.core.types import (
     CacheConfig,
     EngineConfig,
+    FabricConfig,
     PlatformModel,
     SSDConfig,
+)
+
+# Default wire for ``case_study(remote=True)``: a 64 Gbps-class link per
+# drive (8000 B/us each way), 10 us RTT, MTU-batched doorbells.
+REMOTE_FABRIC = FabricConfig(
+    remote=True, rtt_us=10.0, tx_bytes_per_us=8000.0,
+    rx_bytes_per_us=8000.0, wire_txn_us=0.2, mtu_batch=8,
+    mtu_timeout_us=20.0,
 )
 
 BIG = 3e38  # python float: jnp module constants leak into jaxprs
@@ -272,14 +281,28 @@ def case_study(
     num_devices: int = 1,
     write_back: bool = False,
     cache_sets: int = 0,
+    remote: "FabricConfig | bool | None" = None,
 ) -> dict:
     """One (batch, width, IOPS) cell of the paper's Fig. 16 study.
 
     ``cache_sets > 0`` enables the GPU-side page cache in front of the
     vector fetches (4-way set-associative, ``cache_sets`` sets) — the
     fig22 hit-rate-amplification study.
+
+    ``remote`` reruns the case study against a *disaggregated* array:
+    ``True`` puts every drive behind the default ``REMOTE_FABRIC`` link
+    (pass a ``FabricConfig`` for custom wire parameters), so the vector
+    fetches pay the NIC/link hop each way — combine with
+    ``num_devices > 1`` for a remote all-flash array where QPS responds
+    to link bandwidth, not just device IOPS.
     """
     cfg = SearchConfig(beam_width=width, iterations=iterations)
+    if remote is True:
+        fabric = REMOTE_FABRIC
+    elif isinstance(remote, FabricConfig):
+        fabric = remote
+    else:
+        fabric = FabricConfig()
     vecs, graph = _cached_index(n, cfg.dim, cfg.degree, seed)
     queries = jax.random.normal(
         jax.random.PRNGKey(seed + 1), (batch, cfg.dim)
@@ -294,6 +317,7 @@ def case_study(
         num_units=8, fetch_width=64,
         cache=CacheConfig(enabled=cache_sets > 0,
                           num_sets=max(cache_sets, 1)),
+        fabric=fabric,
     )
     out = search(
         queries, vecs, graph, cfg, ssd, ecfg=ecfg,

@@ -23,14 +23,21 @@ Stage 0: with ``EngineConfig.cache.enabled`` a GPU-side page cache
 GPU-local latency and never touch the rings or the device; completed
 reads and writes fill the cache (write-allocate).
 
-``read_array``/``write_array``/``read_striped`` extend the same program
-to an M-drive array: the per-device pipeline is ``vmap``-ed over a
-leading device axis, so one jit program prices the whole array
-(paper-title 100-MIOPS regime at M x 40-MIOPS drives).
+``read_array``/``write_array``/``read_striped``/``read_replicated``
+extend the same program to an M-drive array: the per-device pipeline is
+``vmap``-ed over a leading device axis, so one jit program prices the
+whole array (paper-title 100-MIOPS regime at M x 40-MIOPS drives).
+Striped reads accept any batch size (ragged tails pad with invalid
+slots) and a ``stripe_width``; replicated reads home block b's R copies
+on drives ``(b + r) % M`` and route each read to the least-loaded link.
+With ``EngineConfig.fabric.remote`` the drives are *remote*: every
+request pays the NIC/link hop (fabric.py) exactly as ``engine_round``
+prices it.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 import jax
@@ -45,6 +52,7 @@ from repro.core.device import (
     init_array_state as _stack_states,
 )
 from repro.core.frontend import SQRings
+from repro.core.segops import segment_rank
 from repro.core.types import (
     OP_WRITE,
     EngineConfig,
@@ -166,12 +174,16 @@ class StorageClient:
         lba: jax.Array,        # (N,) i32 block addresses
         t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
         valid: jax.Array | None = None,
-    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        with_data: bool = True,
+    ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
         """Issue N block reads at ``t_submit`` through the SQ/CQ rings.
 
         Returns (state', data (N, block_words), completion_times (N,)).
         With the stage-0 cache enabled, hits complete at ``hit_us`` and
         never post an SQE; completed reads fill the cache.
+        ``with_data=False`` skips the functional gather and returns
+        ``None`` data — for callers (the array wrappers) that gather
+        once themselves instead of paying it per device.
         """
         n = lba.shape[0]
         lba = lba.astype(jnp.int32)
@@ -196,7 +208,7 @@ class StorageClient:
         if self.cfg.cache.enabled:
             done = jnp.where(hit, hit_done, done)
             cstate = cache_mod.insert(cstate, lba, valid, self.cfg.cache)
-        data = flash[jnp.where(valid, lba, 0)]
+        data = flash[jnp.where(valid, lba, 0)] if with_data else None
         return ClientState(dev=dev, cache=cstate), data, done
 
     def write(
@@ -245,7 +257,8 @@ class StorageClient:
         lba: jax.Array,        # (M, N) i32 per-device block addresses
         t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
         valid: jax.Array | None = None,   # (M, N) bool
-    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        with_data: bool = True,
+    ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
         """Per-device batched reads over an M-drive array, one vmap."""
         m, n = lba.shape
         t_submit = jnp.asarray(t_submit, jnp.float32)
@@ -256,11 +269,15 @@ class StorageClient:
             valid = jnp.ones((m, n), bool)
 
         def one(st, lba_d, t_d, valid_d):
-            st, _, done = self.read(st, flash, lba_d, t_d, valid_d)
+            # Data is gathered once at the array level below, not per
+            # device inside the vmap.
+            st, _, done = self.read(
+                st, flash, lba_d, t_d, valid_d, with_data=False
+            )
             return st, done
 
         state, done = jax.vmap(one)(state, lba, t_submit, valid)
-        data = flash[jnp.where(valid, lba, 0)]
+        data = flash[jnp.where(valid, lba, 0)] if with_data else None
         return state, data, done
 
     def write_array(
@@ -310,33 +327,135 @@ class StorageClient:
         self,
         state: ClientState,    # stacked array state (M devices)
         flash: jax.Array,
-        lba: jax.Array,        # (N,) i32, N % M == 0
+        lba: jax.Array,        # (N,) i32 — any N
         t_submit: jax.Array,   # () or (N,) f32
         valid: jax.Array | None = None,
+        stripe_width: int | None = None,
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
-        """Stripe a flat read batch round-robin over the array's M drives.
+        """Stripe a flat read batch round-robin over the array's drives.
 
-        Request i goes to drive ``i % M`` (fixed interleaved placement).
-        Returns results in the original request order.
+        Request i goes to drive ``i % W`` with ``W = stripe_width``
+        (default: all M drives) — fixed interleaved placement over the
+        first W drives; the remaining drives see an empty batch. Any
+        batch size works: a ragged tail stripe is padded with invalid
+        slots that never touch the rings or the device, and results
+        return in the original request order.
         """
         m = jax.tree.leaves(state.dev)[0].shape[0]
-        n = lba.shape[0]
-        if n % m != 0:
+        w = m if stripe_width is None else stripe_width
+        if not 1 <= w <= m:
             raise ValueError(
-                f"batch of {n} requests must be divisible by M={m} drives"
+                f"stripe_width={w} must be in [1, M={m}] — a stripe "
+                "cannot span more drives than the array holds"
             )
+        n = lba.shape[0]
+        lba = lba.astype(jnp.int32)
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
+        cols = -(-n // w)          # ceil: ring slots per striped drive
+        pad = cols * w - n
+
+        # (N,) -> (M, cols): request i = stripe (i % W, i // W); the
+        # pad tail and the M - W unstriped drives are invalid slots.
+        def to_dev(x, fill):
+            x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+            x = x.reshape(cols, w).T
+            if w < m:
+                x = jnp.concatenate(
+                    [x, jnp.full((m - w, cols), fill, x.dtype)]
+                )
+            return x
+
+        state, _, done = self.read_array(
+            state, flash, to_dev(lba, 0), to_dev(t_submit, 0.0),
+            to_dev(valid, False), with_data=False,
+        )
+        done = done[:w].T.reshape(cols * w)[:n]
+        data = flash[jnp.where(valid, lba, 0)]
+        return state, data, done
+
+    def read_replicated(
+        self,
+        state: ClientState,    # stacked array state (M devices)
+        flash: jax.Array,
+        lba: jax.Array,        # (N,) i32 — any N
+        t_submit: jax.Array,   # () or (N,) f32
+        valid: jax.Array | None = None,
+        replicas: int = 2,
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Replica-read over an M-drive array with least-loaded routing.
+
+        Block b's R replicas live on drives ``(b + r) % M`` (chained
+        declustering), and each read is routed to the candidate whose
+        *link* is least loaded: the drive's fabric RX cursor plus the
+        wire time of the work already routed to it within this batch.
+        On a remote array (``cfg.fabric.remote``) that balances the
+        per-link backlog; on a local array it degenerates to in-batch
+        count balancing. Returns (state', data, done) in the original
+        request order.
+        """
+        m = jax.tree.leaves(state.dev)[0].shape[0]
+        if not 1 <= replicas <= m:
+            raise ValueError(
+                f"replicas={replicas} must be in [1, M={m}] — a block "
+                "cannot have more replicas than the array has drives"
+            )
+        n = lba.shape[0]
+        lba = lba.astype(jnp.int32)
         if valid is None:
             valid = jnp.ones((n,), bool)
         t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
 
-        # (N,) -> (M, N//M): request i = stripe (i % M, i // M).
-        def to_dev(x):
-            return x.reshape(n // m, m).T
+        # Per-request load increment in the same unit as the RX cursors
+        # (us of link occupancy: frame bytes at the link bandwidth plus
+        # the amortized wire-transaction cost). A zero-cost wire never
+        # advances the cursors, so the unit falls back to request
+        # counting — the two scales are never mixed.
+        fab = self.cfg.fabric
+        est = 0.0
+        if fab.remote:
+            est = fab.wire_txn_us / fab.mtu_batch
+            if math.isfinite(fab.rx_bytes_per_us):
+                est += (
+                    fab.cqe_bytes + self.ssd.block_bytes
+                ) / fab.rx_bytes_per_us
+        if est == 0.0:
+            est = 1.0  # count balancing (cursors are identically zero)
+        cand = (
+            lba[:, None] + jnp.arange(replicas, dtype=jnp.int32)[None, :]
+        ) % m                                            # (N, R)
 
-        def from_dev(x):
-            return jnp.swapaxes(x, 0, 1).reshape((n,) + x.shape[2:])
+        def route(load, x):
+            cand_i, v = x
+            d = cand_i[jnp.argmin(load[cand_i])]
+            load = jnp.where(v, load.at[d].add(jnp.float32(est)), load)
+            return load, jnp.where(v, d, jnp.int32(m))
 
-        state, data, done = self.read_array(
-            state, flash, to_dev(lba), to_dev(t_submit), to_dev(valid)
+        _, drive = jax.lax.scan(
+            route, state.dev.fabric.rx_busy, (cand, valid)
         )
-        return state, from_dev(data), from_dev(done)
+
+        # Scatter each request into its drive's batch slot (rank =
+        # arrival order within the drive), fan out through the array
+        # read, and gather completions back to request order.
+        rank = segment_rank(drive)
+        row = jnp.clip(drive, 0, m - 1)
+        col = jnp.where(valid, rank, n)
+
+        def scat(x, fill, dtype):
+            base = jnp.full((m, n), fill, dtype)
+            return base.at[row, col].set(x, mode="drop")
+
+        state, _, done2d = self.read_array(
+            state, flash,
+            scat(lba, 0, jnp.int32),
+            scat(t_submit, 0.0, jnp.float32),
+            scat(valid, False, bool),
+            with_data=False,
+        )
+        done = jnp.where(
+            valid, done2d[row, jnp.clip(col, 0, n - 1)], 0.0
+        )
+        data = flash[jnp.where(valid, lba, 0)]
+        return state, data, done

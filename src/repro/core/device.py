@@ -27,6 +27,14 @@ stages over one ``DeviceState`` pytree:
                                  serialization, poll cost (qp.py; exact
                                  no-op under the neutral QPConfig)
 
+For *remote* drives (``EngineConfig.fabric.remote``) two fabric hops
+wrap the target-side stages (fabric.py): fetched SQEs plus write
+payloads cross the TX link before stage 2, and completions plus read
+payloads cross the RX link back before stage 5 — MTU-batched wire
+transactions on per-link serialization cursors, plus half-RTT
+propagation each way. Local drives (the default) skip both hops, so
+the pipeline reproduces the fabric-less code path bit-exactly.
+
 ``DevicePipeline.process`` composes stages 2-5 for a fetched
 ``RequestBatch``: it threads the ``CQRings`` through and returns per-
 request (arrival, target, ready, flash_done, done, reaped), where
@@ -49,7 +57,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import datapath, frontend, qp, timing
+from repro.core import datapath, fabric as fabric_mod, frontend, qp, timing
+from repro.core.fabric import FabricState
 from repro.core.flash import FlashState, flash_stage
 from repro.core.qp import CQRings
 from repro.core.types import (
@@ -73,6 +82,7 @@ class DeviceState:
     lock_time: jax.Array   # ()  global timing-lock busy-until
     map_time: jax.Array    # ()  global map/unmap-lock busy-until
     flash: FlashState      # stage-4 flash-array state (chips, pages, GC)
+    fabric: FabricState    # NIC/link cursors for remote drives (fabric.py)
 
     @staticmethod
     def init(ssd: SSDConfig, num_units: int, workers_per_unit: int = 1
@@ -85,6 +95,7 @@ class DeviceState:
             lock_time=jnp.float32(0),
             map_time=jnp.float32(0),
             flash=FlashState.init(ssd),
+            fabric=FabricState.init(),
         )
 
     @property
@@ -103,8 +114,8 @@ class PipelineResult:
     flash_done: jax.Array  # flash-backend completion (programs/GC/misses)
     done: jax.Array        # max(target, ready, flash_done), 0 if invalid
     reaped: jax.Array      # when the consumer observed the completion via
-                           # the CQ (== done when no CQ is threaded or the
-                           # QP config is neutral)
+                           # the fabric RX hop + CQ (== done for a local
+                           # drive with no CQ threaded or a neutral QP)
 
 
 def lock_pass(
@@ -194,10 +205,23 @@ class DevicePipeline:
         with its SQ (``batch.sq_id``) and reaped by the consumer —
         ``result.reaped`` is the consumer-observed completion time.
 
-        ``cq=None`` (test-only) skips stage 5: ``reaped == done``."""
+        ``cq=None`` (test-only) skips stage 5: ``reaped`` is the wire-
+        returned completion with no CQ machinery on top."""
         cfg, ssd, plat = self.cfg, self.ssd, self.plat
+        fab = cfg.fabric
         u = state.num_units
         valid = batch.valid
+
+        # -- stage 1.5: fabric TX hop (remote drives only). Fetched SQEs
+        # (plus write payloads) cross the wire before the target-side
+        # pipeline sees them; local drives skip the stage entirely.
+        fab_tx, fab_rx = state.fabric.tx_busy, state.fabric.rx_busy
+        if fab.remote:
+            fab_tx, fetch_done = fabric_mod.fabric_hop(
+                fab_tx, fetch_done,
+                fabric_mod.tx_wire_bytes(batch, plat.sqe_bytes, ssd),
+                valid, fab, fab.tx_bytes_per_us,
+            )
 
         # -- stage 2a: global timing-model lock.
         n_valid_u = jax.ops.segment_sum(
@@ -252,18 +276,31 @@ class DevicePipeline:
         done = jnp.where(
             valid, jnp.maximum(jnp.maximum(target, ready), flash_done), 0.0
         )
+
+        # -- stage 4.5: fabric RX hop. Completions (plus read payloads)
+        # cross back to the initiator before they reach its CQ.
+        if fab.remote:
+            fab_rx, wire_done = fabric_mod.fabric_hop(
+                fab_rx, done,
+                fabric_mod.rx_wire_bytes(batch, fab, ssd),
+                valid, fab, fab.rx_bytes_per_us,
+            )
+            wire_done = jnp.where(valid, wire_done, 0.0)
+        else:
+            wire_done = done
+
         new_state = DeviceState(
             tstate=tstate, disp_time=disp_time, work_time=work_time,
             dsa_time=dsa_time, lock_time=lock_time, map_time=map_time,
-            flash=fstate,
+            flash=fstate, fabric=FabricState(tx_busy=fab_tx, rx_busy=fab_rx),
         )
 
         # -- stage 5: post to the CQ and reap (queue-pair layer).
         if cq is None:
-            reaped = done
+            reaped = wire_done
         else:
             cq, reaped = qp.post_and_reap(
-                cq, batch.sq_id, done, batch.req_id, valid, cfg.qp
+                cq, batch.sq_id, wire_done, batch.req_id, valid, cfg.qp
             )
         return new_state, cq, PipelineResult(
             arrival=arrival, target=target, ready=ready,

@@ -26,7 +26,14 @@ metrics: IOPS, latency vs. the modeled SSD) and the engine's own
 
 A multi-drive array is the same jit program ``vmap``-ed over a leading
 device axis: ``simulate(..., num_devices=M)`` emulates M independent drives
-(per-device salted workload streams) in one XLA computation.
+(per-device salted workload streams; fixed traces are striped row
+``i % M -> drive i``) in one XLA computation —
+``make_sharded_array_runner`` spreads the same stacked state over a real
+JAX device mesh via ``shard_map``. With ``EngineConfig.fabric.remote``
+each drive additionally sits behind its own NIC/link (fabric.py): SQEs
+cross the wire before the target-side stages and completions cross back
+before the CQ, so the array emulates a *disaggregated remote* all-flash
+array.
 """
 from __future__ import annotations
 
@@ -436,6 +443,56 @@ def make_array_runner(
     return _run
 
 
+def make_sharded_array_runner(
+    cfg: EngineConfig, ssd: SSDConfig, wl, plat: PlatformModel,
+    rounds: int, mesh=None, axis_name: str = "dev",
+):
+    """M-drive array runner sharded across a JAX device mesh.
+
+    Where ``make_array_runner`` vmaps the whole array onto one
+    accelerator, this shards the stacked ``EngineState``'s leading
+    device axis over a 1-D mesh via ``shard_map`` (the version-portable
+    shim in ``distributed/sharding.py``) and vmaps each shard locally —
+    so an M-drive array spreads over however many real devices the
+    process holds, one XLA program per shard. M must be divisible by
+    the mesh size. With a 1-device mesh this is semantically identical
+    to ``make_array_runner`` (asserted bit-exactly in
+    ``tests/test_fabric.py``).
+
+    ``mesh`` defaults to all local devices on a ``(axis_name,)`` mesh.
+    """
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    wl = as_workload(wl)
+    if mesh is None:
+        mesh = Mesh(np.asarray(jax.devices()), (axis_name,))
+
+    def _shard(states: EngineState) -> EngineState:
+        return jax.vmap(
+            lambda s: run(s, cfg, ssd, wl, plat, rounds)
+        )(states)
+
+    sharded = jax.jit(shard_map(
+        _shard, mesh, in_specs=P(axis_name), out_specs=P(axis_name)
+    ))
+    mesh_size = int(np.prod(mesh.devices.shape))
+
+    def _run(states: EngineState) -> EngineState:
+        m = jax.tree.leaves(states)[0].shape[0]
+        if m % mesh_size != 0:
+            raise ValueError(
+                f"array of M={m} drives cannot shard over a mesh of "
+                f"{mesh_size} devices — M must be divisible by the mesh "
+                "size (pass a smaller mesh or resize the array)"
+            )
+        return sharded(states)
+
+    return _run
+
+
 def init_array_state(
     cfg: EngineConfig,
     ssd: SSDConfig,
@@ -447,11 +504,12 @@ def init_array_state(
 
     Each drive gets a distinct workload salt, so salt-aware generators
     (closed loop, Poisson, Zipf) serve M independent request streams.
-    ``TraceReplay`` ignores the salt and replays the *same* trace on every
-    drive — aggregate numbers then measure M copies of one stream, not an
-    M-way-striped trace.
+    Fixed-trace replays are striped via ``Workload.sharded``: drive d
+    replays the rows whose time-sorted trace index i satisfies
+    ``i % M == d`` (arrival times preserved), so array aggregates
+    measure the one trace split M ways.
     """
-    wl = as_workload(wl)
+    wl = as_workload(wl).sharded(num_devices)
     return _stack_states(
         lambda salt: init_state(cfg, ssd, wl, block_words, salt=salt),
         num_devices,

@@ -1,0 +1,151 @@
+"""Fabric/interconnect layer: the NIC/link hop to a remote drive.
+
+Disaggregated all-flash arrays (GNStor-style GPU-native remote storage)
+reach their drives over a network fabric, and at tens of MIOPS per drive
+the *wire* — not the flash — is often the roof: a 512-byte read payload
+plus a 16-byte CQE at 40 MIOPS is >21 GB/s of sustained return traffic
+per drive. This module prices that hop as two per-direction single-server
+links around the device pipeline:
+
+  * **TX (initiator -> target)** — fetched SQEs (plus write payloads)
+    cross the wire before the target-side timing model sees them;
+  * **RX (target -> initiator)** — completions (plus read payloads)
+    cross back before they are posted to the initiator-side CQ.
+
+All accounting is epoch-batched in the same style as the CQ layer
+(qp.py): one ``fabric_hop`` call prices a whole batch's frames in time
+order, frames pack into MTU batches of ``mtu_batch`` per wire
+transaction (flushed early once the oldest frame has waited
+``mtu_timeout_us``), each transaction pays ``wire_txn_us`` of NIC setup
+plus its bytes at the link bandwidth on a serialized per-link cursor,
+and every direction adds half the configured RTT of propagation. The
+cursor only advances when a frame actually occupies the link (cost > 0),
+so a zero-cost wire — ``inf`` bandwidth, zero RTT/txn — is an *exact*
+no-op even across epochs, and ``FabricConfig(remote=False)`` skips the
+stage entirely (the PR-3 parity contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segops import (
+    NEG,
+    queueing_scan,
+    segmented_prefix_max,
+    sort_by_segment,
+)
+from repro.core.types import OP_WRITE, FabricConfig, RequestBatch, SSDConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FabricState:
+    """Per-drive link state (one remote drive = one link each way).
+
+    An M-drive remote array vmaps the pipeline over a leading device
+    axis, so the stacked state carries M independent link cursors — the
+    per-link load signal replica reads balance against
+    (``StorageClient.read_replicated``).
+    """
+
+    tx_busy: jax.Array  # () f32 initiator->target serialization cursor
+    rx_busy: jax.Array  # () f32 target->initiator serialization cursor
+
+    @staticmethod
+    def init() -> "FabricState":
+        return FabricState(
+            tx_busy=jnp.float32(0),
+            rx_busy=jnp.float32(0),
+        )
+
+
+def tx_wire_bytes(
+    batch: RequestBatch, sqe_bytes: int, ssd: SSDConfig
+) -> jax.Array:
+    """Outbound bytes per frame: the SQE plus any write payload."""
+    payload = jnp.where(
+        batch.opcode == OP_WRITE,
+        batch.nblocks.astype(jnp.float32) * jnp.float32(ssd.block_bytes),
+        0.0,
+    )
+    return jnp.float32(sqe_bytes) + payload
+
+
+def rx_wire_bytes(
+    batch: RequestBatch, fab: FabricConfig, ssd: SSDConfig
+) -> jax.Array:
+    """Return bytes per frame: the CQE plus any read payload."""
+    payload = jnp.where(
+        batch.opcode != OP_WRITE,
+        batch.nblocks.astype(jnp.float32) * jnp.float32(ssd.block_bytes),
+        0.0,
+    )
+    return jnp.float32(fab.cqe_bytes) + payload
+
+
+def fabric_hop(
+    busy: jax.Array,  # () f32 this direction's link cursor
+    t_ready: jax.Array,  # (N,) f32 frame-ready times (fetch_done / done)
+    nbytes: jax.Array,  # (N,) f32 wire bytes per frame
+    valid: jax.Array,  # (N,) bool
+    fab: FabricConfig,
+    bytes_per_us: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Price one epoch's frames over one link direction.
+
+    Returns ``(busy', t_out)``: ``t_out[i]`` is when frame i's last byte
+    lands on the far side (MTU flush -> serialized transmission ->
+    half-RTT propagation). Invalid rows pass through untouched. Frames
+    stream progressively: within a wire transaction each frame becomes
+    visible once its own bytes have crossed, so a large MTU batch does
+    not hold its first frame for the whole transfer.
+    """
+    # Time-sort, then segment valid frames ahead of invalid ones (the
+    # qp.py layout: invalid rows form a trailing pseudo-segment whose
+    # group stats never mix with real frames).
+    key = jnp.where(valid, 0, 1)
+    ord1 = jnp.argsort(t_ready, stable=True)
+    ord2, heads, rank = sort_by_segment(key[ord1])
+    order = ord1[ord2]
+    s_t = t_ready[order]
+    s_valid = valid[order]
+    s_bytes = nbytes[order]
+
+    # MTU batches: contiguous runs of mtu_batch frames. A batch ships
+    # when it fills (last member's ready time) or its flush timer
+    # expires (first member + mtu_timeout_us), whichever is earlier; a
+    # frame completing after that flush ships at its own ready time (it
+    # would have ridden the next transaction).
+    gheads = heads | (rank % fab.mtu_batch == 0)
+    tails = jnp.concatenate([gheads[1:], jnp.ones((1,), bool)])
+    first = segmented_prefix_max(jnp.where(gheads, s_t, NEG), gheads)
+    rev = slice(None, None, -1)
+    full = segmented_prefix_max(
+        jnp.where(tails, s_t, NEG)[rev], tails[rev]
+    )[rev]
+    bell = jnp.minimum(full, first + jnp.float32(fab.mtu_timeout_us))
+    ready = jnp.maximum(s_t, bell)
+
+    # Serialized transmission: per-transaction NIC setup at the batch
+    # head, per-frame bytes at the link bandwidth, single-server queue
+    # seeded from the link cursor.
+    cost = jnp.where(s_valid, s_bytes / jnp.float32(bytes_per_us), 0.0)
+    cost = cost + jnp.where(
+        gheads & s_valid, jnp.float32(fab.wire_txn_us), 0.0
+    )
+    sent = queueing_scan(ready, cost, heads, busy)
+
+    # The cursor advances only where a frame actually occupied the link:
+    # a zero-cost wire imposes no serialization (exact no-op contract).
+    busy = jnp.maximum(
+        busy,
+        jnp.max(jnp.where(s_valid & (cost > 0.0), sent, NEG)),
+    )
+    landed = sent + jnp.float32(0.5 * fab.rtt_us)
+    t_out = jnp.zeros_like(t_ready).at[order].set(landed)
+    return busy, jnp.where(valid, t_out, t_ready)

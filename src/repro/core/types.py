@@ -7,6 +7,7 @@ inside jit. Virtual time is float32 *microseconds* (resolution ~0.06 us at
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -241,6 +242,76 @@ class QPConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """NIC/link hop between the GPU initiator and a *remote* drive.
+
+    Disaggregated all-flash arrays reach their drives over a network
+    fabric (NVMe-oF style): submitted SQEs (plus write payloads) cross
+    the wire to the target, and completions (plus read payloads) cross
+    back. The hop is priced per direction on a single serialized link
+    cursor per drive — an M-drive remote array vmaps the pipeline, so
+    each drive gets its own link — in the same epoch-batched style as
+    the CQ layer (qp.py). With ``remote=False`` (the default) the stage
+    is skipped entirely, so local-drive pipelines reproduce bit-exactly.
+
+    ``remote``          model the fabric hop at all (False = local drive)
+    ``rtt_us``          round-trip propagation; each direction pays half
+    ``tx_bytes_per_us`` initiator->target link bandwidth (SQEs + write
+                        payloads); ``inf`` = unconstrained
+    ``rx_bytes_per_us`` target->initiator link bandwidth (CQEs + read
+                        payloads); ``inf`` = unconstrained
+    ``wire_txn_us``     per-wire-transaction setup (NIC doorbell/DMA
+                        descriptor), charged once per MTU batch
+    ``mtu_batch``       SQE/CQE frames packed per wire transaction
+                        (1 = every frame is its own transaction)
+    ``mtu_timeout_us``  flush bound: a partial MTU batch ships once its
+                        oldest frame has waited this long
+    ``cqe_bytes``       completion-entry size on the wire
+    """
+
+    remote: bool = False
+    rtt_us: float = 0.0
+    tx_bytes_per_us: float = float("inf")
+    rx_bytes_per_us: float = float("inf")
+    wire_txn_us: float = 0.0
+    mtu_batch: int = 1
+    mtu_timeout_us: float = 0.0
+    cqe_bytes: int = 16
+
+    def __post_init__(self) -> None:
+        if self.mtu_batch < 1:
+            raise ValueError(f"mtu_batch={self.mtu_batch} must be >= 1")
+        if self.tx_bytes_per_us <= 0.0 or self.rx_bytes_per_us <= 0.0:
+            raise ValueError(
+                "tx_bytes_per_us and rx_bytes_per_us must be > 0 "
+                "(use inf for an unconstrained link)"
+            )
+        if self.cqe_bytes < 1:
+            raise ValueError(f"cqe_bytes={self.cqe_bytes} must be >= 1")
+        for name in ("rtt_us", "wire_txn_us", "mtu_timeout_us"):
+            if getattr(self, name) < 0.0:
+                raise ValueError(f"{name} must be >= 0")
+
+    @property
+    def neutral(self) -> bool:
+        """True iff the hop cannot change any virtual time: a local
+        drive, or a remote one behind a zero-cost wire (unconstrained
+        both ways, zero RTT/txn cost, and no MTU batching delay —
+        ``mtu_batch > 1`` still holds early frames for the batch flush
+        unless the timeout is zero)."""
+        return (not self.remote) or (
+            self.rtt_us == 0.0
+            and self.wire_txn_us == 0.0
+            and math.isinf(self.tx_bytes_per_us)
+            and math.isinf(self.rx_bytes_per_us)
+            and (self.mtu_batch == 1 or self.mtu_timeout_us == 0.0)
+        )
+
+    def replace(self, **kw: Any) -> "FabricConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class CacheConfig:
     """GPU-side set-associative page cache (pipeline stage 0).
 
@@ -314,6 +385,7 @@ class EngineConfig:
     # Sub-configs (split out rather than growing this class flat):
     qp: QPConfig = QPConfig()         # completion-side (CQ) model
     cache: CacheConfig = CacheConfig()  # GPU-side page cache (stage 0)
+    fabric: FabricConfig = FabricConfig()  # NIC/link hop (remote drives)
 
     def __post_init__(self) -> None:
         if self.num_sqs < 1 or self.sq_depth < 1:

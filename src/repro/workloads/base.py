@@ -121,6 +121,19 @@ class Workload:
             valid=jnp.ones((q, d), bool),
         )
 
+    def sharded(self, num_shards: int) -> "Workload":
+        """Adapt this generator to an M-drive array (one instance per
+        drive, distinguished by the per-device ``salt``).
+
+        Salt-aware generators (closed loop, Poisson, Zipf) already
+        produce M independent request streams from the salt alone and
+        return ``self``; fixed-trace replays override this to stripe
+        the trace's rows across the drives (``engine.init_array_state``
+        calls it with the array size).
+        """
+        del num_shards
+        return self
+
     def next_submit(
         self,
         new_req: jax.Array,      # (N,) i32 ids of the would-be new requests

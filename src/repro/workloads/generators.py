@@ -145,12 +145,20 @@ class TraceReplay(Workload):
     The trace is time-sorted and dealt round-robin across SQs (entry i goes
     to SQ ``i % num_sqs``), which preserves per-SQ time order. Build with
     ``TraceReplay.from_trace``; the whole trace must fit in the rings.
+
+    On an M-drive array (``num_shards = M``, set by
+    ``engine.init_array_state`` via ``sharded``) the trace is striped
+    across the drives: drive d replays exactly the rows whose time-sorted
+    trace index i satisfies ``i % M == d``, arrival times preserved — so
+    aggregate array numbers measure the one trace split M ways, not M
+    identical copies of it.
     """
 
     submit: tuple = ()   # static nested tuples, one row per SQ — hashable
     lba: tuple = ()
     ops: tuple = ()
     mask: tuple = ()
+    num_shards: int = 1  # M-drive striping (1 = whole trace on one drive)
 
     @staticmethod
     def from_trace(
@@ -192,6 +200,12 @@ class TraceReplay(Workload):
     def num_requests(self) -> int:
         return int(np.sum(np.asarray(self.mask)))
 
+    def sharded(self, num_shards: int) -> "TraceReplay":
+        """Stripe the trace across ``num_shards`` array drives."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards={num_shards} must be >= 1")
+        return dataclasses.replace(self, num_shards=num_shards)
+
     def prefill(self, cfg, ssd, salt=0) -> Prefill:
         sub = jnp.asarray(self.submit, jnp.float32)
         q, length = sub.shape
@@ -203,13 +217,28 @@ class TraceReplay(Workload):
             jnp.arange(q, dtype=jnp.int32)[:, None] * length
             + jnp.arange(length, dtype=jnp.int32)[None, :]
         )
+        valid = jnp.asarray(self.mask, bool)
+        if self.num_shards > 1:
+            # ``from_trace`` dealt time-sorted entry i to cell
+            # (row=i % q, col=i // q); reconstruct i and keep only this
+            # drive's stripe (i % M == salt). Column order ascends in
+            # time within each row, so the surviving entries stay
+            # ring-sorted and arrival times are untouched.
+            trace_idx = (
+                jnp.arange(length, dtype=jnp.int32)[None, :] * q
+                + jnp.arange(q, dtype=jnp.int32)[:, None]
+            )
+            mine = trace_idx % jnp.int32(self.num_shards) == jnp.asarray(
+                salt, jnp.int32
+            )
+            valid = valid & mine
         return Prefill(
             submit=sub,
             opcode=jnp.asarray(self.ops, jnp.int32),
             lba=jnp.asarray(self.lba, jnp.int32),
             nblocks=jnp.ones((q, length), jnp.int32),
             req_id=req_id,
-            valid=jnp.asarray(self.mask, bool),
+            valid=valid,
         )
 
     def next_submit(self, new_req, done, valid, anchor, cfg, ssd,

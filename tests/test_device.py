@@ -202,6 +202,56 @@ def test_client_striped_array_read():
     assert float(jnp.max(done)) < 0.5 * float(jnp.max(solo_done))
 
 
+def test_client_striped_read_ragged_matches_read_oracle():
+    """Regression: N % M != 0 used to raise — now the tail stripe pads
+    with invalid slots and every drive's completions match a plain
+    per-drive ``read`` bit-exactly, in the original request order."""
+    import jax
+
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    client = StorageClient(SSD, cfg)
+    m, n = 4, 1003  # ragged tail: 1003 = 4*250 + 3
+    state = client.init_array_state(m)
+    flash = jnp.arange(SSD.num_blocks, dtype=jnp.float32)[:, None] * jnp.ones(
+        (1, 8)
+    )
+    lba = (jnp.arange(n, dtype=jnp.int32) * 13) % SSD.num_blocks
+    state2, data, done = client.read_striped(state, flash, lba,
+                                             jnp.float32(0))
+    assert done.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(data[:, 0]), np.asarray(lba))
+    for d in range(m):
+        rows = np.arange(n)[np.arange(n) % m == d]
+        st_d = ClientState(dev=jax.tree.map(lambda x: x[d], state.dev))
+        _, _, done_d = client.read(st_d, flash, lba[rows], jnp.float32(0))
+        np.testing.assert_array_equal(
+            np.asarray(done)[rows], np.asarray(done_d)
+        )
+
+
+def test_client_striped_read_stripe_width():
+    """stripe_width=W engages only the first W drives; narrower stripes
+    serialize more and never finish sooner."""
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    client = StorageClient(SSD, cfg)
+    m, n = 4, 512
+    state = client.init_array_state(m)
+    flash = jnp.ones((SSD.num_blocks, 8))
+    lba = (jnp.arange(n, dtype=jnp.int32) * 7) % SSD.num_blocks
+    prev = None
+    for w in (m, 2, 1):
+        _, _, done = client.read_striped(
+            state, flash, lba, jnp.float32(0), stripe_width=w
+        )
+        span = float(jnp.max(done))
+        if prev is not None:
+            assert span > prev
+        prev = span
+    with pytest.raises(ValueError, match="stripe_width"):
+        client.read_striped(state, flash, lba, jnp.float32(0),
+                            stripe_width=m + 1)
+
+
 def test_engine_config_validation():
     with pytest.raises(ValueError, match="divisible"):
         EngineConfig(num_sqs=10, num_units=4)
