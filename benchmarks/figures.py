@@ -641,6 +641,119 @@ def fig24_stripe_replication(quick=False):
     return ["sweep", "value", "mreq_per_s", "mean_us", "p99_us"], rows
 
 
+def fig25_switch_roofline(quick=False):
+    """Shared-switch incast roofline: 4x40M remote drives whose per-drive
+    links are unconstrained all converge on one switch/initiator NIC.
+    Aggregate MIOPS clamps at switch_bytes_per_us / frame_bytes no matter
+    how fast the drives and links are (M independently-fast links now
+    contend); an unconstrained switch recovers the local-array aggregate
+    (>= 150 MIOPS at 4x40M)."""
+    import math
+
+    from repro.core import engine
+    from repro.core.types import FabricConfig
+
+    wl = WorkloadConfig(io_depth=1024)
+    m_dev = 4
+    frame = FabricConfig().cqe_bytes + C.FUTURE_40M.block_bytes
+    sws = (
+        [4000.0, 16000.0, float("inf")] if quick
+        else [2000.0, 4000.0, 8000.0, 16000.0, 32000.0, 64000.0,
+              float("inf")]
+    )
+    rows = []
+    for sw in sws:
+        fab = FabricConfig(
+            remote=True, switch_bytes_per_us=sw, switch_fanin=m_dev,
+        )
+        out = C.run_engine(
+            C.swarmio_cfg(fabric=fab), C.FUTURE_40M, wl, rounds=24,
+            num_devices=m_dev,
+        )
+        agg = float(engine.aggregate_iops(out))
+        roof = sw / frame * 1e6 if math.isfinite(sw) else float("inf")
+        m = out.metrics
+        rows.append([
+            sw if math.isfinite(sw) else "inf",
+            agg / 1e6,
+            roof / 1e6 if math.isfinite(roof) else "",
+            float(m.p50_us()), float(m.p99_us()),
+        ])
+    clamped, free = rows[0], rows[-1]
+    print(f"fig25: switch {clamped[0]:.0f} B/us clamps the 4x40M array to "
+          f"{clamped[1]:.1f} MIOPS (switch roof {clamped[2]:.1f}) despite "
+          f"unconstrained per-drive links; unconstrained switch recovers "
+          f"{free[1]:.0f} MIOPS "
+          f"({'>=' if free[1] >= 150 else '<'}150 target)")
+    return ["switch_bytes_per_us", "aggregate_miops", "switch_roof_miops",
+            "p50_us", "p99_us"], rows
+
+
+def fig26_tenant_qos(quick=False):
+    """Per-tenant QoS on the wire. (a) Two equal read tenants saturate an
+    RX-bound link; sweeping the weighted-fair weights moves the achieved
+    completion shares to track w0/(w0+w1) (within 10%). (b) A latency
+    read tenant shares a TX-bound link with a bulk-write tenant whose
+    576 B frames starve the 64 B read SQEs under FIFO; the weighted
+    arbiter restores read latency while the bulk tenant keeps its
+    share of the wire."""
+    from repro import workloads
+    from repro.core.types import FabricConfig
+
+    cfg = C.swarmio_cfg(num_sqs=16, fetch_width=64, num_units=8)
+    ssd = C.FUTURE_40M
+    rows = []
+    rounds = 96 if quick else 192
+    sweep = (
+        [(1.0, 1.0), (3.0, 1.0)] if quick
+        else [(1.0, 1.0), (2.0, 1.0), (3.0, 1.0), (7.0, 1.0)]
+    )
+    for weights in sweep:
+        fab = FabricConfig(remote=True, rx_bytes_per_us=2000.0,
+                           tx_bytes_per_us=8000.0, qos_weights=weights)
+        wl = workloads.MultiTenant(io_depth=64,
+                                   tenant_read_frac=(1.0, 1.0))
+        out = C.run_engine(cfg.replace(fabric=fab), ssd, wl, rounds=rounds)
+        share = out.metrics.tenant_share()
+        lat = out.metrics.tenant_avg_e2e_us()
+        want = weights[0] / sum(weights)
+        rows.append([
+            "share_sweep", f"{weights[0]:g}:{weights[1]:g}", want,
+            float(share[0]), abs(float(share[0]) - want) / want,
+            float(lat[0]), float(lat[1]),
+        ])
+    for name, weights in (
+        [("fifo", ()), ("wfq_1_1", (1.0, 1.0))] if quick
+        else [("fifo", ()), ("wfq_1_1", (1.0, 1.0)),
+              ("wfq_4_1", (4.0, 1.0))]
+    ):
+        fab = FabricConfig(remote=True, tx_bytes_per_us=400.0,
+                           rx_bytes_per_us=16000.0, qos_weights=weights)
+        wl = workloads.MultiTenant(io_depth=64,
+                                   tenant_read_frac=(1.0, 0.0))
+        # The drive-class device: the contrast is wire starvation, not
+        # the flash ceiling, so the D7 class keeps the device honest.
+        out = C.run_engine(cfg.replace(fabric=fab), C.D7_PS1010, wl,
+                           rounds=96)
+        lat = out.metrics.tenant_avg_e2e_us()
+        share = out.metrics.tenant_share()
+        rows.append([
+            "starvation", name, "", float(share[0]), "",
+            float(lat[0]), float(lat[1]),
+        ])
+    sw = [r for r in rows if r[0] == "share_sweep"]
+    worst = max(r[4] for r in sw)
+    fifo = next(r for r in rows if r[1] == "fifo")
+    wfq = next(r for r in rows if r[1] == "wfq_1_1")
+    print(f"fig26: achieved shares track weights within "
+          f"{worst*100:.1f}% (worst case, {'<=' if worst <= 0.1 else '>'}"
+          f"10% target); FIFO read latency {fifo[5]:.0f}us behind bulk "
+          f"writes -> {wfq[5]:.0f}us weighted "
+          f"({fifo[5]/max(wfq[5], 1e-9):.1f}x lower)")
+    return ["sweep", "weights", "want_share0", "share0", "share_rel_err",
+            "tenant0_e2e_us", "tenant1_e2e_us"], rows
+
+
 ALL = [
     ("fig03_frontend", fig03_frontend_plateau),
     ("fig04_per_request_overhead", fig04_per_request_overhead),
@@ -659,4 +772,6 @@ ALL = [
     ("fig22_cache_hit_rate", fig22_cache_hit_rate),
     ("fig23_fabric_roofline", fig23_fabric_roofline),
     ("fig24_stripe_replication", fig24_stripe_replication),
+    ("fig25_switch_roofline", fig25_switch_roofline),
+    ("fig26_tenant_qos", fig26_tenant_qos),
 ]

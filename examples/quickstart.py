@@ -138,3 +138,34 @@ print(f"remote array  : {float(engine.aggregate_iops(remote))/1e6:.0f} MIOPS "
       f"aggregate behind 4x2 GB/s links "
       f"(local array above: {float(engine.aggregate_iops(arr))/1e6:.0f}; "
       f"p99 {float(remote.metrics.p99_us()):.0f} us)")
+
+# 11. Share the fabric: (a) all four drives' return streams converge on
+#     one switch/initiator NIC (incast) — even with unconstrained
+#     per-drive links the array clamps at switch_bytes_per_us / ~528 B
+#     (fig25); (b) two tenants on one remote drive — a latency
+#     read tenant and a bulk-write tenant whose 576 B frames starve the
+#     64 B read SQEs on the TX wire under FIFO — get weighted-fair
+#     arbitration from qos_weights: backlogged classes split every
+#     shared cursor in weight proportion (fig26). MultiTenant
+#     partitions the SQs into contiguous per-tenant blocks.
+incast = FabricConfig(remote=True, switch_bytes_per_us=8000.0,
+                      switch_fanin=4)
+sw = engine.simulate(cfg.replace(fabric=incast), ssd, wl, rounds=64,
+                     num_devices=4)
+print(f"shared switch : {float(engine.aggregate_iops(sw))/1e6:.1f} MIOPS "
+      f"aggregate at an 8 GB/s switch "
+      f"(roof {8000.0 / (16 + 512):.1f} MIOPS, links unconstrained)")
+
+two_tenants = workloads.MultiTenant(io_depth=64,
+                                    tenant_read_frac=(1.0, 0.0))
+qos_cfg = cfg.replace(num_sqs=16, fetch_width=64, num_units=8)
+d7 = SSDConfig()  # the D7-class drive: the wire binds, not the flash
+for label, weights in [("fifo", ()), ("wfq 4:1", (4.0, 1.0))]:
+    fab = FabricConfig(remote=True, tx_bytes_per_us=400.0,
+                       rx_bytes_per_us=16000.0, qos_weights=weights)
+    out = engine.simulate(qos_cfg.replace(fabric=fab), d7, two_tenants,
+                          rounds=96)
+    lat = out.metrics.tenant_avg_e2e_us()
+    shares = [round(s, 2) for s in out.metrics.tenant_share().tolist()]
+    print(f"2-tenant {label:7s}: reads {float(lat[0]):5.0f} us, bulk "
+          f"writes {float(lat[1]):5.0f} us (shares {shares})")

@@ -29,10 +29,15 @@ extend the same program to an M-drive array: the per-device pipeline is
 whole array (paper-title 100-MIOPS regime at M x 40-MIOPS drives).
 Striped reads accept any batch size (ragged tails pad with invalid
 slots) and a ``stripe_width``; replicated reads home block b's R copies
-on drives ``(b + r) % M`` and route each read to the least-loaded link.
-With ``EngineConfig.fabric.remote`` the drives are *remote*: every
-request pays the NIC/link hop (fabric.py) exactly as ``engine_round``
-prices it.
+on drives ``(b + r) % M`` and route each read to the least-loaded
+candidate (the drive's own instance backlog, plus its RX link and
+shared-switch cursors on a remote array). With
+``EngineConfig.fabric.remote`` the drives are *remote*: every request
+pays the NIC/link hop — and, when configured, the shared-switch hop
+(fabric.py) — exactly as ``engine_round`` prices it. Every entry point
+takes a ``tenant=`` QoS class (scalar or per request) that the
+fabric's weighted-fair arbiter (``FabricConfig.qos_weights``)
+arbitrates between.
 """
 from __future__ import annotations
 
@@ -70,15 +75,20 @@ class ClientState:
     cache: "CacheState | None" = None   # stage-0 GPU page cache
 
     @staticmethod
-    def init(ssd: SSDConfig, num_units: int,
-             workers_per_unit: int = 1) -> "ClientState":
+    def init(ssd: SSDConfig, num_units: int, workers_per_unit: int = 1,
+             num_tenants: int = 1) -> "ClientState":
         """Manual-shape constructor (escape hatch). Prefer
-        ``StorageClient.init_state``, which derives unit/worker counts from
-        the same EngineConfig the pipeline prices with — passing counts
-        that disagree with the config silently prices a different device.
+        ``StorageClient.init_state``, which derives unit/worker/tenant
+        counts from the same EngineConfig the pipeline prices with —
+        passing counts that disagree with the config silently prices a
+        different device (and a ``num_tenants`` below
+        ``cfg.fabric.num_tenants`` mis-shapes the per-tenant fabric
+        cursors).
         """
         return ClientState(
-            dev=DeviceState.init(ssd, num_units, workers_per_unit)
+            dev=DeviceState.init(
+                ssd, num_units, workers_per_unit, num_tenants
+            )
         )
 
 
@@ -117,6 +127,7 @@ class StorageClient:
         t_submit: jax.Array,   # (N,) f32
         valid: jax.Array,      # (N,) bool
         opcode: jax.Array,     # (N,) i32
+        tenant: jax.Array | None = None,  # (N,) i32 QoS class
     ) -> Tuple[DeviceState, jax.Array]:
         """Post a flat batch as SQEs, fetch + process + reap via the CQs.
 
@@ -140,11 +151,13 @@ class StorageClient:
         order = jnp.argsort(t_submit, stable=True)
         sq_id = frontend.deal_sqs(n, cfg)
         zeros = jnp.zeros((n,), jnp.int32)
+        if tenant is None:
+            tenant = zeros
         rings = SQRings.empty(q, cfg.sq_depth)
         rings = frontend.submit(
             rings, sq_id, t_submit[order], opcode[order], lba[order],
             jnp.ones((n,), jnp.int32), zeros, order.astype(jnp.int32),
-            valid[order],
+            valid[order], tenant=tenant[order],
         )
 
         cq = pipe.init_cq()
@@ -175,6 +188,7 @@ class StorageClient:
         t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
         valid: jax.Array | None = None,
         with_data: bool = True,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
     ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
         """Issue N block reads at ``t_submit`` through the SQ/CQ rings.
 
@@ -183,13 +197,16 @@ class StorageClient:
         never post an SQE; completed reads fill the cache.
         ``with_data=False`` skips the functional gather and returns
         ``None`` data — for callers (the array wrappers) that gather
-        once themselves instead of paying it per device.
+        once themselves instead of paying it per device. ``tenant``
+        tags the requests' QoS class for the fabric's weighted-fair
+        arbiter (``cfg.fabric.qos_weights``).
         """
         n = lba.shape[0]
         lba = lba.astype(jnp.int32)
         t_submit = jnp.broadcast_to(
             jnp.asarray(t_submit, jnp.float32), (n,)
         )
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
         if valid is None:
             valid = jnp.ones((n,), bool)
 
@@ -203,7 +220,7 @@ class StorageClient:
 
         dev, done = self._submit_through_rings(
             state.dev, lba, t_submit, submit_valid,
-            jnp.zeros((n,), jnp.int32),
+            jnp.zeros((n,), jnp.int32), tenant,
         )
         if self.cfg.cache.enabled:
             done = jnp.where(hit, hit_done, done)
@@ -219,6 +236,7 @@ class StorageClient:
         lba: jax.Array,        # (N,) i32 destination block addresses
         t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
         valid: jax.Array | None = None,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
         """Issue N block writes at ``t_submit`` through the SQ/CQ rings.
 
@@ -237,11 +255,12 @@ class StorageClient:
         t_submit = jnp.broadcast_to(
             jnp.asarray(t_submit, jnp.float32), (n,)
         )
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
         if valid is None:
             valid = jnp.ones((n,), bool)
         dev, done = self._submit_through_rings(
             state.dev, lba, t_submit, valid,
-            jnp.full((n,), OP_WRITE, jnp.int32),
+            jnp.full((n,), OP_WRITE, jnp.int32), tenant,
         )
         cstate = state.cache
         if self.cfg.cache.enabled:
@@ -258,6 +277,7 @@ class StorageClient:
         t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
         valid: jax.Array | None = None,   # (M, N) bool
         with_data: bool = True,
+        tenant: "jax.Array | int" = 0,    # scalar or (M, N) i32 QoS class
     ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
         """Per-device batched reads over an M-drive array, one vmap."""
         m, n = lba.shape
@@ -265,18 +285,20 @@ class StorageClient:
         if t_submit.ndim == 1:
             t_submit = t_submit[:, None]
         t_submit = jnp.broadcast_to(t_submit, (m, n))
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (m, n))
         if valid is None:
             valid = jnp.ones((m, n), bool)
 
-        def one(st, lba_d, t_d, valid_d):
+        def one(st, lba_d, t_d, valid_d, ten_d):
             # Data is gathered once at the array level below, not per
             # device inside the vmap.
             st, _, done = self.read(
-                st, flash, lba_d, t_d, valid_d, with_data=False
+                st, flash, lba_d, t_d, valid_d, with_data=False,
+                tenant=ten_d,
             )
             return st, done
 
-        state, done = jax.vmap(one)(state, lba, t_submit, valid)
+        state, done = jax.vmap(one)(state, lba, t_submit, valid, tenant)
         data = flash[jnp.where(valid, lba, 0)] if with_data else None
         return state, data, done
 
@@ -288,6 +310,7 @@ class StorageClient:
         lba: jax.Array,        # (M, N) i32 per-device block addresses
         t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
         valid: jax.Array | None = None,   # (M, N) bool
+        tenant: "jax.Array | int" = 0,    # scalar or (M, N) i32 QoS class
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
         """Per-device batched writes over an M-drive array, one vmap.
 
@@ -303,20 +326,23 @@ class StorageClient:
         if t_submit.ndim == 1:
             t_submit = t_submit[:, None]
         t_submit = jnp.broadcast_to(t_submit, (m, n))
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (m, n))
         if valid is None:
             valid = jnp.ones((m, n), bool)
         zero_store = jnp.zeros((1,) + data.shape[2:], data.dtype)
 
-        def one(st, data_d, lba_d, t_d, valid_d):
+        def one(st, data_d, lba_d, t_d, valid_d, ten_d):
             # Price + cache via the single-device path against a dummy
             # store; the real scatter into the shared store happens once
             # below (identical semantics, no M copies of the store).
             st, _, done = self.write(
-                st, zero_store, data_d, lba_d, t_d, valid_d
+                st, zero_store, data_d, lba_d, t_d, valid_d, tenant=ten_d
             )
             return st, done
 
-        state, done = jax.vmap(one)(state, data, lba, t_submit, valid)
+        state, done = jax.vmap(one)(
+            state, data, lba, t_submit, valid, tenant
+        )
         dst = jnp.where(valid, lba, flash.shape[0]).reshape(-1)
         flash = flash.at[dst].set(
             data.reshape((m * n,) + data.shape[2:]), mode="drop"
@@ -331,6 +357,7 @@ class StorageClient:
         t_submit: jax.Array,   # () or (N,) f32
         valid: jax.Array | None = None,
         stripe_width: int | None = None,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
         """Stripe a flat read batch round-robin over the array's drives.
 
@@ -353,6 +380,7 @@ class StorageClient:
         if valid is None:
             valid = jnp.ones((n,), bool)
         t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
         cols = -(-n // w)          # ceil: ring slots per striped drive
         pad = cols * w - n
 
@@ -370,6 +398,7 @@ class StorageClient:
         state, _, done = self.read_array(
             state, flash, to_dev(lba, 0), to_dev(t_submit, 0.0),
             to_dev(valid, False), with_data=False,
+            tenant=to_dev(tenant, 0),
         )
         done = done[:w].T.reshape(cols * w)[:n]
         data = flash[jnp.where(valid, lba, 0)]
@@ -383,17 +412,20 @@ class StorageClient:
         t_submit: jax.Array,   # () or (N,) f32
         valid: jax.Array | None = None,
         replicas: int = 2,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
     ) -> Tuple[ClientState, jax.Array, jax.Array]:
         """Replica-read over an M-drive array with least-loaded routing.
 
         Block b's R replicas live on drives ``(b + r) % M`` (chained
-        declustering), and each read is routed to the candidate whose
-        *link* is least loaded: the drive's fabric RX cursor plus the
-        wire time of the work already routed to it within this batch.
-        On a remote array (``cfg.fabric.remote``) that balances the
-        per-link backlog; on a local array it degenerates to in-batch
-        count balancing. Returns (state', data, done) in the original
-        request order.
+        declustering), and each read is routed to the candidate that is
+        least loaded: the drive's own occupancy (its timing-model
+        instance backlog) plus — on a remote array — its fabric RX link
+        cursor and its shared-switch RX cursor, plus the estimated time
+        of the work already routed to it within this batch. The
+        device-side term keeps routing load-aware on *local* arrays
+        too, where the wire cursors never advance (they used to be the
+        only signal, which left local routing blind to busy drives).
+        Returns (state', data, done) in the original request order.
         """
         m = jax.tree.leaves(state.dev)[0].shape[0]
         if not 1 <= replicas <= m:
@@ -407,21 +439,29 @@ class StorageClient:
             valid = jnp.ones((n,), bool)
         t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
 
-        # Per-request load increment in the same unit as the RX cursors
-        # (us of link occupancy: frame bytes at the link bandwidth plus
-        # the amortized wire-transaction cost). A zero-cost wire never
-        # advances the cursors, so the unit falls back to request
-        # counting — the two scales are never mixed.
+        # Load signal and per-request increment, both in us of backlog.
+        # Device side: mean instance occupancy, growing by one service
+        # slot (1e6 / t_max_iops us) per routed read. Remote side adds
+        # the RX link + switch cursors and the frame's wire time (frame
+        # bytes at the binding bandwidths plus the amortized wire-
+        # transaction cost); a zero-cost wire contributes nothing and
+        # the device-side term alone still balances — bit-identical to
+        # a local array, as the parity suite asserts.
         fab = self.cfg.fabric
-        est = 0.0
+        load0 = jnp.mean(state.dev.tstate.busy_until, axis=-1)
+        est = 1e6 / self.ssd.t_max_iops
         if fab.remote:
-            est = fab.wire_txn_us / fab.mtu_batch
+            # The link frontier is the latest per-tenant cursor.
+            load0 = load0 + jnp.max(state.dev.fabric.rx_busy, axis=-1)
+            est += fab.wire_txn_us / fab.mtu_batch
+            frame = fab.cqe_bytes + self.ssd.block_bytes
             if math.isfinite(fab.rx_bytes_per_us):
-                est += (
-                    fab.cqe_bytes + self.ssd.block_bytes
-                ) / fab.rx_bytes_per_us
-        if est == 0.0:
-            est = 1.0  # count balancing (cursors are identically zero)
+                est += frame / fab.rx_bytes_per_us
+            if fab.switched:
+                load0 = load0 + jnp.max(
+                    state.dev.fabric.switch_rx, axis=-1
+                )
+                est += frame / fab.switch_share_bytes_per_us
         cand = (
             lba[:, None] + jnp.arange(replicas, dtype=jnp.int32)[None, :]
         ) % m                                            # (N, R)
@@ -432,9 +472,7 @@ class StorageClient:
             load = jnp.where(v, load.at[d].add(jnp.float32(est)), load)
             return load, jnp.where(v, d, jnp.int32(m))
 
-        _, drive = jax.lax.scan(
-            route, state.dev.fabric.rx_busy, (cand, valid)
-        )
+        _, drive = jax.lax.scan(route, load0, (cand, valid))
 
         # Scatter each request into its drive's batch slot (rank =
         # arrival order within the drive), fan out through the array
@@ -447,12 +485,14 @@ class StorageClient:
             base = jnp.full((m, n), fill, dtype)
             return base.at[row, col].set(x, mode="drop")
 
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
         state, _, done2d = self.read_array(
             state, flash,
             scat(lba, 0, jnp.int32),
             scat(t_submit, 0.0, jnp.float32),
             scat(valid, False, bool),
             with_data=False,
+            tenant=scat(tenant, 0, jnp.int32),
         )
         done = jnp.where(
             valid, done2d[row, jnp.clip(col, 0, n - 1)], 0.0

@@ -32,8 +32,13 @@ wrap the target-side stages (fabric.py): fetched SQEs plus write
 payloads cross the TX link before stage 2, and completions plus read
 payloads cross the RX link back before stage 5 — MTU-batched wire
 transactions on per-link serialization cursors, plus half-RTT
-propagation each way. Local drives (the default) skip both hops, so
-the pipeline reproduces the fabric-less code path bit-exactly.
+propagation each way. With a finite ``switch_bytes_per_us`` the frames
+additionally serialize through the shared switch/initiator-NIC port
+(fan-out before the TX link, incast after the RX link) at the lane's
+fair share of the aggregate roof, and with ``qos_weights`` configured
+every shared hop serves tenants in weighted-fair order
+(``RequestBatch.tenant``). Local drives (the default) skip all hops,
+so the pipeline reproduces the fabric-less code path bit-exactly.
 
 ``DevicePipeline.process`` composes stages 2-5 for a fetched
 ``RequestBatch``: it threads the ``CQRings`` through and returns per-
@@ -85,8 +90,8 @@ class DeviceState:
     fabric: FabricState    # NIC/link cursors for remote drives (fabric.py)
 
     @staticmethod
-    def init(ssd: SSDConfig, num_units: int, workers_per_unit: int = 1
-             ) -> "DeviceState":
+    def init(ssd: SSDConfig, num_units: int, workers_per_unit: int = 1,
+             num_tenants: int = 1) -> "DeviceState":
         return DeviceState(
             tstate=TimingState.init(ssd.n_instances),
             disp_time=jnp.zeros((num_units,), jnp.float32),
@@ -95,7 +100,7 @@ class DeviceState:
             lock_time=jnp.float32(0),
             map_time=jnp.float32(0),
             flash=FlashState.init(ssd),
-            fabric=FabricState.init(),
+            fabric=FabricState.init(num_tenants),
         )
 
     @property
@@ -161,7 +166,8 @@ class DevicePipeline:
 
     def init_state(self) -> DeviceState:
         return DeviceState.init(
-            self.ssd, self.num_units, self.cfg.workers_per_unit
+            self.ssd, self.num_units, self.cfg.workers_per_unit,
+            self.cfg.fabric.num_tenants,
         )
 
     # -- stage 1 (ring variants live in frontend.py) -------------------------
@@ -211,16 +217,24 @@ class DevicePipeline:
         fab = cfg.fabric
         u = state.num_units
         valid = batch.valid
+        tenant = batch.tenants if fab.num_tenants > 1 else None
 
         # -- stage 1.5: fabric TX hop (remote drives only). Fetched SQEs
         # (plus write payloads) cross the wire before the target-side
-        # pipeline sees them; local drives skip the stage entirely.
+        # pipeline sees them — through the shared switch port first
+        # (fan-out direction), then this drive's own link; local drives
+        # skip the stage entirely.
         fab_tx, fab_rx = state.fabric.tx_busy, state.fabric.rx_busy
+        sw_tx, sw_rx = state.fabric.switch_tx, state.fabric.switch_rx
         if fab.remote:
+            tx_bytes = fabric_mod.tx_wire_bytes(batch, plat.sqe_bytes, ssd)
+            if fab.switched:
+                sw_tx, fetch_done = fabric_mod.switch_hop(
+                    sw_tx, fetch_done, tx_bytes, valid, fab, tenant
+                )
             fab_tx, fetch_done = fabric_mod.fabric_hop(
-                fab_tx, fetch_done,
-                fabric_mod.tx_wire_bytes(batch, plat.sqe_bytes, ssd),
-                valid, fab, fab.tx_bytes_per_us,
+                fab_tx, fetch_done, tx_bytes,
+                valid, fab, fab.tx_bytes_per_us, tenant,
             )
 
         # -- stage 2a: global timing-model lock.
@@ -278,13 +292,19 @@ class DevicePipeline:
         )
 
         # -- stage 4.5: fabric RX hop. Completions (plus read payloads)
-        # cross back to the initiator before they reach its CQ.
+        # cross back to the initiator — over this drive's link first,
+        # then the shared switch port all M return streams converge on
+        # (incast) — before they reach its CQ.
         if fab.remote:
+            rx_bytes = fabric_mod.rx_wire_bytes(batch, fab, ssd)
             fab_rx, wire_done = fabric_mod.fabric_hop(
-                fab_rx, done,
-                fabric_mod.rx_wire_bytes(batch, fab, ssd),
-                valid, fab, fab.rx_bytes_per_us,
+                fab_rx, done, rx_bytes,
+                valid, fab, fab.rx_bytes_per_us, tenant,
             )
+            if fab.switched:
+                sw_rx, wire_done = fabric_mod.switch_hop(
+                    sw_rx, wire_done, rx_bytes, valid, fab, tenant
+                )
             wire_done = jnp.where(valid, wire_done, 0.0)
         else:
             wire_done = done
@@ -292,7 +312,11 @@ class DevicePipeline:
         new_state = DeviceState(
             tstate=tstate, disp_time=disp_time, work_time=work_time,
             dsa_time=dsa_time, lock_time=lock_time, map_time=map_time,
-            flash=fstate, fabric=FabricState(tx_busy=fab_tx, rx_busy=fab_rx),
+            flash=fstate,
+            fabric=FabricState(
+                tx_busy=fab_tx, rx_busy=fab_rx,
+                switch_tx=sw_tx, switch_rx=sw_rx,
+            ),
         )
 
         # -- stage 5: post to the CQ and reap (queue-pair layer).
@@ -345,6 +369,7 @@ def make_direct_batch(
     valid: jax.Array | None = None,
     opcode: jax.Array | None = None,
     nblocks: jax.Array | None = None,
+    tenant: jax.Array | None = None,
 ) -> RequestBatch:
     """RequestBatch for ring-less direct submission (test-only path)."""
     n = lba.shape[0]
@@ -361,4 +386,5 @@ def make_direct_batch(
         buf_id=z,
         req_id=jnp.arange(n, dtype=jnp.int32),
         valid=valid,
+        tenant=z if tenant is None else tenant,
     )

@@ -104,13 +104,21 @@ class Metrics:
     first_submit: jax.Array   # f32 us   min submit time seen
     lat_hist: jax.Array       # (HIST_BUCKETS,) f32 E2E latency histogram
     cache_hits: jax.Array     # f32 count of stage-0 page-cache hits
+    # Per-tenant (QoS class) device completions and E2E sums, shape (T,)
+    # with T = max(fabric arbiter classes, workload classes) at init —
+    # a single bucket by default. Stage-0 cache hits never reach the
+    # device and are excluded.
+    tenant_completed: jax.Array  # (T,) f32
+    tenant_sum_e2e: jax.Array    # (T,) f32 us
 
     @staticmethod
-    def zero() -> "Metrics":
+    def zero(num_tenants: int = 1) -> "Metrics":
         z = jnp.float32(0)
         return Metrics(
             z, z, z, z, z, jnp.float32(0), FAR,
             jnp.zeros((HIST_BUCKETS,), jnp.float32), z,
+            jnp.zeros((num_tenants,), jnp.float32),
+            jnp.zeros((num_tenants,), jnp.float32),
         )
 
     def iops(self) -> jax.Array:
@@ -130,6 +138,25 @@ class Metrics:
     def hit_rate(self) -> jax.Array:
         """Fraction of completed requests served by the stage-0 cache."""
         return self.cache_hits / jnp.maximum(self.completed, 1.0)
+
+    def tenant_share(self) -> jax.Array:
+        """(T,) fraction of device completions per tenant (sums to 1
+        whenever anything completed). Leading device axes of an array
+        run are summed away, so the shares are array-aggregate."""
+        c = self.tenant_completed.reshape(
+            -1, self.tenant_completed.shape[-1]
+        ).sum(axis=0)
+        return c / jnp.maximum(jnp.sum(c), 1.0)
+
+    def tenant_avg_e2e_us(self) -> jax.Array:
+        """(T,) mean consumer-observed latency per tenant."""
+        c = self.tenant_completed.reshape(
+            -1, self.tenant_completed.shape[-1]
+        ).sum(axis=0)
+        s = self.tenant_sum_e2e.reshape(
+            -1, self.tenant_sum_e2e.shape[-1]
+        ).sum(axis=0)
+        return s / jnp.maximum(c, 1.0)
 
     def p50_us(self) -> jax.Array:
         return hist_percentile(self.lat_hist, 0.50)
@@ -186,7 +213,7 @@ def init_state(
     buf_id = (pre.req_id % cfg.num_bufs).astype(jnp.int32)
     rings = frontend.submit_grouped(
         rings, pre.submit, pre.opcode, pre.lba, pre.nblocks, buf_id,
-        pre.req_id, pre.valid,
+        pre.req_id, pre.valid, tenant=pre.tenant,
     )
 
     nb = ssd.num_blocks if cfg.emulate_data else 1
@@ -213,7 +240,13 @@ def init_state(
         req_counter=jnp.int32(n_pre),
         salt=jnp.asarray(salt, jnp.int32),
         last_submit=last_submit,
-        metrics=Metrics.zero(),
+        # Tenant metric buckets: enough for whichever layer defines more
+        # classes — the fabric arbiter (qos_weights) or the workload
+        # generator — so an unweighted (FIFO) baseline still reports
+        # per-tenant shares/latency for a multi-tenant request stream.
+        metrics=Metrics.zero(
+            max(cfg.fabric.num_tenants, getattr(wl, "num_tenants", 1))
+        ),
     )
 
 
@@ -255,6 +288,14 @@ def engine_round(
         valid.astype(jnp.float32), latency_bucket(e2e),
         num_segments=HIST_BUCKETS,
     )
+    # Per-tenant (QoS class) completion accounting: T is static (the
+    # metrics' bucket count, fixed at init).
+    n_ten = state.metrics.tenant_completed.shape[0]
+    t_bucket = jnp.clip(batch.tenants, 0, n_ten - 1)
+    tenant_completed = jax.ops.segment_sum(
+        valid.astype(jnp.float32), t_bucket, num_segments=n_ten
+    )
+    tenant_sum_e2e = jax.ops.segment_sum(e2e, t_bucket, num_segments=n_ten)
 
     # -- functional data movement --------------------------------------------
     flash, bufs = state.flash, state.bufs
@@ -263,9 +304,13 @@ def engine_round(
         flash = datapath.apply_writes(flash, bufs, batch)
 
     # -- workload-driven resubmission (stage-0 cache filters first) ----------
+    # Rows are SQ-major (q, f); a row's tenant is its SQ's static class.
+    tenant_rows = jnp.repeat(
+        wl.tenant_of_sq(jnp.arange(q, dtype=jnp.int32), cfg, state.salt), f
+    )
     new_req = state.req_counter + jnp.arange(n, dtype=jnp.int32)
     new_lba = wl.address(new_req, ssd, state.salt)
-    new_op = wl.opcode(new_req, state.salt)
+    new_op = wl.opcode(new_req, state.salt, tenant=tenant_rows)
     anchor = jnp.repeat(state.last_submit, f)
     resub_t, resub_valid = wl.next_submit(
         new_req, done, valid, anchor, cfg, ssd, state.salt
@@ -312,7 +357,7 @@ def engine_round(
                 + jnp.arange(n, dtype=jnp.int32)
             )
             s_lba = wl.address(ids, ssd, state.salt)
-            s_op = wl.opcode(ids, state.salt)
+            s_op = wl.opcode(ids, state.salt, tenant=tenant_rows)
             s_t, s_valid = wl.next_submit(
                 ids, done_h, hit, anchor, cfg, ssd, state.salt
             )
@@ -344,6 +389,8 @@ def engine_round(
         ),
         lat_hist=m.lat_hist + lat_hist + hit_bucket,
         cache_hits=m.cache_hits + hits_count,
+        tenant_completed=m.tenant_completed + tenant_completed,
+        tenant_sum_e2e=m.tenant_sum_e2e + tenant_sum_e2e,
     )
 
     resub_t = jnp.where(resub_valid, resub_t, FAR)
@@ -370,6 +417,7 @@ def engine_round(
         pick(batch.buf_id),
         pick(new_req),
         pick(resub_valid),
+        tenant=pick(tenant_rows),
     )
 
     # -- clock advance --------------------------------------------------------

@@ -18,11 +18,39 @@ order, frames pack into MTU batches of ``mtu_batch`` per wire
 transaction (flushed early once the oldest frame has waited
 ``mtu_timeout_us``), each transaction pays ``wire_txn_us`` of NIC setup
 plus its bytes at the link bandwidth on a serialized per-link cursor,
-and every direction adds half the configured RTT of propagation. The
-cursor only advances when a frame actually occupies the link (cost > 0),
-so a zero-cost wire — ``inf`` bandwidth, zero RTT/txn — is an *exact*
-no-op even across epochs, and ``FabricConfig(remote=False)`` skips the
-stage entirely (the PR-3 parity contract).
+and every direction adds half the configured RTT of propagation. A
+frame that becomes ready only after its MTU batch has flushed ships as
+its own late transaction: it pays ``wire_txn_us`` again (it cannot ride
+a doorbell that already rang). Cursors only advance when a frame
+actually occupies the link (cost > 0), so a zero-cost wire — ``inf``
+bandwidth, zero RTT/txn — is an *exact* no-op even across epochs, and
+``FabricConfig(remote=False)`` skips the stage entirely (the PR-3
+parity contract).
+
+Two shared-resource stages extend the per-drive links:
+
+  * **Shared switch / initiator NIC** (``switch_hop``): the M per-drive
+    links of a remote array converge on one switch port per direction
+    (incast on RX, fan-out on TX). Each vmapped drive lane serializes
+    its frames through a switch cursor at the fair per-link share
+    ``switch_bytes_per_us / switch_fanin`` — the epoch-batched
+    fair-share port model, exact for the symmetric saturated regime the
+    roofline figures measure and an upper bound on per-lane bandwidth
+    otherwise (an idle lane's share is not redistributed).
+  * **Weighted-fair per-tenant QoS**: with more than one entry in
+    ``qos_weights`` every shared resource runs one serialization cursor
+    *per tenant class* in the fluid generalized-processor-sharing
+    discretization: the tenants with traffic in an epoch split the
+    resource in weight proportion (tenant k's frames serialize at
+    ``w_k / sum(active w)`` of the bandwidth on k's own cursor), so a
+    bulk tenant can no longer occupy the whole wire ahead of a latency
+    tenant's small frames, saturated throughput shares track the
+    configured weights, and a lone active tenant still gets the full
+    bandwidth (work conservation at epoch granularity — a tenant idle
+    for part of an epoch does not donate its share within it). MTU
+    batches never mix tenants (NIC queues are per class). With a single
+    class the cursor vector has one entry and the hop is bit-exact
+    with the unweighted path.
 """
 
 from __future__ import annotations
@@ -47,21 +75,27 @@ from repro.core.types import OP_WRITE, FabricConfig, RequestBatch, SSDConfig
 class FabricState:
     """Per-drive link state (one remote drive = one link each way).
 
-    An M-drive remote array vmaps the pipeline over a leading device
-    axis, so the stacked state carries M independent link cursors — the
-    per-link load signal replica reads balance against
-    (``StorageClient.read_replicated``).
+    Every cursor is a ``(T,)`` vector with one entry per tenant class
+    (``T = FabricConfig.num_tenants``, 1 unless QoS weights are
+    configured): tenant k's frames serialize on entry k at k's
+    weighted share of the resource. An M-drive remote array vmaps the
+    pipeline over a leading device axis, so the stacked state carries
+    M independent link cursors — the per-link load signal replica
+    reads balance against (``StorageClient.read_replicated``).
+    ``switch_tx``/``switch_rx`` are the lane's cursors on the *shared*
+    switch port (each lane serializes at its fair share of the
+    aggregate switch roof).
     """
 
-    tx_busy: jax.Array  # () f32 initiator->target serialization cursor
-    rx_busy: jax.Array  # () f32 target->initiator serialization cursor
+    tx_busy: jax.Array  # (T,) f32 initiator->target serialization cursors
+    rx_busy: jax.Array  # (T,) f32 target->initiator serialization cursors
+    switch_tx: jax.Array  # (T,) f32 shared-switch cursors, TX direction
+    switch_rx: jax.Array  # (T,) f32 shared-switch cursors, RX direction
 
     @staticmethod
-    def init() -> "FabricState":
-        return FabricState(
-            tx_busy=jnp.float32(0),
-            rx_busy=jnp.float32(0),
-        )
+    def init(num_tenants: int = 1) -> "FabricState":
+        z = jnp.zeros((num_tenants,), jnp.float32)
+        return FabricState(tx_busy=z, rx_busy=z, switch_tx=z, switch_rx=z)
 
 
 def tx_wire_bytes(
@@ -88,13 +122,85 @@ def rx_wire_bytes(
     return jnp.float32(fab.cqe_bytes) + payload
 
 
+def _frame_layout(
+    t_ready: jax.Array,
+    valid: jax.Array,
+    tenant: "jax.Array | None",
+    fab: FabricConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Canonical epoch layout shared by the link and switch hops.
+
+    Frames sort by ready time, then segment by (tenant class, with
+    invalid rows as a trailing pseudo-segment) — original time order
+    preserved within each segment. With one tenant class this is
+    exactly the validity layout of the unweighted path. Returns
+    ``(order, heads, rank, key_clip)``: the permutation into the
+    layout, segment heads and within-segment ranks there, and each
+    row's clipped tenant id for cursor/weight gathers.
+    """
+    t = fab.num_tenants
+    if tenant is None or t == 1:
+        cls = jnp.zeros_like(valid, jnp.int32)
+    else:
+        cls = jnp.clip(tenant, 0, t - 1)
+    key = jnp.where(valid, cls, t)
+    ord1 = jnp.argsort(t_ready, stable=True)
+    ord2, heads, rank = sort_by_segment(key[ord1])
+    order = ord1[ord2]
+    return order, heads, rank, jnp.clip(key[order], 0, t - 1)
+
+
+def _gps_serve(
+    busy: jax.Array,  # (T,) per-tenant cursors for this resource
+    ready: jax.Array,  # (N,) f32 frame-ready times (epoch layout)
+    cost: jax.Array,  # (N,) f32 full-bandwidth service cost per frame
+    s_valid: jax.Array,  # (N,) bool
+    heads: jax.Array,  # (N,) bool tenant-segment heads
+    key_clip: jax.Array,  # (N,) i32 clipped tenant id per row
+    fab: FabricConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Serve one epoch on per-tenant cursors at weighted shares.
+
+    The tenants with any valid frame in the epoch split the resource
+    in weight proportion: tenant k's frames run the single-server
+    recurrence on cursor k with costs inflated by ``sum(active w) /
+    w_k`` (fluid GPS at epoch granularity). A lone active tenant pays
+    plain cost (full bandwidth); with one configured class the factor
+    is exactly 1.0 and the result is bit-identical to the unweighted
+    scan. Returns ``(busy', sent)``; cursors only advance where a
+    frame carried cost.
+    """
+    t = fab.num_tenants
+    w = jnp.asarray(fab.qos_weights or (1.0,), jnp.float32)
+    active = jnp.maximum(
+        jax.ops.segment_max(
+            s_valid.astype(jnp.float32), key_clip, num_segments=t
+        ),
+        0.0,
+    )
+    act_w = jnp.sum(w * active)
+    act_w = jnp.where(act_w > 0.0, act_w, 1.0)
+    eff = cost * (act_w / w[key_clip])
+    sent = queueing_scan(ready, eff, heads, busy[key_clip])
+    busy = jnp.maximum(
+        busy,
+        jax.ops.segment_max(
+            jnp.where(s_valid & (cost > 0.0), sent, NEG),
+            key_clip,
+            num_segments=t,
+        ),
+    )
+    return busy, sent
+
+
 def fabric_hop(
-    busy: jax.Array,  # () f32 this direction's link cursor
+    busy: jax.Array,  # (T,) f32 this direction's link cursor(s)
     t_ready: jax.Array,  # (N,) f32 frame-ready times (fetch_done / done)
     nbytes: jax.Array,  # (N,) f32 wire bytes per frame
     valid: jax.Array,  # (N,) bool
     fab: FabricConfig,
     bytes_per_us: float,
+    tenant: "jax.Array | None" = None,  # (N,) i32 QoS class per frame
 ) -> Tuple[jax.Array, jax.Array]:
     """Price one epoch's frames over one link direction.
 
@@ -105,21 +211,17 @@ def fabric_hop(
     visible once its own bytes have crossed, so a large MTU batch does
     not hold its first frame for the whole transfer.
     """
-    # Time-sort, then segment valid frames ahead of invalid ones (the
-    # qp.py layout: invalid rows form a trailing pseudo-segment whose
-    # group stats never mix with real frames).
-    key = jnp.where(valid, 0, 1)
-    ord1 = jnp.argsort(t_ready, stable=True)
-    ord2, heads, rank = sort_by_segment(key[ord1])
-    order = ord1[ord2]
+    busy = jnp.atleast_1d(jnp.asarray(busy, jnp.float32))
+    order, heads, rank, key_clip = _frame_layout(t_ready, valid, tenant, fab)
     s_t = t_ready[order]
     s_valid = valid[order]
     s_bytes = nbytes[order]
 
-    # MTU batches: contiguous runs of mtu_batch frames. A batch ships
-    # when it fills (last member's ready time) or its flush timer
-    # expires (first member + mtu_timeout_us), whichever is earlier; a
-    # frame completing after that flush ships at its own ready time (it
+    # MTU batches: contiguous runs of mtu_batch frames within a tenant
+    # segment (NIC queues never mix classes). A batch ships when it
+    # fills (last member's ready time) or its flush timer expires
+    # (first member + mtu_timeout_us), whichever is earlier; a frame
+    # completing after that flush ships at its own ready time (it
     # would have ridden the next transaction).
     gheads = heads | (rank % fab.mtu_batch == 0)
     tails = jnp.concatenate([gheads[1:], jnp.ones((1,), bool)])
@@ -133,19 +235,45 @@ def fabric_hop(
 
     # Serialized transmission: per-transaction NIC setup at the batch
     # head, per-frame bytes at the link bandwidth, single-server queue
-    # seeded from the link cursor.
+    # per tenant cursor. A post-flush straggler missed its batch's
+    # doorbell and ships as its own wire transaction, so it pays the
+    # NIC setup again instead of riding for free.
     cost = jnp.where(s_valid, s_bytes / jnp.float32(bytes_per_us), 0.0)
     cost = cost + jnp.where(
-        gheads & s_valid, jnp.float32(fab.wire_txn_us), 0.0
+        (gheads | (s_t > bell)) & s_valid, jnp.float32(fab.wire_txn_us), 0.0
     )
-    sent = queueing_scan(ready, cost, heads, busy)
-
-    # The cursor advances only where a frame actually occupied the link:
-    # a zero-cost wire imposes no serialization (exact no-op contract).
-    busy = jnp.maximum(
-        busy,
-        jnp.max(jnp.where(s_valid & (cost > 0.0), sent, NEG)),
-    )
+    busy, sent = _gps_serve(busy, ready, cost, s_valid, heads, key_clip, fab)
     landed = sent + jnp.float32(0.5 * fab.rtt_us)
     t_out = jnp.zeros_like(t_ready).at[order].set(landed)
+    return busy, jnp.where(valid, t_out, t_ready)
+
+
+def switch_hop(
+    busy: jax.Array,  # (T,) f32 this lane's shared-switch cursor(s)
+    t_ready: jax.Array,  # (N,) f32 frame-ready times
+    nbytes: jax.Array,  # (N,) f32 wire bytes per frame
+    valid: jax.Array,  # (N,) bool
+    fab: FabricConfig,
+    tenant: "jax.Array | None" = None,  # (N,) i32 QoS class per frame
+) -> Tuple[jax.Array, jax.Array]:
+    """Price one epoch's frames through the shared switch port.
+
+    The incast stage: all M per-drive links of a remote array feed one
+    switch/initiator-NIC port per direction, so each lane's frames
+    additionally serialize at the fair per-link share
+    ``switch_bytes_per_us / switch_fanin``. Frames are already framed
+    by the link hop — no MTU re-batching, NIC setup, or propagation
+    here, just bytes through the port share on carried per-tenant
+    cursors (weighted GPS across tenants like every shared resource).
+    A zero-cost switch (``inf`` roof) never advances the cursors.
+    """
+    busy = jnp.atleast_1d(jnp.asarray(busy, jnp.float32))
+    share = fab.switch_share_bytes_per_us
+    order, heads, _, key_clip = _frame_layout(t_ready, valid, tenant, fab)
+    s_t = t_ready[order]
+    s_valid = valid[order]
+
+    cost = jnp.where(s_valid, nbytes[order] / jnp.float32(share), 0.0)
+    busy, sent = _gps_serve(busy, s_t, cost, s_valid, heads, key_clip, fab)
+    t_out = jnp.zeros_like(t_ready).at[order].set(sent)
     return busy, jnp.where(valid, t_out, t_ready)

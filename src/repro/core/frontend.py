@@ -41,6 +41,7 @@ class SQRings:
     nblocks: jax.Array      # (Q, D) i32
     buf_id: jax.Array       # (Q, D) i32
     req_id: jax.Array       # (Q, D) i32
+    tenant: jax.Array       # (Q, D) i32 — QoS/tenant class of the entry
     head: jax.Array         # (Q,) i32 free-running consumer index
     tail: jax.Array         # (Q,) i32 free-running producer index (doorbell)
 
@@ -58,6 +59,7 @@ class SQRings:
         return SQRings(
             submit_time=jnp.full((num_sqs, depth), 3e38, jnp.float32),
             opcode=z, lba=z, nblocks=jnp.ones_like(z), buf_id=z, req_id=z,
+            tenant=z,
             head=jnp.zeros((num_sqs,), jnp.int32),
             tail=jnp.zeros((num_sqs,), jnp.int32),
         )
@@ -73,6 +75,7 @@ def submit(
     buf_id: jax.Array,
     req_id: jax.Array,
     valid: jax.Array,        # (M,) bool
+    tenant: jax.Array | None = None,  # (M,) i32 QoS class (None = 0)
 ) -> SQRings:
     """Append entries to their SQs (ring the doorbells).
 
@@ -84,6 +87,8 @@ def submit(
     from repro.core.segops import segment_rank
 
     q = rings.num_sqs
+    if tenant is None:
+        tenant = jnp.zeros_like(sq_id)
     sq_key = jnp.where(valid, sq_id, q)
     offset = segment_rank(sq_key)
     pos = (rings.tail[jnp.clip(sq_key, 0, q - 1)] + offset) % rings.depth
@@ -106,6 +111,7 @@ def submit(
         nblocks=scat(rings.nblocks, nblocks),
         buf_id=scat(rings.buf_id, buf_id),
         req_id=scat(rings.req_id, req_id),
+        tenant=scat(rings.tenant, tenant),
         tail=rings.tail + counts,
     )
 
@@ -119,6 +125,7 @@ def submit_grouped(
     buf_id: jax.Array,
     req_id: jax.Array,
     valid: jax.Array,        # (Q, F) bool
+    tenant: jax.Array | None = None,  # (Q, F) i32 QoS class (None = 0)
 ) -> SQRings:
     """Fast-path append: row q's valid entries go to SQ q in array order.
 
@@ -126,6 +133,8 @@ def submit_grouped(
     Rows must be pre-sorted by submit time.
     """
     q, f = submit_time.shape
+    if tenant is None:
+        tenant = jnp.zeros_like(opcode)
     offset = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
     pos = (rings.tail[:, None] + offset) % rings.depth
     pos = jnp.where(valid, pos, rings.depth)  # drop invalid
@@ -142,6 +151,7 @@ def submit_grouped(
         nblocks=scat(rings.nblocks, nblocks),
         buf_id=scat(rings.buf_id, buf_id),
         req_id=scat(rings.req_id, req_id),
+        tenant=scat(rings.tenant, tenant),
         tail=rings.tail + jnp.sum(valid, axis=1, dtype=jnp.int32),
     )
 
@@ -174,6 +184,7 @@ def _gather_entries(
         buf_id=take(rings.buf_id),
         req_id=take(rings.req_id),
         valid=valid.reshape(-1),
+        tenant=take(rings.tenant),
     )
     return batch, valid
 

@@ -39,10 +39,21 @@ class RequestBatch:
     buf_id: jax.Array    # (N,) i32 — destination/source I/O buffer row
     req_id: jax.Array    # (N,) i32 — globally unique request id
     valid: jax.Array     # (N,) bool
+    # Tenant (QoS) class per request. ``None`` (the default, kept by legacy
+    # constructors) means "everything is tenant 0" — the fabric's WFQ
+    # arbiter and the per-tenant metrics treat it as a single class.
+    tenant: "jax.Array | None" = None  # (N,) i32 tenant/QoS class
 
     @property
     def capacity(self) -> int:
         return self.arrival.shape[0]
+
+    @property
+    def tenants(self) -> jax.Array:
+        """Tenant ids with the ``None`` default lowered to all-zero."""
+        if self.tenant is None:
+            return jnp.zeros_like(self.sq_id)
+        return self.tenant
 
     @staticmethod
     def empty(n: int) -> "RequestBatch":
@@ -53,6 +64,7 @@ class RequestBatch:
             nblocks=jnp.ones((n,), jnp.int32),
             buf_id=z, req_id=z,
             valid=jnp.zeros((n,), bool),
+            tenant=z,
         )
 
 
@@ -267,6 +279,26 @@ class FabricConfig:
     ``mtu_timeout_us``  flush bound: a partial MTU batch ships once its
                         oldest frame has waited this long
     ``cqe_bytes``       completion-entry size on the wire
+
+    **Shared switch / initiator NIC.** The per-drive links of an M-drive
+    remote array converge on one switch (incast): frames additionally
+    serialize through a switch-port cursor whose per-link share is
+    ``switch_bytes_per_us / switch_fanin`` in each direction. Set
+    ``switch_fanin=M`` so the M vmapped lanes split the aggregate roof
+    fairly (the epoch-batched fair-share port model — exact for the
+    symmetric saturated regime the roofline figures measure). ``inf``
+    (the default) disables the stage entirely.
+
+    ``switch_bytes_per_us``  aggregate switch roof per direction
+    ``switch_fanin``         links sharing the switch (M for an array)
+
+    **Per-tenant QoS.** ``qos_weights`` holds one weighted-fair-queueing
+    weight per tenant class; requests carry a tenant id
+    (``RequestBatch.tenant``) and every shared fabric resource (link and
+    switch) serves backlogged tenants in weighted virtual-finish order,
+    so tenant k's saturated share tracks ``w_k / sum(w)``. Empty (the
+    default) means a single class — the arbiter is skipped and the hop
+    is bit-exact with the unweighted PR-4 path.
     """
 
     remote: bool = False
@@ -277,6 +309,9 @@ class FabricConfig:
     mtu_batch: int = 1
     mtu_timeout_us: float = 0.0
     cqe_bytes: int = 16
+    switch_bytes_per_us: float = float("inf")
+    switch_fanin: int = 1
+    qos_weights: tuple = ()
 
     def __post_init__(self) -> None:
         if self.mtu_batch < 1:
@@ -286,6 +321,20 @@ class FabricConfig:
                 "tx_bytes_per_us and rx_bytes_per_us must be > 0 "
                 "(use inf for an unconstrained link)"
             )
+        if self.switch_bytes_per_us <= 0.0:
+            raise ValueError(
+                "switch_bytes_per_us must be > 0 "
+                "(use inf for an unconstrained switch)"
+            )
+        if self.switch_fanin < 1:
+            raise ValueError(
+                f"switch_fanin={self.switch_fanin} must be >= 1"
+            )
+        if any(w <= 0.0 for w in self.qos_weights):
+            raise ValueError(
+                f"qos_weights={self.qos_weights} must all be > 0 — a "
+                "zero-weight tenant would never be scheduled"
+            )
         if self.cqe_bytes < 1:
             raise ValueError(f"cqe_bytes={self.cqe_bytes} must be >= 1")
         for name in ("rtt_us", "wire_txn_us", "mtu_timeout_us"):
@@ -293,17 +342,35 @@ class FabricConfig:
                 raise ValueError(f"{name} must be >= 0")
 
     @property
+    def num_tenants(self) -> int:
+        """Tenant classes the WFQ arbiter distinguishes (1 = off)."""
+        return max(1, len(self.qos_weights))
+
+    @property
+    def switched(self) -> bool:
+        """True iff the shared-switch stage prices anything at all."""
+        return self.remote and math.isfinite(self.switch_bytes_per_us)
+
+    @property
+    def switch_share_bytes_per_us(self) -> float:
+        """One link's fair share of the aggregate switch roof."""
+        return self.switch_bytes_per_us / self.switch_fanin
+
+    @property
     def neutral(self) -> bool:
         """True iff the hop cannot change any virtual time: a local
         drive, or a remote one behind a zero-cost wire (unconstrained
-        both ways, zero RTT/txn cost, and no MTU batching delay —
+        both ways, zero RTT/txn cost, no MTU batching delay —
         ``mtu_batch > 1`` still holds early frames for the batch flush
-        unless the timeout is zero)."""
+        unless the timeout is zero — and an unconstrained switch).
+        ``qos_weights`` alone never break neutrality: reordering
+        zero-cost frames cannot move any landing time."""
         return (not self.remote) or (
             self.rtt_us == 0.0
             and self.wire_txn_us == 0.0
             and math.isinf(self.tx_bytes_per_us)
             and math.isinf(self.rx_bytes_per_us)
+            and math.isinf(self.switch_bytes_per_us)
             and (self.mtu_batch == 1 or self.mtu_timeout_us == 0.0)
         )
 

@@ -3,6 +3,7 @@ from repro.workloads.base import Prefill, Workload, as_workload
 from repro.workloads.generators import (
     ClosedLoop,
     MixedReadWrite,
+    MultiTenant,
     PoissonOpenLoop,
     SteadyStateMixed,
     TraceReplay,
@@ -15,6 +16,7 @@ __all__ = [
     "as_workload",
     "ClosedLoop",
     "MixedReadWrite",
+    "MultiTenant",
     "PoissonOpenLoop",
     "SteadyStateMixed",
     "TraceReplay",

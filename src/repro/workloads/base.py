@@ -55,6 +55,7 @@ class Prefill(NamedTuple):
     nblocks: jax.Array  # i32
     req_id: jax.Array   # i32
     valid: jax.Array    # bool
+    tenant: "jax.Array | None" = None  # i32 QoS class (None = all 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,13 +88,33 @@ class Workload:
         h = self._key(req_id, salt)
         return (h % jnp.uint32(ssd.num_blocks)).astype(jnp.int32)
 
-    def opcode(self, req_id: jax.Array,
-               salt: jax.Array | int = 0) -> jax.Array:
+    def opcode(self, req_id: jax.Array, salt: jax.Array | int = 0,
+               tenant: jax.Array | None = None) -> jax.Array:
+        """Read/write decision. ``tenant`` (the request's QoS class, as
+        assigned by ``tenant_of_sq``) is threaded in by the engine so
+        multi-tenant generators can mix per class; the single-class
+        base ignores it."""
+        del tenant
         h = self._key(req_id, salt, stream=1)
         return (
             (h % jnp.uint32(1000)).astype(jnp.float32)
             >= self.read_frac * 1000
         ).astype(jnp.int32)
+
+    def tenant_of_sq(self, sq_id: jax.Array, cfg: EngineConfig,
+                     salt: jax.Array | int = 0) -> jax.Array:
+        """QoS/tenant class served by each SQ (single class by default).
+
+        Multi-tenant generators override this to partition the SQs
+        across classes; the assignment must be static per SQ so a
+        closed-loop slot never migrates between tenants mid-run, and
+        should put each class on a *contiguous* SQ block so tenants
+        align with whole service units (a unit's fetched batch enters
+        the timing lock together, so a unit mixing classes would chain
+        a latency tenant to its bulk neighbor's slowest wire frame).
+        """
+        del cfg, salt
+        return jnp.zeros_like(sq_id)
 
     # -- lifecycle hooks -----------------------------------------------------
     def prefill(self, cfg: EngineConfig, ssd: SSDConfig,
@@ -112,13 +133,20 @@ class Workload:
             jnp.arange(d, dtype=jnp.float32)[None, :] * 1e-3
             + jnp.arange(q, dtype=jnp.float32)[:, None] * 1e-5
         )
+        tenant = jnp.broadcast_to(
+            self.tenant_of_sq(
+                jnp.arange(q, dtype=jnp.int32), cfg, salt
+            )[:, None],
+            (q, d),
+        )
         return Prefill(
             submit=submit,
-            opcode=self.opcode(req_id, salt),
+            opcode=self.opcode(req_id, salt, tenant=tenant),
             lba=self.address(req_id, ssd, salt),
             nblocks=jnp.ones((q, d), jnp.int32),
             req_id=req_id,
             valid=jnp.ones((q, d), bool),
+            tenant=tenant,
         )
 
     def sharded(self, num_shards: int) -> "Workload":

@@ -20,6 +20,10 @@
                   generator asks the engine to start the flash array fully
                   written, so GC price is paid from the first write batch
                   (the steady-state regime fresh-drive runs overstate).
+``MultiTenant``   closed loop with the SQs partitioned across tenant (QoS)
+                  classes, each with its own read/write mix — the request
+                  stream the fabric's weighted-fair arbiter
+                  (``FabricConfig.qos_weights``) arbitrates between.
 ``TraceReplay``   fixed-trace replay: a (time, lba, opcode) list is dealt
                   round-robin across SQs at t=0 and never resubmits.
 """
@@ -92,6 +96,60 @@ class SteadyStateMixed(MixedReadWrite):
     """
 
     precondition_drive: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenant(ClosedLoop):
+    """Closed loop with the SQs partitioned across tenant (QoS) classes.
+
+    The SQ range splits into T *contiguous* blocks — SQ q serves tenant
+    ``q * T // num_sqs`` — so each class owns whole service units
+    (static, a slot never migrates mid-run; a unit mixing classes would
+    drag a latency tenant through the timing lock behind its bulk
+    neighbor's slowest wire frame). Each class draws its own read/write
+    mix from ``tenant_read_frac`` — e.g. ``(1.0, 0.0)`` is the fig26
+    pairing of a latency-sensitive read tenant with a bulk-write tenant
+    whose large TX payloads would starve the reads' SQEs on a shared
+    link without QoS. Pair with ``FabricConfig.qos_weights`` (same
+    length, same order) to give the fabric's weighted-fair arbiter the
+    classes to arbitrate; per-tenant achieved throughput lands in
+    ``Metrics.tenant_completed``/``tenant_share()``.
+    """
+
+    tenant_read_frac: tuple = (1.0, 0.0)
+
+    def __post_init__(self) -> None:
+        if len(self.tenant_read_frac) < 1:
+            raise ValueError("tenant_read_frac must name >= 1 tenant")
+        if any(not 0.0 <= rf <= 1.0 for rf in self.tenant_read_frac):
+            raise ValueError(
+                f"tenant_read_frac={self.tenant_read_frac} entries "
+                "must be in [0, 1]"
+            )
+
+    @property
+    def num_tenants(self) -> int:
+        return len(self.tenant_read_frac)
+
+    def tenant_of_sq(self, sq_id, cfg, salt=0):
+        del salt
+        t = self.num_tenants
+        if cfg.num_sqs < t:
+            raise ValueError(
+                f"num_sqs={cfg.num_sqs} cannot host {t} tenant classes"
+            )
+        return sq_id * jnp.int32(t) // jnp.int32(cfg.num_sqs)
+
+    def opcode(self, req_id, salt=0, tenant=None):
+        if tenant is None:
+            return super().opcode(req_id, salt)
+        rf = jnp.asarray(self.tenant_read_frac, jnp.float32)[
+            jnp.clip(tenant, 0, self.num_tenants - 1)
+        ]
+        h = self._key(req_id, salt, stream=1)
+        return (
+            (h % jnp.uint32(1000)).astype(jnp.float32) >= rf * 1000
+        ).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,6 +297,12 @@ class TraceReplay(Workload):
             nblocks=jnp.ones((q, length), jnp.int32),
             req_id=req_id,
             valid=valid,
+            tenant=jnp.broadcast_to(
+                self.tenant_of_sq(
+                    jnp.arange(q, dtype=jnp.int32), cfg, salt
+                )[:, None],
+                (q, length),
+            ),
         )
 
     def next_submit(self, new_req, done, valid, anchor, cfg, ssd,

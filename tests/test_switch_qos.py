@@ -1,0 +1,303 @@
+"""Shared-switch incast and per-tenant QoS tests (fabric layer, PR 5).
+
+Contracts under test:
+  * MTU stragglers pay their own wire-transaction setup (a frame that
+    misses its batch's doorbell cannot ride it for free);
+  * the shared switch serializes every lane at its fair share of the
+    aggregate roof, delivered throughput never exceeds it
+    (conservation), and an unconstrained switch is an exact no-op;
+  * weighted-fair QoS: shares sum to 1, a tenant's share is monotone
+    in its weight, the weighted arbiter un-starves a latency tenant's
+    reads from behind a bulk-write tenant, and weights on a zero-cost
+    wire are bit-exact neutral (engine and client, including
+    ``read_replicated`` and writes);
+  * replica routing balances on *local* arrays (device-side busy
+    signal) — including around a drive that is already busy from an
+    earlier call, which the wire-cursor-only signal was blind to.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.client import StorageClient
+from repro.core.fabric import fabric_hop, switch_hop
+from repro.core.types import (
+    EngineConfig,
+    FabricConfig,
+    SSDConfig,
+    WorkloadConfig,
+)
+from repro import workloads
+
+SSD = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64,
+                num_blocks=1 << 12)
+CFG = EngineConfig(num_sqs=8, sq_depth=256, fetch_width=32, num_units=4,
+                   emulate_data=False, num_bufs=512)
+FRAME = FabricConfig().cqe_bytes + SSD.block_bytes  # RX bytes per read
+
+
+def _flash_store(words=8):
+    return jnp.arange(SSD.num_blocks, dtype=jnp.float32)[:, None] * jnp.ones(
+        (1, words)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Satellite: post-flush MTU stragglers pay wire-transaction setup.
+# ---------------------------------------------------------------------------
+
+def test_mtu_straggler_pays_wire_txn():
+    """Three frames flush at the timeout; the fourth becomes ready long
+    after the doorbell rang, ships as its own transaction, and pays
+    ``wire_txn_us`` — it no longer rides the flushed batch for free."""
+    t = jnp.asarray([0.0, 0.0, 0.0, 100.0], jnp.float32)
+    ones = jnp.ones((4,), bool)
+    nbytes = jnp.full((4,), 64.0)
+    fab = FabricConfig(remote=True, mtu_batch=4, mtu_timeout_us=1.0,
+                       wire_txn_us=5.0)
+    _, out = fabric_hop(
+        jnp.float32(0), t, nbytes, ones, fab, float("inf")
+    )
+    # Batch head pays setup at the flush: frames 0-2 land at 1 + 5.
+    np.testing.assert_allclose(np.asarray(out)[:3], 6.0, rtol=1e-6)
+    # The straggler lands at its own ready time plus its own setup.
+    assert float(out[3]) == pytest.approx(105.0, rel=1e-6)
+    # With zero setup cost the straggler is unchanged (neutrality).
+    _, out0 = fabric_hop(
+        jnp.float32(0), t, nbytes, ones,
+        fab.replace(wire_txn_us=0.0), float("inf"),
+    )
+    assert float(out0[3]) == pytest.approx(100.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Shared switch: serialization at the fair share, conservation, no-op.
+# ---------------------------------------------------------------------------
+
+def test_switch_hop_serializes_at_fair_share():
+    """16 frames of 500 B through a 1000 B/us switch split 4 ways: each
+    lane's share is 250 B/us, so frames stream out 2 us apart."""
+    n = 16
+    t = jnp.zeros((n,), jnp.float32)
+    fab = FabricConfig(remote=True, switch_bytes_per_us=1000.0,
+                       switch_fanin=4)
+    busy, out = switch_hop(
+        jnp.float32(0), t, jnp.full((n,), 500.0), jnp.ones((n,), bool), fab
+    )
+    np.testing.assert_allclose(
+        np.sort(np.asarray(out)), (np.arange(n) + 1) * 2.0, rtol=1e-5
+    )
+    assert float(jnp.max(busy)) == pytest.approx(n * 2.0, rel=1e-5)
+
+
+def test_switch_config_validation_and_neutrality():
+    with pytest.raises(ValueError, match="switch_bytes_per_us"):
+        FabricConfig(switch_bytes_per_us=0.0)
+    with pytest.raises(ValueError, match="switch_fanin"):
+        FabricConfig(switch_fanin=0)
+    with pytest.raises(ValueError, match="qos_weights"):
+        FabricConfig(qos_weights=(1.0, 0.0))
+    assert not FabricConfig(remote=True, switch_bytes_per_us=1e3).neutral
+    assert not FabricConfig(switch_bytes_per_us=1e3).switched  # local
+    assert FabricConfig(remote=True, qos_weights=(3.0, 1.0)).neutral
+    assert FabricConfig(
+        remote=True, switch_bytes_per_us=4e3, switch_fanin=4
+    ).switch_share_bytes_per_us == pytest.approx(1e3)
+
+
+def test_engine_zero_cost_switch_is_bit_exact():
+    """A remote array behind an unconstrained switch (the default)
+    reproduces the local pipeline bit-exactly — the acceptance bar."""
+    wl = WorkloadConfig(io_depth=32)
+    local = engine.simulate(CFG, SSD, wl, rounds=16)
+    remote = engine.simulate(
+        CFG.replace(fabric=FabricConfig(remote=True)), SSD, wl, rounds=16
+    )
+    for got, want in [
+        (remote.metrics.lat_hist, local.metrics.lat_hist),
+        (remote.metrics.sum_e2e, local.metrics.sum_e2e),
+        (remote.metrics.tenant_completed, local.metrics.tenant_completed),
+    ]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(jnp.max(remote.device.fabric.switch_rx)) == 0.0
+
+
+def test_switch_conservation_never_exceeds_roof():
+    """Fast drives behind a narrow switch: per-lane delivered bytes stay
+    under the lane's fair share and the aggregate stays under the
+    switch roof (the fig25 regime)."""
+    ssd = SSDConfig(t_max_iops=1e7, l_min_us=30.0, n_instances=256,
+                    num_blocks=1 << 12)
+    fab = FabricConfig(remote=True, switch_bytes_per_us=2000.0,
+                       switch_fanin=2)
+    out = engine.simulate(
+        CFG.replace(fabric=fab), ssd, WorkloadConfig(io_depth=256),
+        rounds=16, num_devices=2,
+    )
+    span = np.asarray(
+        out.metrics.last_completion - out.metrics.first_submit
+    )
+    rate = np.asarray(out.metrics.completed) / span  # per-drive req/us
+    share = fab.switch_share_bytes_per_us
+    assert (rate * FRAME <= share * 1.1).all()
+    assert float(np.sum(rate)) * FRAME <= fab.switch_bytes_per_us * 1.1
+    # And the switch really is the binding stage here.
+    assert float(np.sum(rate)) * FRAME >= fab.switch_bytes_per_us * 0.5
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant QoS: neutrality, shares, starvation relief.
+# ---------------------------------------------------------------------------
+
+def test_qos_weights_on_free_wire_are_bit_exact():
+    """Weights reorder only frames that cost nothing on a zero-cost
+    wire, so a weighted remote run reproduces the local pipeline
+    bit-exactly — including the per-tenant metrics."""
+    wl = workloads.MultiTenant(io_depth=16, tenant_read_frac=(1.0, 0.3))
+    local = engine.simulate(CFG, SSD, wl, rounds=16)
+    weighted = engine.simulate(
+        CFG.replace(
+            fabric=FabricConfig(remote=True, qos_weights=(3.0, 1.0))
+        ),
+        SSD, wl, rounds=16,
+    )
+    for got, want in [
+        (weighted.metrics.lat_hist, local.metrics.lat_hist),
+        (weighted.metrics.tenant_completed, local.metrics.tenant_completed),
+        (weighted.metrics.tenant_sum_e2e, local.metrics.tenant_sum_e2e),
+    ]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qos_share_sums_to_one_and_is_monotone_in_weight():
+    """Two equal read tenants on an RX-bound link: equal weights split
+    the link evenly; growing tenant 0's weight monotonically grows its
+    achieved completion share."""
+    shares = []
+    for weights in [(1.0, 1.0), (3.0, 1.0), (7.0, 1.0)]:
+        fab = FabricConfig(remote=True, rx_bytes_per_us=1000.0,
+                           tx_bytes_per_us=8000.0, qos_weights=weights)
+        wl = workloads.MultiTenant(io_depth=32,
+                                   tenant_read_frac=(1.0, 1.0))
+        out = engine.simulate(CFG.replace(fabric=fab), SSD, wl, rounds=64)
+        share = np.asarray(out.metrics.tenant_share())
+        assert float(np.sum(share)) == pytest.approx(1.0, abs=1e-5)
+        shares.append(float(share[0]))
+    assert shares[0] == pytest.approx(0.5, abs=0.03)
+    assert shares[0] < shares[1] < shares[2]
+    assert shares[1] > 0.6   # weight 3/4 pulls well past an even split
+    assert shares[2] > 0.7
+
+
+def test_qos_unstarves_reads_behind_bulk_writes():
+    """TX-bound link, read tenant vs bulk-write tenant: under FIFO the
+    64 B read SQEs queue behind 576 B write frames (reads land near
+    write latency); a read-weighted arbiter restores the reads to near
+    their uncontended floor while the bulk tenant keeps making
+    progress."""
+    wl = workloads.MultiTenant(io_depth=32, tenant_read_frac=(1.0, 0.0))
+    lat = {}
+    for name, weights in [("fifo", ()), ("wfq", (4.0, 1.0))]:
+        fab = FabricConfig(remote=True, tx_bytes_per_us=400.0,
+                           rx_bytes_per_us=8000.0, qos_weights=weights)
+        out = engine.simulate(CFG.replace(fabric=fab), SSD, wl, rounds=48)
+        lat[name] = np.asarray(out.metrics.tenant_avg_e2e_us())
+    assert lat["wfq"][0] < 0.4 * lat["fifo"][0]
+    assert np.isfinite(lat["wfq"][1]) and lat["wfq"][1] > 0
+
+
+def test_multitenant_metrics_account_every_completion():
+    wl = workloads.MultiTenant(io_depth=16, tenant_read_frac=(1.0, 0.0))
+    out = engine.simulate(CFG, SSD, wl, rounds=12)
+    tc = np.asarray(out.metrics.tenant_completed)
+    assert tc.shape == (2,)
+    assert (tc > 0).all()
+    assert float(np.sum(tc)) == pytest.approx(
+        float(out.metrics.completed), rel=1e-6
+    )
+    # Per-tenant opcode mix: class 0 is all reads, class 1 all writes.
+    ids = jnp.arange(64, dtype=jnp.int32)
+    assert not np.asarray(wl.opcode(ids, 0, tenant=jnp.zeros_like(ids))).any()
+    assert np.asarray(wl.opcode(ids, 0, tenant=jnp.ones_like(ids))).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: replica routing on local arrays (device-side busy signal).
+# ---------------------------------------------------------------------------
+
+def test_replica_read_balances_on_local_array():
+    """All blocks homed on drive 0 of a *local* 4-drive array: replicas
+    spread the batch over the idle drives and cut the makespan (the
+    wire cursors are flat 0 here — the device-side signal must carry)."""
+    m, n = 4, 256
+    client = StorageClient(SSD, EngineConfig(num_units=4, fetch_width=64))
+    flash = _flash_store()
+    skew = ((jnp.arange(n, dtype=jnp.int32) * 13) % SSD.num_blocks) \
+        // m * m
+    state = client.init_array_state(m)
+    _, _, d1 = client.read_replicated(
+        state, flash, skew, jnp.float32(0), replicas=1
+    )
+    _, _, dm = client.read_replicated(
+        state, flash, skew, jnp.float32(0), replicas=m
+    )
+    assert float(jnp.max(dm)) < 0.6 * float(jnp.max(d1))
+
+
+def test_replica_read_avoids_busy_local_drive():
+    """Regression for the wire-cursor-only load signal: after a heavy
+    batch lands on drive 0, replicated reads of blocks homed there must
+    route to the idle replica drive instead of splitting evenly — the
+    old rx_busy seed stayed 0 on local arrays and was blind to it."""
+    m, nburst, nrep = 4, 512, 64
+    client = StorageClient(SSD, EngineConfig(num_units=4, fetch_width=64))
+    flash = _flash_store()
+    state = client.init_array_state(m)
+
+    # Load drive 0 only (other drives get invalid slots).
+    lba = jnp.broadcast_to(
+        (jnp.arange(nburst, dtype=jnp.int32) * 7) % SSD.num_blocks,
+        (m, nburst),
+    )
+    valid = jnp.zeros((m, nburst), bool).at[0].set(True)
+    state, _, d_burst = client.read_array(
+        state, flash, lba, jnp.float32(0), valid, with_data=False
+    )
+    burst_makespan = float(jnp.max(d_burst))
+
+    # Blocks homed on drive 0, replicas on {0, 1}: the fix routes them
+    # to idle drive 1, so they finish long before the backlog drains.
+    homed0 = (jnp.arange(nrep, dtype=jnp.int32) * m) % SSD.num_blocks
+    _, _, d_rep = client.read_replicated(
+        state, flash, homed0, jnp.float32(0), replicas=2
+    )
+    assert float(jnp.max(d_rep)) < 0.5 * burst_makespan
+
+
+def test_client_parity_zero_cost_wire_replicated_and_writes():
+    """Local array == remote array behind a free wire, bit-exactly, on
+    the replica-routing path and the write path (the routing signal is
+    the same device-side load in both)."""
+    m, n = 4, 128
+    flash = _flash_store()
+    cfg = EngineConfig(num_units=4, fetch_width=64)
+    lba = (jnp.arange(n, dtype=jnp.int32) * 13) % SSD.num_blocks
+    local = StorageClient(SSD, cfg)
+    remote = StorageClient(SSD, cfg.replace(fabric=FabricConfig(remote=True)))
+    _, _, dl = local.read_replicated(
+        local.init_array_state(m), flash, lba, jnp.float32(0), replicas=2
+    )
+    _, _, dr = remote.read_replicated(
+        remote.init_array_state(m), flash, lba, jnp.float32(0), replicas=2
+    )
+    np.testing.assert_array_equal(np.asarray(dl), np.asarray(dr))
+
+    data = jnp.ones((n, flash.shape[1]), flash.dtype)
+    _, _, wl_done = local.write(
+        local.init_state(), flash, data, lba, jnp.float32(0)
+    )
+    _, _, wr_done = remote.write(
+        remote.init_state(), flash, data, lba, jnp.float32(0)
+    )
+    np.testing.assert_array_equal(np.asarray(wl_done), np.asarray(wr_done))
