@@ -49,6 +49,23 @@ def swarmio_cfg(**kw) -> EngineConfig:
     return EngineConfig(**base)
 
 
+def jit_warmup():
+    """One warmup invocation before any timed region.
+
+    Pays the one-time costs a first jit call mixes into its wall-clock —
+    backend initialization, compiler warm paths, dispatch machinery — so
+    subsequent per-figure timings measure compile+run of *their* programs
+    only, not cold-start noise. (Per-config compiles still happen on each
+    figure's first call; the wall-clock harnesses time around those with
+    their own explicit warmup round.)
+    """
+    cfg = swarmio_cfg()
+    wl = WorkloadConfig(io_depth=8)
+    st = engine.init_state(cfg, FUTURE_40M, wl)
+    out = engine.make_runner(cfg, FUTURE_40M, wl, PlatformModel(), 1)(st)
+    jax.block_until_ready(out.metrics.completed)
+
+
 def run_engine(cfg, ssd, wl, plat=None, rounds=48, num_devices=1):
     """Run the engine to completion. ``wl`` may be a legacy WorkloadConfig
     or any generator from repro.workloads; ``num_devices > 1`` emulates a

@@ -3,6 +3,8 @@ GPU-initiated workload sees.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import time
+
 import jax
 
 from repro.core import engine
@@ -169,3 +171,31 @@ for label, weights in [("fifo", ()), ("wfq 4:1", (4.0, 1.0))]:
     shares = [round(s, 2) for s in out.metrics.tenant_share().tolist()]
     print(f"2-tenant {label:7s}: reads {float(lat[0]):5.0f} us, bulk "
           f"writes {float(lat[1]):5.0f} us (shares {shares})")
+
+# 12. Wall-clock speed is its own axis: the numbers above are *virtual*
+#     throughput (emulated time), while how fast the engine retires
+#     emulated requests per *real* second is what
+#     `benchmarks/emulator_speed.py` measures (full matrix ->
+#     BENCH_emulator_speed.json). Two EngineConfig flags gate the fast
+#     path: use_sort_plan (default on) computes each epoch's segment
+#     order/heads/rank once and reuses it across the unit, CQ, and
+#     fabric sorts; use_pallas_segscan (default off) routes the
+#     queueing recurrence through the Pallas segmented-scan kernel.
+#     Both are bit-exact in virtual time (tests/test_emulator_speed.py).
+#     donate=True lets XLA reuse the state buffers in place — donated
+#     inputs must not alias, so deep-copy fresh states with
+#     engine.unalias before the first call.
+from repro.core.types import PlatformModel
+
+fast_cfg = cfg.replace(use_sort_plan=True)  # the default, shown explicit
+runner = engine.make_runner(fast_cfg, ssd, wl, PlatformModel(), rounds=8,
+                            donate=True)
+st = engine.unalias(engine.init_state(fast_cfg, ssd, wl))
+st = jax.block_until_ready(runner(st))      # untimed: compile + warmup
+t0 = time.perf_counter()
+st = jax.block_until_ready(runner(st))      # steady-state round, timed
+dt = time.perf_counter() - t0
+done = float(st.metrics.completed)
+print(f"wall-clock    : {done / dt:,.0f} emulated req/wall-sec "
+      f"({done:.0f} reqs in {dt*1e3:.0f} ms; virtual "
+      f"{float(st.metrics.iops())/1e6:.1f} MIOPS)")

@@ -34,6 +34,18 @@ def main() -> int:
     env = dict(os.environ)
     env.update({k: str(v) for k, v in (wf.get("env") or {}).items()})
 
+    # One warmup invocation before any step is timed: pays interpreter
+    # start + jax import + first-jit dispatch once, so the per-step
+    # PASS/FAIL wall-clock below reflects the step's own work rather
+    # than mixing in the process-wide jit cold start.
+    print("WARM  jax import + first jit (untimed)")
+    subprocess.run(
+        [sys.executable, "-c",
+         "import jax, jax.numpy as jnp; "
+         "jax.block_until_ready(jax.jit(lambda x: x + 1)(jnp.ones((8,))))"],
+        env=env, cwd=REPO, check=False,
+    )
+
     failed, skipped, ran = [], [], []
     for job_name, job in wf["jobs"].items():
         if only and job_name not in only:

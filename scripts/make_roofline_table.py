@@ -1,7 +1,10 @@
-"""Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/."""
+"""Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/,
+plus the emulator-speed table from BENCH_emulator_speed.json (virtual
+and wall-clock throughput side by side)."""
 
 import glob
 import json
+import os
 
 rows = []
 for f in sorted(glob.glob("experiments/dryrun/*__single.json")):
@@ -44,3 +47,31 @@ for f in sorted(glob.glob("experiments/dryrun/*__multi.json")):
     err += r["status"] == "error"
     skip += r["status"] == "skipped"
 print(f"  ok={ok} err={err} skipped={skip}")
+
+# --- emulator speed: virtual vs wall-clock throughput side by side -------
+SPEED_JSON = "BENCH_emulator_speed.json"
+if os.path.exists(SPEED_JSON):
+    data = json.load(open(SPEED_JSON))
+    print()
+    print(
+        f"emulator speed ({SPEED_JSON}, backend="
+        f"{data.get('host', {}).get('backend', '?')}"
+        f"{', quick' if data.get('quick') else ''}):"
+    )
+    print(
+        "| config | variant | virtual MIOPS | emulated req/wall-sec | "
+        "speedup vs seed |"
+    )
+    print("|---|---|---|---|---|")
+    for cfg in data.get("configs", []):
+        seed = cfg["variants"].get("seed", {}).get("req_per_wall_s", 0.0)
+        for vname, v in cfg["variants"].items():
+            speedup = (
+                f"{v['req_per_wall_s'] / seed:.2f}x" if seed else "—"
+            )
+            print(
+                f"| {cfg['name']} | {vname} | {v['virtual_miops']:.1f} "
+                f"| {v['req_per_wall_s']:,.0f} | {speedup} |"
+            )
+else:
+    print(f"\n(no {SPEED_JSON} — run `python -m benchmarks.emulator_speed`)")

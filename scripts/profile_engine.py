@@ -1,0 +1,155 @@
+"""Profile one steady-state engine round: trace + per-stage cost table.
+
+Two views of where the emulator's wall-clock goes:
+
+  * a ``jax.profiler`` trace of one post-warmup steady-state runner
+    invocation, written to ``--outdir`` (open with TensorBoard or
+    Perfetto via ``xprof``);
+  * a per-stage cost table: each pipeline stage (frontend fetch, timing
+    model, data path, flash backend, CQ post/reap) jitted in isolation
+    over a representative fetched batch and timed post-warmup, alongside
+    the full ``engine_round`` — so stage costs and their sum can be
+    compared against the fused round.
+
+    PYTHONPATH=src python scripts/profile_engine.py \
+        [--config local_1drive|array_4drive|remote_qos] \
+        [--rounds N] [--reps N] [--outdir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax  # noqa: E402
+
+from benchmarks import common as C  # noqa: E402
+from benchmarks.emulator_speed import _configs  # noqa: E402
+from repro.core import engine, frontend, qp, timing  # noqa: E402
+from repro.core import datapath, flash  # noqa: E402
+from repro.core.device import DevicePipeline  # noqa: E402
+from repro.core.types import PlatformModel  # noqa: E402
+
+
+def _timeit(fn, *args, reps: int) -> float:
+    """Mean post-warmup seconds per call of a jitted closure."""
+    jax.block_until_ready(fn(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def stage_table(spec, reps: int):
+    """Time each pipeline stage in isolation over one fetched batch."""
+    cfg, ssd, wl = spec["cfg"], spec["ssd"], spec["wl"]
+    plat = PlatformModel()
+    pipe = DevicePipeline(cfg, ssd, plat)
+    st = engine.init_state(cfg, ssd, wl)
+    unit = frontend.fetch_row_units(cfg)
+
+    fetch_fn = jax.jit(lambda s: frontend.fetch(
+        s.rings, s.clock, s.device.disp_time, cfg, plat
+    ))
+    _, disp, batch, fetch_done = jax.block_until_ready(fetch_fn(st))
+    dev = dataclasses.replace(st.device, disp_time=disp)
+    tbatch = dataclasses.replace(batch, arrival=fetch_done)
+
+    rows = [("frontend.fetch", _timeit(fetch_fn, st, reps=reps))]
+    rows.append(("timing.update", _timeit(
+        jax.jit(lambda ts, b: timing.update(ts, b, ssd, cfg.mode)),
+        dev.tstate, tbatch, reps=reps,
+    )))
+    if cfg.batched_datapath:
+        rows.append(("datapath.dsa_worker_times", _timeit(
+            jax.jit(lambda d, fd, b: datapath.dsa_worker_times(
+                d, fd, b, cfg, plat, ssd, unit=unit
+            )),
+            dev.dsa_time, fetch_done, batch, reps=reps,
+        )))
+    else:
+        rows.append(("datapath.baseline_worker_times", _timeit(
+            jax.jit(lambda w, m, fd, b: datapath.baseline_worker_times(
+                w, m, fd, b, cfg, plat, ssd, unit=unit
+            )),
+            dev.work_time, dev.map_time, fetch_done, batch, reps=reps,
+        )))
+    if ssd.flash_backend:
+        rows.append(("flash.flash_stage", _timeit(
+            jax.jit(lambda f, b, a: flash.flash_stage(
+                f, b, a, a, ssd, use_pallas=cfg.use_pallas_segscan
+            )),
+            dev.flash, batch, fetch_done, reps=reps,
+        )))
+    rows.append(("qp.post_and_reap", _timeit(
+        jax.jit(lambda c, b, d: qp.post_and_reap(
+            c, b.sq_id, d, b.req_id, b.valid, cfg.qp,
+            fused_sort=cfg.use_sort_plan,
+            use_pallas=cfg.use_pallas_segscan,
+        )),
+        st.cq, batch, fetch_done, reps=reps,
+    )))
+    rows.append(("pipeline.process (stages 2-5)", _timeit(
+        jax.jit(lambda d, b, fd, c: pipe.process(d, b, fd, unit, c)),
+        dev, batch, fetch_done, st.cq, reps=reps,
+    )))
+    rows.append(("engine_round (full)", _timeit(
+        jax.jit(lambda s: engine.engine_round(s, cfg, ssd, wl, plat)),
+        st, reps=reps,
+    )))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--config", default="local_1drive",
+                    choices=[s["name"] for s in _configs(quick=True)])
+    ap.add_argument("--rounds", type=int, default=24,
+                    help="engine rounds per traced runner invocation")
+    ap.add_argument("--reps", type=int, default=20,
+                    help="timed repetitions per stage closure")
+    ap.add_argument("--outdir", default="experiments/profile",
+                    help="jax.profiler trace output directory")
+    args = ap.parse_args()
+
+    spec = next(s for s in _configs(quick=False)
+                if s["name"] == args.config)
+    cfg, ssd, wl = spec["cfg"], spec["ssd"], spec["wl"]
+    plat = PlatformModel()
+    C.jit_warmup()
+
+    # -- trace one post-warmup steady-state runner invocation --------------
+    m = spec["num_devices"]
+    if m == 1:
+        st = engine.init_state(cfg, ssd, wl)
+        runner = engine.make_runner(cfg, ssd, wl, plat, args.rounds)
+    else:
+        st = engine.init_array_state(cfg, ssd, wl, m)
+        runner = engine.make_array_runner(cfg, ssd, wl, plat, args.rounds)
+    st = jax.block_until_ready(runner(st))  # warmup/compile round
+    Path(args.outdir).mkdir(parents=True, exist_ok=True)
+    try:
+        with jax.profiler.trace(args.outdir):
+            st = jax.block_until_ready(runner(st))
+        print(f"trace: 1 x {args.rounds}-round invocation -> {args.outdir}")
+    except Exception as e:  # noqa: BLE001 — profiling is best-effort
+        print(f"trace: SKIPPED ({type(e).__name__}: {e})")
+
+    # -- per-stage cost table ----------------------------------------------
+    print(f"\nper-stage cost, config={args.config} "
+          f"(mean of {args.reps} post-warmup reps, one epoch batch):")
+    rows = stage_table(spec, args.reps)
+    width = max(len(n) for n, _ in rows)
+    total = next(dt for n, dt in rows if n.startswith("engine_round"))
+    for name, dt in rows:
+        print(f"  {name:<{width}}  {dt * 1e6:>10.1f} us/call "
+              f"({dt / total * 100:5.1f}% of a round)")
+
+
+if __name__ == "__main__":
+    main()

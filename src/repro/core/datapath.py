@@ -77,6 +77,7 @@ def baseline_worker_times(
     plat: PlatformModel,
     ssd: SSDConfig,
     unit: jax.Array | None = None,   # (N,) non-decreasing service-unit ids
+    unit_rank: jax.Array | None = None,  # (N,) within-unit rank (epoch plan)
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """NVMeVirt backend: per-request map/unmap + CPU copy, W lanes per unit.
 
@@ -85,14 +86,21 @@ def baseline_worker_times(
     serialized across every worker, capping aggregate throughput at
     1/map_us ≈ 0.34 MIOPS). We model it as a single global queueing server
     feeding per-lane copy servers. Returns (work_time', map_time', ready).
+
+    ``unit_rank`` (``DevicePipeline.process``'s epoch sort plan) supplies
+    the within-unit ranks precomputed without a sort; omitted, they are
+    recovered from ``unit`` via ``segment_rank`` (a full stable sort).
     """
     u, w = work_time.shape
     n = fetch_done.shape[0]
+    pallas = cfg.use_pallas_segscan
     txn, bw = _p2p(cfg, plat)
     idx = jnp.arange(n, dtype=jnp.int32)
     if unit is None:
         unit = idx // (n // u)
         rank_in_unit = idx % (n // u)
+    elif unit_rank is not None:
+        rank_in_unit = unit_rank
     else:
         rank_in_unit = segment_rank(unit)
 
@@ -100,7 +108,9 @@ def baseline_worker_times(
     map_cost = jnp.where(batch.valid, jnp.float32(plat.per_req_map_us), 0.0)
     heads0 = jnp.zeros((n,), bool).at[0].set(True)
     seed0 = jnp.broadcast_to(map_time, (n,))
-    mapped = queueing_scan(fetch_done, map_cost, heads0, seed0)
+    mapped = queueing_scan(
+        fetch_done, map_cost, heads0, seed0, use_pallas=pallas
+    )
     new_map = jnp.maximum(jnp.max(mapped), map_time)
 
     # --- per-lane p2p copy after mapping.
@@ -112,7 +122,9 @@ def baseline_worker_times(
         [jnp.ones((1,), bool), lane[order][1:] != lane[order][:-1]]
     )
     seed = work_time.reshape(-1)[lane[order]]
-    busy = queueing_scan(mapped[order], cost[order], heads, seed)
+    busy = queueing_scan(
+        mapped[order], cost[order], heads, seed, use_pallas=pallas
+    )
     ready = jnp.zeros_like(busy).at[order].set(busy)
 
     new_work = jax.ops.segment_max(

@@ -62,7 +62,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import datapath, fabric as fabric_mod, frontend, qp, timing
+from repro.core import datapath, fabric as fabric_mod, frontend, qp, segops
+from repro.core import timing
 from repro.core.fabric import FabricState
 from repro.core.flash import FlashState, flash_stage
 from repro.core.qp import CQRings
@@ -219,6 +220,19 @@ class DevicePipeline:
         valid = batch.valid
         tenant = batch.tenants if fab.num_tenants > 1 else None
 
+        # -- epoch sort plan (wall-clock optimization, bit-exact). The
+        # fetched batch is SQ-major, so the service-unit and CQ keys are
+        # non-decreasing: their segment layouts need no sort at all, and
+        # the time-major fabric/CQ sorts fuse into one lexicographic
+        # pass. Virtual time is identical either way (parity-tested).
+        use_plan = cfg.use_sort_plan
+        pallas = cfg.use_pallas_segscan
+        unit_rank = segops.presorted_plan(unit).rank if use_plan else None
+        cq_rank = (
+            segops.masked_presorted_rank(batch.sq_id, valid)
+            if use_plan else None
+        )
+
         # -- stage 1.5: fabric TX hop (remote drives only). Fetched SQEs
         # (plus write payloads) cross the wire before the target-side
         # pipeline sees them — through the shared switch port first
@@ -230,11 +244,13 @@ class DevicePipeline:
             tx_bytes = fabric_mod.tx_wire_bytes(batch, plat.sqe_bytes, ssd)
             if fab.switched:
                 sw_tx, fetch_done = fabric_mod.switch_hop(
-                    sw_tx, fetch_done, tx_bytes, valid, fab, tenant
+                    sw_tx, fetch_done, tx_bytes, valid, fab, tenant,
+                    fused_sort=use_plan, use_pallas=pallas,
                 )
             fab_tx, fetch_done = fabric_mod.fabric_hop(
                 fab_tx, fetch_done, tx_bytes,
                 valid, fab, fab.tx_bytes_per_us, tenant,
+                fused_sort=use_plan, use_pallas=pallas,
             )
 
         # -- stage 2a: global timing-model lock.
@@ -275,14 +291,14 @@ class DevicePipeline:
         else:
             work_time, map_time, ready = datapath.baseline_worker_times(
                 state.work_time, state.map_time, arrival, batch, cfg, plat,
-                ssd, unit=unit,
+                ssd, unit=unit, unit_rank=unit_rank,
             )
             dsa_time = state.dsa_time
 
         # -- stage 4: flash-level backend (writes, GC, mapping misses).
         if ssd.flash_backend:
             fstate, flash_done = flash_stage(
-                state.flash, batch, arrival, target, ssd
+                state.flash, batch, arrival, target, ssd, use_pallas=pallas
             )
         else:
             fstate, flash_done = state.flash, jnp.where(valid, arrival, 0.0)
@@ -300,10 +316,12 @@ class DevicePipeline:
             fab_rx, wire_done = fabric_mod.fabric_hop(
                 fab_rx, done, rx_bytes,
                 valid, fab, fab.rx_bytes_per_us, tenant,
+                fused_sort=use_plan, use_pallas=pallas,
             )
             if fab.switched:
                 sw_rx, wire_done = fabric_mod.switch_hop(
-                    sw_rx, wire_done, rx_bytes, valid, fab, tenant
+                    sw_rx, wire_done, rx_bytes, valid, fab, tenant,
+                    fused_sort=use_plan, use_pallas=pallas,
                 )
             wire_done = jnp.where(valid, wire_done, 0.0)
         else:
@@ -324,7 +342,8 @@ class DevicePipeline:
             reaped = wire_done
         else:
             cq, reaped = qp.post_and_reap(
-                cq, batch.sq_id, wire_done, batch.req_id, valid, cfg.qp
+                cq, batch.sq_id, wire_done, batch.req_id, valid, cfg.qp,
+                posted_rank=cq_rank, fused_sort=use_plan, use_pallas=pallas,
             )
         return new_state, cq, PipelineResult(
             arrival=arrival, target=target, ready=ready,

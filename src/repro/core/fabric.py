@@ -63,6 +63,7 @@ import jax.numpy as jnp
 
 from repro.core.segops import (
     NEG,
+    lex_sort_by_segment,
     queueing_scan,
     segmented_prefix_max,
     sort_by_segment,
@@ -127,6 +128,7 @@ def _frame_layout(
     valid: jax.Array,
     tenant: "jax.Array | None",
     fab: FabricConfig,
+    fused_sort: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Canonical epoch layout shared by the link and switch hops.
 
@@ -136,7 +138,9 @@ def _frame_layout(
     exactly the validity layout of the unweighted path. Returns
     ``(order, heads, rank, key_clip)``: the permutation into the
     layout, segment heads and within-segment ranks there, and each
-    row's clipped tenant id for cursor/weight gathers.
+    row's clipped tenant id for cursor/weight gathers. ``fused_sort``
+    swaps the two-sort composition for the bit-identical one-pass
+    lexicographic sort (``segops.lex_sort_by_segment``).
     """
     t = fab.num_tenants
     if tenant is None or t == 1:
@@ -144,9 +148,12 @@ def _frame_layout(
     else:
         cls = jnp.clip(tenant, 0, t - 1)
     key = jnp.where(valid, cls, t)
-    ord1 = jnp.argsort(t_ready, stable=True)
-    ord2, heads, rank = sort_by_segment(key[ord1])
-    order = ord1[ord2]
+    if fused_sort:
+        order, heads, rank = lex_sort_by_segment(key, t_ready)
+    else:
+        ord1 = jnp.argsort(t_ready, stable=True)
+        ord2, heads, rank = sort_by_segment(key[ord1])
+        order = ord1[ord2]
     return order, heads, rank, jnp.clip(key[order], 0, t - 1)
 
 
@@ -158,6 +165,7 @@ def _gps_serve(
     heads: jax.Array,  # (N,) bool tenant-segment heads
     key_clip: jax.Array,  # (N,) i32 clipped tenant id per row
     fab: FabricConfig,
+    use_pallas: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Serve one epoch on per-tenant cursors at weighted shares.
 
@@ -181,7 +189,9 @@ def _gps_serve(
     act_w = jnp.sum(w * active)
     act_w = jnp.where(act_w > 0.0, act_w, 1.0)
     eff = cost * (act_w / w[key_clip])
-    sent = queueing_scan(ready, eff, heads, busy[key_clip])
+    sent = queueing_scan(
+        ready, eff, heads, busy[key_clip], use_pallas=use_pallas
+    )
     busy = jnp.maximum(
         busy,
         jax.ops.segment_max(
@@ -201,6 +211,8 @@ def fabric_hop(
     fab: FabricConfig,
     bytes_per_us: float,
     tenant: "jax.Array | None" = None,  # (N,) i32 QoS class per frame
+    fused_sort: bool = False,
+    use_pallas: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Price one epoch's frames over one link direction.
 
@@ -212,7 +224,9 @@ def fabric_hop(
     not hold its first frame for the whole transfer.
     """
     busy = jnp.atleast_1d(jnp.asarray(busy, jnp.float32))
-    order, heads, rank, key_clip = _frame_layout(t_ready, valid, tenant, fab)
+    order, heads, rank, key_clip = _frame_layout(
+        t_ready, valid, tenant, fab, fused_sort=fused_sort
+    )
     s_t = t_ready[order]
     s_valid = valid[order]
     s_bytes = nbytes[order]
@@ -242,7 +256,10 @@ def fabric_hop(
     cost = cost + jnp.where(
         (gheads | (s_t > bell)) & s_valid, jnp.float32(fab.wire_txn_us), 0.0
     )
-    busy, sent = _gps_serve(busy, ready, cost, s_valid, heads, key_clip, fab)
+    busy, sent = _gps_serve(
+        busy, ready, cost, s_valid, heads, key_clip, fab,
+        use_pallas=use_pallas,
+    )
     landed = sent + jnp.float32(0.5 * fab.rtt_us)
     t_out = jnp.zeros_like(t_ready).at[order].set(landed)
     return busy, jnp.where(valid, t_out, t_ready)
@@ -255,6 +272,8 @@ def switch_hop(
     valid: jax.Array,  # (N,) bool
     fab: FabricConfig,
     tenant: "jax.Array | None" = None,  # (N,) i32 QoS class per frame
+    fused_sort: bool = False,
+    use_pallas: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Price one epoch's frames through the shared switch port.
 
@@ -269,11 +288,16 @@ def switch_hop(
     """
     busy = jnp.atleast_1d(jnp.asarray(busy, jnp.float32))
     share = fab.switch_share_bytes_per_us
-    order, heads, _, key_clip = _frame_layout(t_ready, valid, tenant, fab)
+    order, heads, _, key_clip = _frame_layout(
+        t_ready, valid, tenant, fab, fused_sort=fused_sort
+    )
     s_t = t_ready[order]
     s_valid = valid[order]
 
     cost = jnp.where(s_valid, nbytes[order] / jnp.float32(share), 0.0)
-    busy, sent = _gps_serve(busy, s_t, cost, s_valid, heads, key_clip, fab)
+    busy, sent = _gps_serve(
+        busy, s_t, cost, s_valid, heads, key_clip, fab,
+        use_pallas=use_pallas,
+    )
     t_out = jnp.zeros_like(t_ready).at[order].set(sent)
     return busy, jnp.where(valid, t_out, t_ready)

@@ -115,6 +115,7 @@ def flash_stage(
     arrival: jax.Array,   # (N,) f32 post-lock dispatch times
     target: jax.Array,    # (N,) f32 stage-2 timing-model completions
     ssd: SSDConfig,
+    use_pallas: bool = False,
 ) -> Tuple[FlashState, jax.Array]:
     """Price one epoch's flash-level events. Returns (state', flash_done).
 
@@ -156,7 +157,8 @@ def flash_stage(
     order, heads, _ = sort_by_segment(key)
     safe = jnp.clip(key[order], 0, k - 1)
     busy_sorted = queueing_scan(
-        arrival[order], cost[order], heads, fstate.chip_busy[safe]
+        arrival[order], cost[order], heads, fstate.chip_busy[safe],
+        use_pallas=use_pallas,
     )
     busy = jnp.zeros_like(busy_sorted).at[order].set(busy_sorted)
     chip_busy = jnp.maximum(

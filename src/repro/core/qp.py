@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.segops import (
     NEG,
+    lex_sort_by_segment,
     queueing_scan,
     segment_rank,
     segmented_prefix_max,
@@ -120,6 +121,9 @@ def post_and_reap(
     req_id: jax.Array,  # (N,) i32
     valid: jax.Array,  # (N,) bool
     qp: QPConfig,
+    posted_rank: jax.Array | None = None,  # (N,) epoch-plan CQ ranks
+    fused_sort: bool = False,
+    use_pallas: bool = False,
 ) -> Tuple[CQRings, jax.Array]:
     """Post one epoch's completions and reap them. Returns (cq', reaped).
 
@@ -127,6 +131,12 @@ def post_and_reap(
     completion: device completion -> coalescing group doorbell ->
     doorbell service on the per-CQ poster -> consumer poll + CQE read.
     Invalid rows return 0 and touch nothing.
+
+    ``posted_rank`` lets ``DevicePipeline.process`` hand in the neutral
+    path's per-CQ ranks from its epoch sort plan (fetched batches are
+    SQ-major, so the ranks come sort-free); ``fused_sort`` replaces the
+    non-neutral path's two-sort layout with the fused lexicographic
+    sort. Both are bit-exact layout changes, not model changes.
     """
     q = cq.num_cqs
     key = jnp.where(valid, cq_id, q)
@@ -135,7 +145,7 @@ def post_and_reap(
         # Transparent completion path: entries are recorded for ring
         # observability, but nothing is ever delayed (bit-exact parity
         # with the pre-QP pipeline by construction).
-        rank = segment_rank(key)
+        rank = posted_rank if posted_rank is not None else segment_rank(key)
         cq = _scatter_entries(cq, key, rank, done, done, req_id, valid)
         return cq, jnp.where(valid, done, 0.0)
 
@@ -144,9 +154,12 @@ def post_and_reap(
     # CQEs post in completion-time order within each CQ: sort rows by
     # done time, then stable segment sort by CQ (composition keeps the
     # time order inside each segment).
-    ord1 = jnp.argsort(done, stable=True)
-    ord2, heads, rank = sort_by_segment(key[ord1])
-    order = ord1[ord2]
+    if fused_sort:
+        order, heads, rank = lex_sort_by_segment(key, done)
+    else:
+        ord1 = jnp.argsort(done, stable=True)
+        ord2, heads, rank = sort_by_segment(key[ord1])
+        order = ord1[ord2]
     s_done = done[order]
     s_valid = valid[order]
     s_key = key[order]
@@ -172,7 +185,9 @@ def post_and_reap(
     # Doorbell serialization: one cq_doorbell_us of poster time per
     # group, charged at the group head, serialized per CQ.
     cost = jnp.where(gheads & s_valid, jnp.float32(qp.cq_doorbell_us), 0.0)
-    posted = queueing_scan(ready, cost, heads, cq.bell_time[safe])
+    posted = queueing_scan(
+        ready, cost, heads, cq.bell_time[safe], use_pallas=use_pallas
+    )
     bell_time = jnp.maximum(
         cq.bell_time,
         jax.ops.segment_max(

@@ -4,9 +4,26 @@ These are the vectorized building blocks that make "aggregated" processing
 exact: a segmented inclusive prefix-max (associative, runs in O(log N) depth
 via ``lax.associative_scan``) and within-segment rank computation via a
 stable sort.
+
+Wall-clock hot-path helpers live here too:
+
+  * ``SortPlan`` — a reusable (order, heads, rank) triple so stages that
+    segment the same epoch batch on the same key sort once and share the
+    layout (``presorted_plan`` skips the sort entirely for keys the
+    caller knows are already non-decreasing, e.g. the SQ-major service
+    unit ids of a fetched batch);
+  * ``lex_sort_by_segment`` — the fused one-pass replacement for the
+    "stable sort by time, then stable segment sort by key" two-sort
+    idiom (qp.py's CQ layout, fabric.py's frame layout): a single
+    lexicographic ``lax.sort`` producing the bit-identical permutation;
+  * ``queueing_scan(..., use_pallas=True)`` — routes the (max,+) scan
+    core through the ``kernels/seg_scan`` Pallas kernel via the exact
+    prefix-max reduction ``busy = S + segmax(a - S)`` with
+    ``S = cumsum(cost)``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Tuple
 
 import jax
@@ -45,6 +62,56 @@ def segmented_prefix_max(values: jax.Array, heads: jax.Array) -> jax.Array:
     return out
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SortPlan:
+    """Reusable segment-major layout of one epoch batch for one sort key.
+
+    ``order`` permutes inputs to segment-major layout preserving original
+    order within segments; ``heads`` flags segment starts in the sorted
+    layout; ``rank`` is the within-segment position there. Stages that
+    segment the same batch on the same key build the plan once (in
+    ``DevicePipeline.process``) and share it instead of re-sorting.
+    """
+
+    order: jax.Array  # (N,) i32 permutation into segment-major layout
+    heads: jax.Array  # (N,) bool segment starts in sorted layout
+    rank: jax.Array   # (N,) i32 within-segment position in sorted layout
+
+
+def _heads_rank(s_key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(heads, rank) of an already segment-major key array."""
+    n = s_key.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    heads = jnp.concatenate([jnp.ones((1,), bool), s_key[1:] != s_key[:-1]])
+    seg_start = segmented_prefix_max(
+        jnp.where(heads, idx, 0).astype(jnp.float32), heads
+    ).astype(jnp.int32)
+    return heads, idx - seg_start
+
+
+def make_sort_plan(key: jax.Array) -> SortPlan:
+    """Stable sort by integer segment key, packaged as a reusable plan."""
+    order = jnp.argsort(key, stable=True)
+    heads, rank = _heads_rank(key[order])
+    return SortPlan(order=order, heads=heads, rank=rank)
+
+
+def presorted_plan(key: jax.Array) -> SortPlan:
+    """SortPlan for a key the caller knows is already non-decreasing.
+
+    Skips the O(N log N) sort entirely — ``order`` is the identity — and
+    derives heads/rank with one O(log N)-depth scan. Bit-identical to
+    ``make_sort_plan`` whenever the precondition holds (the stable sort
+    of a sorted key is the identity permutation).
+    """
+    n = key.shape[0]
+    heads, rank = _heads_rank(key)
+    return SortPlan(
+        order=jnp.arange(n, dtype=jnp.int32), heads=heads, rank=rank
+    )
+
+
 def sort_by_segment(
     key: jax.Array,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -54,15 +121,33 @@ def sort_by_segment(
     layout preserving original order within segments; ``heads`` flags segment
     starts in sorted layout; ``rank`` is the within-segment position.
     """
+    plan = make_sort_plan(key)
+    return plan.order, plan.heads, plan.rank
+
+
+def lex_sort_by_segment(
+    key: jax.Array,
+    t: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused (key, t)-lexicographic segment sort — one ``lax.sort`` pass.
+
+    Bit-identical to the two-sort composition
+
+        ord1 = argsort(t, stable=True)
+        ord2, heads, rank = sort_by_segment(key[ord1])
+        order = ord1[ord2]
+
+    used by the CQ and fabric frame layouts: a stable sort by time
+    followed by a stable segment sort by key IS the stable lexicographic
+    sort by (key, t). Fusing halves the sort work and drops the two
+    intermediate gathers per hop.
+    """
     n = key.shape[0]
-    order = jnp.argsort(key, stable=True)
-    s_key = key[order]
     idx = jnp.arange(n, dtype=jnp.int32)
-    heads = jnp.concatenate([jnp.ones((1,), bool), s_key[1:] != s_key[:-1]])
-    seg_start = segmented_prefix_max(
-        jnp.where(heads, idx, 0).astype(jnp.float32), heads
-    ).astype(jnp.int32)
-    rank = idx - seg_start
+    s_key, _, order = jax.lax.sort(
+        (key, t, idx), num_keys=2, is_stable=True
+    )
+    heads, rank = _heads_rank(s_key)
     return order, heads, rank
 
 
@@ -74,11 +159,69 @@ def segment_rank(key: jax.Array) -> jax.Array:
     return out
 
 
+def masked_presorted_rank(
+    group: jax.Array,   # (N,) i32 non-decreasing group ids
+    valid: jax.Array,   # (N,) bool
+) -> jax.Array:
+    """``segment_rank(where(valid, group, G))`` for valid rows, sort-free.
+
+    The queue-pair completion path ranks each epoch's valid completions
+    within their (already SQ-major, hence non-decreasing) CQ groups;
+    ``segment_rank`` pays a full stable sort for it. Because ``group``
+    is non-decreasing, the rank of a valid row is just the count of
+    earlier valid rows in its group — one cumulative sum plus one
+    segmented scan. Invalid rows return 0 (callers drop them before the
+    rank is ever used; ``segment_rank`` would place them in a trailing
+    pseudo-segment instead).
+    """
+    exc = jnp.cumsum(valid.astype(jnp.int32)) - valid.astype(jnp.int32)
+    heads, _ = _heads_rank(group)
+    base = segmented_prefix_max(
+        jnp.where(heads, exc, 0).astype(jnp.float32), heads
+    ).astype(jnp.int32)
+    return jnp.where(valid, exc - base, 0)
+
+
+def queueing_scan_via_segmax(
+    ready: jax.Array,
+    cost: jax.Array,
+    heads: jax.Array,
+    seed: jax.Array,
+    segmax_fn=segmented_prefix_max,
+) -> jax.Array:
+    """``queueing_scan`` reduced to one segmented prefix max.
+
+    With ``S_j = cumsum(cost)_j`` (a plain, unsegmented inclusive sum)
+    the (max,+) recurrence has the closed form
+
+        busy_j = S_j + max_{i <= j, same segment} (a_i - S_i)
+
+    because ``a_i + (c_{i+1} + ... + c_j) = a_i - S_i + S_j``. The max
+    is segmented, so cross-segment terms never mix and the global cumsum
+    is safe. This is the form the Pallas kernel accelerates: max is
+    exactly associative in floats, so ``kernels/seg_scan.seg_scan`` is
+    bit-identical to ``segmented_prefix_max`` here for *any* inputs —
+    the only float divergence vs the ``lax.associative_scan`` reference
+    path is the re-association of the cost sums.
+    """
+    a = ready + cost
+    a = jnp.where(heads, jnp.maximum(a, seed + cost), a)
+    s = jnp.cumsum(cost.astype(jnp.float32))
+    return s + segmax_fn(a - s, heads)
+
+
+def _pallas_segmax(values: jax.Array, heads: jax.Array) -> jax.Array:
+    from repro.kernels import ops as kops  # lazy: pulls in pallas
+
+    return kops.seg_scan(values.astype(jnp.float32), heads)
+
+
 def queueing_scan(
     ready: jax.Array,
     cost: jax.Array,
     heads: jax.Array,
     seed: jax.Array,
+    use_pallas: bool = False,
 ) -> jax.Array:
     """Exact single-server queueing recurrence, vectorized per segment.
 
@@ -94,7 +237,16 @@ def queueing_scan(
 
     ``seed`` must be broadcastable to per-element values (pass e.g.
     ``seed_per_element`` gathered for each row's segment).
+
+    ``use_pallas=True`` (EngineConfig.use_pallas_segscan) routes the
+    scan core through the ``kernels/seg_scan`` Pallas kernel via the
+    segmented-prefix-max reduction (``queueing_scan_via_segmax``); the
+    ``lax.associative_scan`` path below is the reference fallback.
     """
+    if use_pallas:
+        return queueing_scan_via_segmax(
+            ready, cost, heads, seed, segmax_fn=_pallas_segmax
+        )
     a = ready + cost
     a = jnp.where(heads, jnp.maximum(a, seed + cost), a)
 

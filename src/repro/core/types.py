@@ -449,6 +449,19 @@ class EngineConfig:
     poll_quantum_us: float = 10.0     # virtual-time window batched per round
     emulate_data: bool = True         # perform functional block copies
     use_pallas: bool = False          # Pallas kernels (TPU) vs jnp reference
+    # Wall-clock hot-path knobs (virtual time is identical either way):
+    # ``use_sort_plan`` builds one epoch sort plan per key in
+    # ``DevicePipeline.process`` and shares it across the stages that
+    # segment the same batch (datapath unit ranks, the CQ posting rank,
+    # the fused fabric/CQ time-major frame sorts) instead of re-sorting
+    # per stage — bit-exact by construction, parity-tested in
+    # tests/test_segops.py. ``use_pallas_segscan`` routes the
+    # ``segops.queueing_scan`` (max,+) core through the
+    # ``kernels/seg_scan`` Pallas kernel (off by default: the lax
+    # associative-scan path is the reference; see segops.py for the
+    # float-association caveat of the reduction).
+    use_sort_plan: bool = True
+    use_pallas_segscan: bool = False
     # Sub-configs (split out rather than growing this class flat):
     qp: QPConfig = QPConfig()         # completion-side (CQ) model
     cache: CacheConfig = CacheConfig()  # GPU-side page cache (stage 0)

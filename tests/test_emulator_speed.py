@@ -1,0 +1,140 @@
+"""Wall-clock optimizations are bit-exact: sort plan, donation, flags.
+
+The perf work (epoch sort plan, fused lexicographic sorts, buffer
+donation, the Pallas segmented-scan routing) must change *nothing* about
+virtual time — these tests pin every optimization against the seed path
+over full engine runs, comparing whole state pytrees bit-exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine
+from repro.core.types import (
+    EngineConfig,
+    FabricConfig,
+    PlatformModel,
+    QPConfig,
+    SSDConfig,
+    WorkloadConfig,
+)
+from repro.workloads import MultiTenant
+
+SSD = SSDConfig()
+PLAT = PlatformModel()
+WL = WorkloadConfig(io_depth=16, read_frac=0.8)
+SMALL = dict(num_sqs=8, sq_depth=64, fetch_width=16)
+
+
+def _run(cfg, wl=WL, rounds=6):
+    st = engine.init_state(cfg, SSD, wl)
+    return engine.make_runner(cfg, SSD, wl, PLAT, rounds)(st)
+
+
+def _assert_states_equal(a, b):
+    for pa, pb in zip(
+        jax.tree_util.tree_flatten_with_path(a)[0],
+        jax.tree_util.tree_flatten_with_path(b)[0],
+    ):
+        assert jnp.array_equal(pa[1], pb[1]), (
+            f"leaf {jax.tree_util.keystr(pa[0])} diverged"
+        )
+
+
+CONFIGS = {
+    # baseline datapath exercises the unit-rank path + map-lock scan
+    "baseline_dp": EngineConfig(batched_datapath=False, **SMALL),
+    # remote switched fabric + WFQ exercises the fused frame layout
+    "remote_qos": EngineConfig(
+        fabric=FabricConfig(
+            remote=True,
+            tx_bytes_per_us=10_000.0, rx_bytes_per_us=10_000.0,
+            rtt_us=2.0, wire_txn_us=0.1, mtu_batch=4, mtu_timeout_us=5.0,
+            switch_bytes_per_us=20_000.0, switch_fanin=4,
+            qos_weights=(2.0, 1.0),
+        ),
+        **SMALL,
+    ),
+    # non-neutral QP exercises the fused CQ layout + doorbell scan
+    "qp_coalesced": EngineConfig(
+        qp=QPConfig(
+            cq_coalesce_n=4, cq_coalesce_us=5.0, cq_doorbell_us=0.2,
+            cq_poll_us=0.1, cqe_reap_us=0.05,
+        ),
+        **SMALL,
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_sort_plan_bit_exact(name):
+    """use_sort_plan=True reproduces the per-stage-sort path bit-exactly."""
+    cfg = CONFIGS[name]
+    wl = MultiTenant(io_depth=16) if name == "remote_qos" else WL
+    a = _run(dataclasses.replace(cfg, use_sort_plan=False), wl)
+    b = _run(dataclasses.replace(cfg, use_sort_plan=True), wl)
+    _assert_states_equal(a, b)
+
+
+def test_pallas_segscan_flag_gated_and_runs():
+    """The Pallas routing is off by default and runs when enabled."""
+    assert EngineConfig().use_pallas_segscan is False
+    cfg = dataclasses.replace(
+        CONFIGS["baseline_dp"], use_pallas_segscan=True
+    )
+    out = _run(cfg)
+    assert float(out.metrics.completed) > 0
+
+
+def test_pallas_segscan_bit_exact_integer_times():
+    """Pallas path ≡ lax path over a full run with integer-valued times.
+
+    With platform/device parameters that keep every virtual timestamp an
+    integer-valued f32 (< 2^24), the via-segmax reduction's cost-sum
+    re-association cannot round differently, so the whole engine state
+    must match bit-exactly.
+    """
+    # sched_us = n_instances / t_max_iops * 1e6 = 1.0 exactly.
+    ssd = SSD.replace(l_min_us=50.0, t_max_iops=64e6, n_instances=64)
+    plat = PlatformModel(
+        cpu_sqe_fetch_us=10.0, cpu_coal_byte_us=0.0, cpu_coal_base_us=1.0,
+        dsa_sqe_fetch_us=4.0, dsa_coal_base_us=18.0,
+        host_txn_base_us=1.0, host_bytes_per_us=float(ssd.block_bytes),
+        txn_base_us=1.0, link_bytes_per_us=float(ssd.block_bytes),
+        per_req_map_us=3.0, lock_per_req_us=1.0, lock_per_batch_us=1.0,
+    )
+    cfg = EngineConfig(batched_datapath=False, **SMALL)
+    wl = WorkloadConfig(io_depth=16, resubmit_delay_us=1.0)
+
+    def run(use_pallas):
+        c = dataclasses.replace(cfg, use_pallas_segscan=use_pallas)
+        st = engine.init_state(c, ssd, wl)
+        return engine.make_runner(c, ssd, wl, plat, 4)(st)
+
+    _assert_states_equal(run(False), run(True))
+
+
+def test_donation_bit_exact():
+    """donate=True reproduces the undonated runner bit-exactly."""
+    cfg = CONFIGS["baseline_dp"]
+    a = engine.init_state(cfg, SSD, WL)
+    plain = engine.make_runner(cfg, SSD, WL, PLAT, 4, donate=False)
+    a = plain(plain(a))
+    b = engine.unalias(engine.init_state(cfg, SSD, WL))
+    donated = engine.make_runner(cfg, SSD, WL, PLAT, 4, donate=True)
+    b = donated(donated(b))
+    _assert_states_equal(a, b)
+
+
+def test_array_donation_bit_exact():
+    """Array runner donation parity over a 2-drive vmapped array."""
+    cfg = CONFIGS["baseline_dp"]
+    a = engine.init_array_state(cfg, SSD, WL, 2)
+    plain = engine.make_array_runner(cfg, SSD, WL, PLAT, 4, donate=False)
+    a = plain(plain(a))
+    b = engine.unalias(engine.init_array_state(cfg, SSD, WL, 2))
+    donated = engine.make_array_runner(cfg, SSD, WL, PLAT, 4, donate=True)
+    b = donated(donated(b))
+    _assert_states_equal(a, b)

@@ -108,3 +108,129 @@ def test_queueing_scan(case):
         busy = max(ready[i], busy) + cost[i]
         ref[i] = busy
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Pallas routing: the seg_scan kernel vs the lax reference paths.
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(seg_arrays())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_pallas_segmax_bit_exact(xs):
+    """kernels/seg_scan ≡ segmented_prefix_max for ANY floats.
+
+    Max is exactly associative in IEEE floats, so the Pallas kernel's
+    chunked evaluation order cannot diverge from the lax scan's — the
+    bit-exactness the ``queueing_scan_via_segmax`` reduction rests on.
+    """
+    vals, heads = xs
+    ref = segops.segmented_prefix_max(jnp.asarray(vals), jnp.asarray(heads))
+    out = segops._pallas_segmax(jnp.asarray(vals), jnp.asarray(heads))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@st.composite
+def int_queue_cases(draw):
+    """queueing_scan inputs on integer-valued f32 (< 2^24, exactly
+    representable and exactly summable), so the via-segmax reduction's
+    cost-sum re-association cannot round differently."""
+    n = draw(st.integers(1, 100))
+    ready = draw(st.lists(st.integers(0, 1000), min_size=n, max_size=n))
+    cost = draw(st.lists(st.integers(0, 50), min_size=n, max_size=n))
+    heads = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    heads[0] = True
+    seed = draw(st.lists(st.integers(0, 1000), min_size=n, max_size=n))
+    return (
+        np.asarray(ready, np.float32),
+        np.asarray(cost, np.float32),
+        np.asarray(heads, bool),
+        np.asarray(seed, np.float32),
+    )
+
+
+@hypothesis.given(int_queue_cases())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_queueing_scan_pallas_bit_exact(case):
+    """use_pallas=True ≡ the lax path bit-exactly on integer-valued f32."""
+    ready, cost, heads, seed = case
+    args = tuple(map(jnp.asarray, (ready, cost, heads, seed)))
+    ref = segops.queueing_scan(*args)
+    out = segops.queueing_scan(*args, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_queueing_scan_pallas_edge_segments():
+    """All-one-segment and all-heads edges, both ragged vs kernel chunk."""
+    for n in (1, 7, 256, 300):
+        ready = jnp.arange(n, dtype=jnp.float32) % 13
+        cost = (jnp.arange(n, dtype=jnp.float32) * 7) % 5
+        seed = jnp.full((n,), 3.0, jnp.float32)
+        for heads in (
+            jnp.zeros((n,), bool).at[0].set(True),  # one segment
+            jnp.ones((n,), bool),                    # every row a head
+        ):
+            ref = segops.queueing_scan(ready, cost, heads, seed)
+            out = segops.queueing_scan(
+                ready, cost, heads, seed, use_pallas=True
+            )
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Sort-plan helpers: fused/sort-free layouts vs their reference sorts.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def keyed_rows(draw):
+    n = draw(st.integers(1, 120))
+    key = draw(st.lists(st.integers(0, 6), min_size=n, max_size=n))
+    t = draw(st.lists(st.integers(0, 30), min_size=n, max_size=n))
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    return (
+        np.asarray(key, np.int32),
+        np.asarray(t, np.float32),
+        np.asarray(valid, bool),
+    )
+
+
+@hypothesis.given(keyed_rows())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_lex_sort_matches_two_pass(case):
+    """lex_sort_by_segment ≡ stable sort by t then segment sort by key."""
+    key, t, _ = case
+    k, tt = jnp.asarray(key), jnp.asarray(t)
+    ord1 = jnp.argsort(tt, stable=True)
+    ord2, heads_ref, rank_ref = segops.sort_by_segment(k[ord1])
+    order_ref = ord1[ord2]
+    order, heads, rank = segops.lex_sort_by_segment(k, tt)
+    np.testing.assert_array_equal(np.asarray(order), np.asarray(order_ref))
+    np.testing.assert_array_equal(np.asarray(heads), np.asarray(heads_ref))
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rank_ref))
+
+
+@hypothesis.given(keyed_rows())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_presorted_plan_matches_sort(case):
+    """presorted_plan ≡ make_sort_plan on a non-decreasing key."""
+    key, _, _ = case
+    k = jnp.sort(jnp.asarray(key))
+    ref = segops.make_sort_plan(k)
+    plan = segops.presorted_plan(k)
+    np.testing.assert_array_equal(np.asarray(plan.order), np.asarray(ref.order))
+    np.testing.assert_array_equal(np.asarray(plan.heads), np.asarray(ref.heads))
+    np.testing.assert_array_equal(np.asarray(plan.rank), np.asarray(ref.rank))
+
+
+@hypothesis.given(keyed_rows())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_masked_presorted_rank(case):
+    """masked_presorted_rank ≡ segment_rank on valid rows (sorted key)."""
+    key, _, valid = case
+    k = jnp.sort(jnp.asarray(key))
+    v = jnp.asarray(valid)
+    g = int(jnp.max(k)) + 1
+    ref = segops.segment_rank(jnp.where(v, k, jnp.int32(g)))
+    out = segops.masked_presorted_rank(k, v)
+    np.testing.assert_array_equal(
+        np.asarray(out)[valid], np.asarray(ref)[valid]
+    )
