@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common as C
+from benchmarks import kv_serving as _kv_serving
 from repro.core.types import PlatformModel, WorkloadConfig
 
 
@@ -774,4 +775,6 @@ ALL = [
     ("fig24_stripe_replication", fig24_stripe_replication),
     ("fig25_switch_roofline", fig25_switch_roofline),
     ("fig26_tenant_qos", fig26_tenant_qos),
+    ("fig27_kv_serving_iops", _kv_serving.fig27),
+    ("fig28_kv_tier_hierarchy", _kv_serving.fig28),
 ]

@@ -199,3 +199,36 @@ done = float(st.metrics.completed)
 print(f"wall-clock    : {done / dt:,.0f} emulated req/wall-sec "
       f"({done:.0f} reqs in {dt*1e3:.0f} ms; virtual "
       f"{float(st.metrics.iops())/1e6:.1f} MIOPS)")
+
+# 13. LLM serving on the emulated array: the SSD-backed paged-KV tier
+#     (src/repro/serving/) keeps each sequence's hot attention window in
+#     the GPU pool and pages everything colder to the drive. Every
+#     decode step faults the cold pages back in as page-table-driven
+#     LBA-run reads through the same SQ -> timing -> flash -> CQ path
+#     as above, demoted hot-window pages are written back through it,
+#     and the bytes each fault gathers are checked bit-exactly against
+#     the live pool (data_check_max_abs must be 0.0). Tokens/s is
+#     min(GPU roof, storage-bound rate); striping over num_devices
+#     drives lifts the storage bound (fig27/fig28,
+#     benchmarks/kv_serving.py -> BENCH_kv_tier.json).
+import dataclasses
+
+from repro import configs
+from repro.serving import kv_tier
+
+model = configs.get_config("yi-34b", smoke=True)
+tier = kv_tier.KVTierConfig(page_tokens=16, hot_window=64,
+                            gpu_step_us=100.0)
+serve_ecfg = EngineConfig(num_units=8, fetch_width=64)
+for label, t, dev in [
+    ("1x 2.5M drive", tier, SSDConfig(t_max_iops=2.5e6, l_min_us=30.0,
+                                      n_instances=64)),
+    ("4x 40M striped", dataclasses.replace(tier, num_devices=4),
+     SSDConfig(t_max_iops=40e6, l_min_us=30.0, n_instances=512)),
+]:
+    r = kv_tier.decode_tokens_per_s(model, t, dev, serve_ecfg, batch=4,
+                                    start_len=256, n_steps=4)
+    print(f"kv tier {label:14s}: {r['tokens_per_s']:8,.0f} tok/s "
+          f"(step {r['avg_step_us']:.0f} us, "
+          f"{r['blocks_per_step']:.0f} blk/step, "
+          f"data check {r['data_check_max_abs']:.1f})")

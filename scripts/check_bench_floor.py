@@ -16,6 +16,12 @@ emulated-requests-per-wall-second falls below
 never changes — CI runners are too heterogeneous for a hard wall-clock
 gate, yet a sudden order-of-magnitude drop should be visible in the log.
 
+A second advisory reads ``BENCH_kv_tier.json`` (written by
+``benchmarks/kv_serving.py``): fig27's decode tokens/s must be
+monotone non-decreasing in device MIOPS (virtual time — deterministic,
+so a violation means the tier or the device model regressed, yet it
+stays advisory because the smoke sweep is a reduced shape).
+
     PYTHONPATH=src python scripts/check_bench_floor.py --min-miops 40
 """
 from __future__ import annotations
@@ -69,6 +75,36 @@ def advisory_wallclock(json_path: Path, floor: float) -> None:
     )
 
 
+def advisory_kv_tier(json_path: Path) -> None:
+    """Log (never fail) fig27 tokens/s monotonicity in device MIOPS."""
+    if not json_path.exists():
+        print(f"note: {json_path} missing — kv-tier advisory skipped")
+        return
+    points = json.loads(json_path.read_text()).get("fig27", [])
+    points = sorted(points, key=lambda p: p["miops"])
+    if len(points) < 2:
+        print("note: fewer than 2 fig27 points — kv-tier advisory skipped")
+        return
+    rates = [p["tokens_per_s"] for p in points]
+    bad = [
+        (points[i]["miops"], points[i + 1]["miops"])
+        for i in range(len(rates) - 1)
+        if rates[i + 1] < rates[i]
+    ]
+    gain = rates[-1] / rates[0] if rates[0] else float("inf")
+    if bad:
+        print(
+            f"WARN (advisory): fig27 decode tokens/s NOT monotone in "
+            f"device MIOPS — decreases at {bad} (never fails the job)"
+        )
+    else:
+        print(
+            f"OK (advisory): fig27 decode tokens/s monotone over "
+            f"{points[0]['miops']}->{points[-1]['miops']} MIOPS "
+            f"({gain:.1f}x gain)"
+        )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--min-miops", type=float, default=40.0)
@@ -86,11 +122,17 @@ def main() -> int:
         "--advisory-req-per-wall-s", type=float, default=10_000.0,
         help="advisory (non-failing) wall-clock floor, emulated req/s",
     )
+    ap.add_argument(
+        "--kv-tier-json",
+        default="BENCH_kv_tier.json",
+        help="kv-tier serving JSON written by benchmarks/kv_serving.py",
+    )
     args = ap.parse_args()
 
     advisory_wallclock(
         Path(args.wallclock_json), args.advisory_req_per_wall_s
     )
+    advisory_kv_tier(Path(args.kv_tier_json))
     path = Path(args.csv)
     if not path.exists():
         print(f"FAIL: {path} missing — did the benchmark run?")

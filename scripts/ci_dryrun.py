@@ -4,8 +4,10 @@ Parses the workflow and executes every ``run:`` step of every job in
 order, with the workflow's ``env:`` applied — so new steps register here
 automatically (the bench-smoke job currently runs the fig12 floor check
 plus the fig21 CQ-coalescing, fig22 cache-hit-rate, fig23 fabric-
-roofline, fig24 stripe/replication, fig25 switch-roofline, and fig26
-tenant-QoS quick benchmarks).
+roofline, fig24 stripe/replication, fig25 switch-roofline, fig26
+tenant-QoS, and fig27/fig28 kv-serving-tier quick benchmarks — the
+latter also writes ``BENCH_kv_tier.json`` for the floor script's
+tokens/s-monotonicity advisory).
 Steps whose executable is not installed locally (e.g. ``ruff`` on a
 runtime-only box) are reported as SKIPPED rather than failed — CI still
 runs them; this script tells you everything that *can* be validated

@@ -31,11 +31,13 @@ import jax.numpy as jnp
 
 from repro.core.client import StorageClient
 from repro.core.types import (
+    OP_WRITE,
     CacheConfig,
     EngineConfig,
     FabricConfig,
     PlatformModel,
     SSDConfig,
+    StorageOps,
 )
 
 # Default wire for ``case_study(remote=True)``: a 64 Gbps-class link per
@@ -220,6 +222,10 @@ def search(
 
     writeback_us = 0.0
     if write_back:
+        # Result-log write-back goes through the unified op API: one
+        # StorageOps batch per device, submitted over the same rings as
+        # the read path (the legacy write/write_array wrappers are thin
+        # shims over exactly this).
         k = cfg.top_k
         res_i = idx[:, :k]
         res_vecs = vecs[jnp.maximum(res_i, 0).reshape(-1)]   # (B*K, D)
@@ -227,8 +233,11 @@ def search(
         lba = jnp.arange(b * k, dtype=jnp.int32)
         wvalid = (res_i >= 0).reshape(-1)
         if num_devices == 1:
-            cstate, log, wdone = storage.write(
-                cstate, log, res_vecs, lba, clock, wvalid
+            wops = StorageOps.make(
+                lba, clock, opcode=OP_WRITE, valid=wvalid
+            )
+            cstate, log, _, wdone = storage.submit(
+                cstate, log, wops, data=res_vecs
             )
         else:
             m = num_devices
@@ -237,9 +246,12 @@ def search(
                     f"batch*top_k={b * k} must be divisible by "
                     f"num_devices={m} for array write-back"
                 )
-            cstate, log, wdone = storage.write_array(
-                cstate, log, res_vecs.reshape(m, -1, d),
-                lba.reshape(m, -1), clock, wvalid.reshape(m, -1),
+            wops = StorageOps.make(
+                lba.reshape(m, -1), clock, opcode=OP_WRITE,
+                valid=wvalid.reshape(m, -1),
+            )
+            cstate, log, _, wdone = storage.submit_array(
+                cstate, log, wops, data=res_vecs.reshape(m, -1, d)
             )
             wdone = wdone.reshape(-1)
         writeback_us = max(

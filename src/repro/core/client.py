@@ -5,8 +5,31 @@ Applications (the SSD-backed KV tier, the vector-search case study) issue
 functionally, and (b) faithful virtual-time completion times under a
 configured device model. ``StorageClient`` provides exactly that.
 
+**The op API.** ``submit(state, flash, ops)`` is the single entry point:
+``ops`` is a ``StorageOps`` batch (``core/types.py``) carrying opcode,
+LBA, QoS tenant, and submission clock per slot, and one implementation
+runs the rings -> pipeline -> CQ path for the whole (possibly mixed
+read/write, multi-tenant) batch. ``submit_array`` vmaps it over an
+M-drive array and ``submit_striped`` round-robins a flat op batch over
+the array's drives. Everything else is a thin wrapper:
+
+    read / write                  homogeneous single-drive batches
+    read_array / write_array      per-drive (M, N) batches, one vmap
+    read_striped                  flat batch striped over W <= M drives
+    read_replicated               least-loaded replica routing
+
+**Migration note.** Before the op API, the six wrappers were six
+separate entry points growing divergent kwargs; they are now sugar over
+``submit(ops)`` and pinned bit-exact against it by
+``tests/test_client_api.py``. New call sites (and any caller mixing
+reads with writes or tenants in one batch) should build a
+``StorageOps`` and call ``submit``/``submit_array``/``submit_striped``
+directly; the wrappers remain for the common homogeneous cases. The
+ring-less ``DevicePipeline.fetch_direct``/``submit_direct`` shortcuts
+are deprecated (test-only; the public aliases warn).
+
 The client runs the *same queue-pair path as the engine* at every layer:
-each ``read``/``write`` posts SQEs into real ``SQRings`` (requests dealt
+each ``submit`` posts SQEs into real ``SQRings`` (requests dealt
 round-robin across the service units' SQs), the configured frontend
 fetches them (``frontend.fetch_distributed``/``fetch_centralized`` — the
 identical ring-fetch code ``engine_round`` runs), the shared
@@ -23,21 +46,21 @@ Stage 0: with ``EngineConfig.cache.enabled`` a GPU-side page cache
 GPU-local latency and never touch the rings or the device; completed
 reads and writes fill the cache (write-allocate).
 
-``read_array``/``write_array``/``read_striped``/``read_replicated``
-extend the same program to an M-drive array: the per-device pipeline is
-``vmap``-ed over a leading device axis, so one jit program prices the
-whole array (paper-title 100-MIOPS regime at M x 40-MIOPS drives).
-Striped reads accept any batch size (ragged tails pad with invalid
-slots) and a ``stripe_width``; replicated reads home block b's R copies
-on drives ``(b + r) % M`` and route each read to the least-loaded
-candidate (the drive's own instance backlog, plus its RX link and
-shared-switch cursors on a remote array). With
+The array entry points extend the same program to an M-drive array: the
+per-device pipeline is ``vmap``-ed over a leading device axis, so one
+jit program prices the whole array (paper-title 100-MIOPS regime at
+M x 40-MIOPS drives). Striped submission accepts any batch size (ragged
+tails pad with invalid slots) and a ``stripe_width``; replicated reads
+home block b's R copies on drives ``(b + r) % M`` and route each read
+to the least-loaded candidate (the drive's own instance backlog, plus
+its RX link and shared-switch cursors on a remote array). With
 ``EngineConfig.fabric.remote`` the drives are *remote*: every request
 pays the NIC/link hop — and, when configured, the shared-switch hop
 (fabric.py) — exactly as ``engine_round`` prices it. Every entry point
 takes a ``tenant=`` QoS class (scalar or per request) that the
 fabric's weighted-fair arbiter (``FabricConfig.qos_weights``)
-arbitrates between.
+arbitrates between; ``t_submit`` defaults to virtual time zero in every
+entry point alike.
 """
 from __future__ import annotations
 
@@ -63,6 +86,7 @@ from repro.core.types import (
     EngineConfig,
     PlatformModel,
     SSDConfig,
+    StorageOps,
 )
 
 
@@ -180,35 +204,38 @@ class StorageClient:
             done = done.at[idx].set(res.reaped, mode="drop")
         return dev, done
 
-    def read(
+    # -- the unified op API --------------------------------------------------
+    def submit(
         self,
         state: ClientState,
-        flash: jax.Array,      # (num_blocks, block_words)
-        lba: jax.Array,        # (N,) i32 block addresses
-        t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
-        valid: jax.Array | None = None,
-        with_data: bool = True,
-        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
-    ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
-        """Issue N block reads at ``t_submit`` through the SQ/CQ rings.
+        flash: jax.Array,       # (num_blocks, block_words)
+        ops: StorageOps,        # flat (N,) op batch (possibly mixed r/w)
+        data: jax.Array | None = None,   # (N, block_words) write payloads
+        with_data: bool = False,
+    ) -> Tuple[ClientState, jax.Array, "jax.Array | None", jax.Array]:
+        """THE client entry point: one batched op submission.
 
-        Returns (state', data (N, block_words), completion_times (N,)).
-        With the stage-0 cache enabled, hits complete at ``hit_us`` and
-        never post an SQE; completed reads fill the cache.
-        ``with_data=False`` skips the functional gather and returns
-        ``None`` data — for callers (the array wrappers) that gather
-        once themselves instead of paying it per device. ``tenant``
-        tags the requests' QoS class for the fabric's weighted-fair
-        arbiter (``cfg.fabric.qos_weights``).
+        Every slot of ``ops`` carries its own opcode, LBA, tenant class,
+        and submission clock; the whole batch goes down the single
+        rings -> pipeline -> CQ implementation (mixed read/write batches
+        are priced exactly like the engine's mixed workloads). Returns
+        ``(state', flash', data_out, done)``:
+
+        * ``flash'`` — ``flash`` with the valid write slots' ``data``
+          rows scattered in (unchanged when ``data is None``; duplicate
+          LBAs within a batch land unspecified — XLA scatter);
+        * ``data_out`` — the gathered block rows for every valid slot
+          when ``with_data=True`` (reads observe this batch's writes in
+          the functional store), else ``None``;
+        * ``done`` — per-slot consumer-observed completion times.
+
+        Stage-0 cache semantics: read hits complete at ``hit_us`` and
+        never post an SQE; every valid completion (read or write) fills
+        the cache (write-allocate).
         """
-        n = lba.shape[0]
-        lba = lba.astype(jnp.int32)
-        t_submit = jnp.broadcast_to(
-            jnp.asarray(t_submit, jnp.float32), (n,)
-        )
-        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
-        if valid is None:
-            valid = jnp.ones((n,), bool)
+        lba = ops.lba.astype(jnp.int32)
+        valid, t_submit = ops.valid, ops.t_submit
+        is_write = ops.opcode == OP_WRITE
 
         cstate = state.cache
         submit_valid = valid
@@ -216,157 +243,75 @@ class StorageClient:
             hit, hit_done = cache_mod.serve(
                 cstate, lba, valid, t_submit, self.cfg.cache
             )
+            hit = hit & ~is_write       # only reads are served by a hit
             submit_valid = valid & ~hit
 
         dev, done = self._submit_through_rings(
-            state.dev, lba, t_submit, submit_valid,
-            jnp.zeros((n,), jnp.int32), tenant,
+            state.dev, lba, t_submit, submit_valid, ops.opcode, ops.tenant
         )
         if self.cfg.cache.enabled:
             done = jnp.where(hit, hit_done, done)
             cstate = cache_mod.insert(cstate, lba, valid, self.cfg.cache)
-        data = flash[jnp.where(valid, lba, 0)] if with_data else None
-        return ClientState(dev=dev, cache=cstate), data, done
 
-    def write(
+        if data is not None:
+            dst = jnp.where(valid & is_write, lba, flash.shape[0])
+            flash = flash.at[dst].set(data, mode="drop")
+        out = flash[jnp.where(valid, lba, 0)] if with_data else None
+        return ClientState(dev=dev, cache=cstate), flash, out, done
+
+    def submit_array(
         self,
-        state: ClientState,
-        flash: jax.Array,      # (num_blocks, block_words)
-        data: jax.Array,       # (N, block_words) blocks to persist
-        lba: jax.Array,        # (N,) i32 destination block addresses
-        t_submit: jax.Array,   # () or (N,) f32 virtual submission time(s)
-        valid: jax.Array | None = None,
-        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
-    ) -> Tuple[ClientState, jax.Array, jax.Array]:
-        """Issue N block writes at ``t_submit`` through the SQ/CQ rings.
+        state: ClientState,     # stacked: every leaf has a leading (M,) axis
+        flash: jax.Array,       # (num_blocks, block_words) — shared store
+        ops: StorageOps,        # (M, N) per-device op batches
+        data: jax.Array | None = None,   # (M, N, block_words) payloads
+        with_data: bool = False,
+    ) -> Tuple[ClientState, jax.Array, "jax.Array | None", jax.Array]:
+        """``submit`` vmapped over an M-drive array (one jit program).
 
-        Priced by the identical pipeline as ``read`` — the OP_WRITE opcode
-        routes stage 4 to flash programs (and GC once the free pool
-        drains), so sustained writes are honestly slower than reads.
-        Writes always reach the device (durability); with the cache
-        enabled they fill it (write-allocate), so reads-after-writes hit.
-        Returns (state', flash' with the blocks scattered in,
-        completion_times (N,)). If the batch writes the same LBA more
-        than once, which copy lands is unspecified (XLA scatter with
-        duplicate indices) — dedupe before submitting when that matters.
+        Virtual-time pricing runs per drive inside the vmap; the
+        functional scatter/gather against the shared block store happens
+        once at the array level (identical semantics, no M store
+        copies). Returns ``(state', flash', data_out, done)`` with
+        ``done`` shaped (M, N).
         """
-        n = lba.shape[0]
-        lba = lba.astype(jnp.int32)
-        t_submit = jnp.broadcast_to(
-            jnp.asarray(t_submit, jnp.float32), (n,)
-        )
-        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
-        if valid is None:
-            valid = jnp.ones((n,), bool)
-        dev, done = self._submit_through_rings(
-            state.dev, lba, t_submit, valid,
-            jnp.full((n,), OP_WRITE, jnp.int32), tenant,
-        )
-        cstate = state.cache
-        if self.cfg.cache.enabled:
-            cstate = cache_mod.insert(cstate, lba, valid, self.cfg.cache)
-        dst = jnp.where(valid, lba, flash.shape[0])
-        flash = flash.at[dst].set(data, mode="drop")
-        return ClientState(dev=dev, cache=cstate), flash, done
+        m, n = ops.lba.shape
 
-    def read_array(
-        self,
-        state: ClientState,    # stacked: every leaf has a leading (M,) axis
-        flash: jax.Array,      # (num_blocks, block_words) — shared store
-        lba: jax.Array,        # (M, N) i32 per-device block addresses
-        t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
-        valid: jax.Array | None = None,   # (M, N) bool
-        with_data: bool = True,
-        tenant: "jax.Array | int" = 0,    # scalar or (M, N) i32 QoS class
-    ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
-        """Per-device batched reads over an M-drive array, one vmap."""
-        m, n = lba.shape
-        t_submit = jnp.asarray(t_submit, jnp.float32)
-        if t_submit.ndim == 1:
-            t_submit = t_submit[:, None]
-        t_submit = jnp.broadcast_to(t_submit, (m, n))
-        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (m, n))
-        if valid is None:
-            valid = jnp.ones((m, n), bool)
-
-        def one(st, lba_d, t_d, valid_d, ten_d):
-            # Data is gathered once at the array level below, not per
-            # device inside the vmap.
-            st, _, done = self.read(
-                st, flash, lba_d, t_d, valid_d, with_data=False,
-                tenant=ten_d,
-            )
+        def one(st, ops_d):
+            st, _, _, done = self.submit(st, flash, ops_d)
             return st, done
 
-        state, done = jax.vmap(one)(state, lba, t_submit, valid, tenant)
-        data = flash[jnp.where(valid, lba, 0)] if with_data else None
-        return state, data, done
-
-    def write_array(
-        self,
-        state: ClientState,    # stacked: every leaf has a leading (M,) axis
-        flash: jax.Array,      # (num_blocks, block_words) — shared store
-        data: jax.Array,       # (M, N, block_words) per-device payloads
-        lba: jax.Array,        # (M, N) i32 per-device block addresses
-        t_submit: jax.Array,   # scalar, (M,), or (M, N) f32
-        valid: jax.Array | None = None,   # (M, N) bool
-        tenant: "jax.Array | int" = 0,    # scalar or (M, N) i32 QoS class
-    ) -> Tuple[ClientState, jax.Array, jax.Array]:
-        """Per-device batched writes over an M-drive array, one vmap.
-
-        Virtual-time pricing is per drive (each device's pipeline carries
-        its own chips/GC state); the functional scatter lands in the
-        shared block store afterwards. If multiple rows (within or across
-        devices) target the same LBA, which copy lands is unspecified
-        (XLA scatter with duplicate indices) — partition the address
-        space across drives when that matters.
-        """
-        m, n = lba.shape
-        t_submit = jnp.asarray(t_submit, jnp.float32)
-        if t_submit.ndim == 1:
-            t_submit = t_submit[:, None]
-        t_submit = jnp.broadcast_to(t_submit, (m, n))
-        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (m, n))
-        if valid is None:
-            valid = jnp.ones((m, n), bool)
-        zero_store = jnp.zeros((1,) + data.shape[2:], data.dtype)
-
-        def one(st, data_d, lba_d, t_d, valid_d, ten_d):
-            # Price + cache via the single-device path against a dummy
-            # store; the real scatter into the shared store happens once
-            # below (identical semantics, no M copies of the store).
-            st, _, done = self.write(
-                st, zero_store, data_d, lba_d, t_d, valid_d, tenant=ten_d
+        state, done = jax.vmap(one)(state, ops)
+        if data is not None:
+            dst = jnp.where(
+                ops.valid & (ops.opcode == OP_WRITE),
+                ops.lba, flash.shape[0],
+            ).reshape(-1)
+            flash = flash.at[dst].set(
+                data.reshape((m * n,) + data.shape[2:]), mode="drop"
             )
-            return st, done
-
-        state, done = jax.vmap(one)(
-            state, data, lba, t_submit, valid, tenant
+        out = (
+            flash[jnp.where(ops.valid, ops.lba, 0)] if with_data else None
         )
-        dst = jnp.where(valid, lba, flash.shape[0]).reshape(-1)
-        flash = flash.at[dst].set(
-            data.reshape((m * n,) + data.shape[2:]), mode="drop"
-        )
-        return state, flash, done
+        return state, flash, out, done
 
-    def read_striped(
+    def submit_striped(
         self,
-        state: ClientState,    # stacked array state (M devices)
+        state: ClientState,     # stacked array state (M devices)
         flash: jax.Array,
-        lba: jax.Array,        # (N,) i32 — any N
-        t_submit: jax.Array,   # () or (N,) f32
-        valid: jax.Array | None = None,
+        ops: StorageOps,        # flat (N,) op batch — any N
+        data: jax.Array | None = None,   # (N, block_words) write payloads
         stripe_width: int | None = None,
-        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
-    ) -> Tuple[ClientState, jax.Array, jax.Array]:
-        """Stripe a flat read batch round-robin over the array's drives.
+        with_data: bool = False,
+    ) -> Tuple[ClientState, jax.Array, "jax.Array | None", jax.Array]:
+        """Stripe a flat op batch round-robin over the array's drives.
 
-        Request i goes to drive ``i % W`` with ``W = stripe_width``
-        (default: all M drives) — fixed interleaved placement over the
-        first W drives; the remaining drives see an empty batch. Any
-        batch size works: a ragged tail stripe is padded with invalid
-        slots that never touch the rings or the device, and results
-        return in the original request order.
+        Op i goes to drive ``i % W`` with ``W = stripe_width`` (default:
+        all M drives) — fixed interleaved placement over the first W
+        drives; the remaining drives see an empty batch. Any batch size
+        works: a ragged tail stripe is padded with invalid slots that
+        never touch the rings or the device, and ``done``/``data_out``
+        return in the original op order.
         """
         m = jax.tree.leaves(state.dev)[0].shape[0]
         w = m if stripe_width is None else stripe_width
@@ -375,33 +320,162 @@ class StorageClient:
                 f"stripe_width={w} must be in [1, M={m}] — a stripe "
                 "cannot span more drives than the array holds"
             )
-        n = lba.shape[0]
-        lba = lba.astype(jnp.int32)
-        if valid is None:
-            valid = jnp.ones((n,), bool)
-        t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
-        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
+        n = ops.lba.shape[0]
         cols = -(-n // w)          # ceil: ring slots per striped drive
         pad = cols * w - n
 
-        # (N,) -> (M, cols): request i = stripe (i % W, i // W); the
+        # (N, ...) -> (M, cols, ...): op i = stripe (i % W, i // W); the
         # pad tail and the M - W unstriped drives are invalid slots.
         def to_dev(x, fill):
-            x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
-            x = x.reshape(cols, w).T
+            tail = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+            x = jnp.concatenate([x, tail])
+            x = jnp.swapaxes(x.reshape((cols, w) + x.shape[1:]), 0, 1)
             if w < m:
-                x = jnp.concatenate(
-                    [x, jnp.full((m - w, cols), fill, x.dtype)]
-                )
+                rest = jnp.full((m - w, cols) + x.shape[2:], fill, x.dtype)
+                x = jnp.concatenate([x, rest])
             return x
 
-        state, _, done = self.read_array(
-            state, flash, to_dev(lba, 0), to_dev(t_submit, 0.0),
-            to_dev(valid, False), with_data=False,
-            tenant=to_dev(tenant, 0),
+        ops2d = StorageOps(
+            opcode=to_dev(ops.opcode, 0),
+            lba=to_dev(ops.lba.astype(jnp.int32), 0),
+            t_submit=to_dev(ops.t_submit, 0.0),
+            tenant=to_dev(ops.tenant, 0),
+            valid=to_dev(ops.valid, False),
         )
-        done = done[:w].T.reshape(cols * w)[:n]
-        data = flash[jnp.where(valid, lba, 0)]
+        data2d = None if data is None else to_dev(data, 0)
+        state, flash, _, done2d = self.submit_array(
+            state, flash, ops2d, data=data2d
+        )
+        done = jnp.swapaxes(done2d[:w], 0, 1).reshape(cols * w)[:n]
+        out = (
+            flash[jnp.where(ops.valid, ops.lba, 0)] if with_data else None
+        )
+        return state, flash, out, done
+
+    # -- legacy entry points: thin wrappers over submit ----------------------
+    def read(
+        self,
+        state: ClientState,
+        flash: jax.Array,      # (num_blocks, block_words)
+        lba: jax.Array,        # (N,) i32 block addresses
+        t_submit: "jax.Array | float" = 0.0,   # () or (N,) f32
+        valid: jax.Array | None = None,
+        with_data: bool = True,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
+    ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
+        """Issue N block reads at ``t_submit`` through the SQ/CQ rings.
+
+        Sugar for ``submit`` with an all-read op batch. Returns
+        (state', data (N, block_words), completion_times (N,)).
+        ``with_data=False`` skips the functional gather and returns
+        ``None`` data — for callers that gather once themselves.
+        """
+        ops = StorageOps.make(lba, t_submit, tenant=tenant, valid=valid)
+        state, _, data, done = self.submit(
+            state, flash, ops, with_data=with_data
+        )
+        return state, data, done
+
+    def write(
+        self,
+        state: ClientState,
+        flash: jax.Array,      # (num_blocks, block_words)
+        data: jax.Array,       # (N, block_words) blocks to persist
+        lba: jax.Array,        # (N,) i32 destination block addresses
+        t_submit: "jax.Array | float" = 0.0,   # () or (N,) f32
+        valid: jax.Array | None = None,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Issue N block writes at ``t_submit`` through the SQ/CQ rings.
+
+        Sugar for ``submit`` with an all-write op batch — the OP_WRITE
+        opcode routes stage 4 to flash programs (and GC once the free
+        pool drains), so sustained writes are honestly slower than
+        reads. Writes always reach the device (durability); with the
+        cache enabled they fill it (write-allocate). Returns (state',
+        flash' with the blocks scattered in, completion_times (N,)).
+        If the batch writes the same LBA more than once, which copy
+        lands is unspecified (XLA scatter with duplicate indices).
+        """
+        ops = StorageOps.make(
+            lba, t_submit, opcode=OP_WRITE, tenant=tenant, valid=valid
+        )
+        state, flash, _, done = self.submit(state, flash, ops, data=data)
+        return state, flash, done
+
+    def read_array(
+        self,
+        state: ClientState,    # stacked: every leaf has a leading (M,) axis
+        flash: jax.Array,      # (num_blocks, block_words) — shared store
+        lba: jax.Array,        # (M, N) i32 per-device block addresses
+        t_submit: "jax.Array | float" = 0.0,   # (), (M,), or (M, N) f32
+        valid: jax.Array | None = None,   # (M, N) bool
+        with_data: bool = True,
+        tenant: "jax.Array | int" = 0,    # scalar or (M, N) i32 QoS class
+    ) -> Tuple[ClientState, "jax.Array | None", jax.Array]:
+        """Per-device batched reads over an M-drive array, one vmap.
+
+        Sugar for ``submit_array`` with an all-read op batch.
+        """
+        t_submit = jnp.asarray(t_submit, jnp.float32)
+        if t_submit.ndim == 1:
+            t_submit = t_submit[:, None]
+        ops = StorageOps.make(lba, t_submit, tenant=tenant, valid=valid)
+        state, _, data, done = self.submit_array(
+            state, flash, ops, with_data=with_data
+        )
+        return state, data, done
+
+    def write_array(
+        self,
+        state: ClientState,    # stacked: every leaf has a leading (M,) axis
+        flash: jax.Array,      # (num_blocks, block_words) — shared store
+        data: jax.Array,       # (M, N, block_words) per-device payloads
+        lba: jax.Array,        # (M, N) i32 per-device block addresses
+        t_submit: "jax.Array | float" = 0.0,   # (), (M,), or (M, N) f32
+        valid: jax.Array | None = None,   # (M, N) bool
+        tenant: "jax.Array | int" = 0,    # scalar or (M, N) i32 QoS class
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Per-device batched writes over an M-drive array, one vmap.
+
+        Sugar for ``submit_array`` with an all-write op batch: pricing
+        is per drive (each device's pipeline carries its own chips/GC
+        state); the functional scatter lands once in the shared block
+        store. If multiple rows (within or across devices) target the
+        same LBA, which copy lands is unspecified (XLA scatter with
+        duplicate indices) — partition the address space across drives
+        when that matters.
+        """
+        t_submit = jnp.asarray(t_submit, jnp.float32)
+        if t_submit.ndim == 1:
+            t_submit = t_submit[:, None]
+        ops = StorageOps.make(
+            lba, t_submit, opcode=OP_WRITE, tenant=tenant, valid=valid
+        )
+        state, flash, _, done = self.submit_array(
+            state, flash, ops, data=data
+        )
+        return state, flash, done
+
+    def read_striped(
+        self,
+        state: ClientState,    # stacked array state (M devices)
+        flash: jax.Array,
+        lba: jax.Array,        # (N,) i32 — any N
+        t_submit: "jax.Array | float" = 0.0,   # () or (N,) f32
+        valid: jax.Array | None = None,
+        stripe_width: int | None = None,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Stripe a flat read batch round-robin over the array's drives.
+
+        Sugar for ``submit_striped`` with an all-read op batch; see it
+        for the placement rule and ragged-tail padding.
+        """
+        ops = StorageOps.make(lba, t_submit, tenant=tenant, valid=valid)
+        state, _, data, done = self.submit_striped(
+            state, flash, ops, stripe_width=stripe_width, with_data=True
+        )
         return state, data, done
 
     def read_replicated(
@@ -409,7 +483,7 @@ class StorageClient:
         state: ClientState,    # stacked array state (M devices)
         flash: jax.Array,
         lba: jax.Array,        # (N,) i32 — any N
-        t_submit: jax.Array,   # () or (N,) f32
+        t_submit: "jax.Array | float" = 0.0,   # () or (N,) f32
         valid: jax.Array | None = None,
         replicas: int = 2,
         tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class

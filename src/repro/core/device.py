@@ -50,13 +50,15 @@ layer is symmetric end to end. A multi-drive array is the same program
 ``vmap``-ed over a leading device axis (see
 ``engine.simulate(num_devices=...)`` and ``StorageClient.read_striped``).
 
-The ring-less direct path (``fetch_direct``/``submit_direct``) is a
+The ring-less direct path (``_fetch_direct``/``_submit_direct``) is a
 test-only shortcut for unit tests that probe stages 2-4 in isolation —
-no production consumer uses it.
+no production consumer uses it. The old public names ``fetch_direct``/
+``submit_direct`` remain as deprecated aliases that warn.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Tuple
 
 import jax
@@ -172,7 +174,7 @@ class DevicePipeline:
         )
 
     # -- stage 1 (ring variants live in frontend.py) -------------------------
-    def fetch_direct(
+    def _fetch_direct(
         self,
         state: DeviceState,
         t_submit: jax.Array,   # (N,) f32
@@ -350,23 +352,47 @@ class DevicePipeline:
             flash_done=flash_done, done=done, reaped=reaped,
         )
 
-    def submit_direct(
+    def _submit_direct(
         self,
         state: DeviceState,
         batch: RequestBatch,
     ) -> Tuple[DeviceState, PipelineResult]:
-        """TEST-ONLY: fetch_direct + process with no rings on either side.
+        """TEST-ONLY: _fetch_direct + process with no rings on either side.
 
         Op-agnostic — the batch's ``opcode`` decides read vs write pricing
         (stage 2/3 cost both identically; stage 4 charges programs, GC,
         and mapping misses where they apply). Production consumers go
-        through the SQ/CQ rings instead (see ``StorageClient``).
+        through the SQ/CQ rings instead (see ``StorageClient.submit``).
         """
-        state, fetch_done, unit = self.fetch_direct(
+        state, fetch_done, unit = self._fetch_direct(
             state, batch.arrival, batch.valid
         )
         state, _, res = self.process(state, batch, fetch_done, unit)
         return state, res
+
+    # -- deprecated public aliases of the ring-less direct path --------------
+    # The direct path was never a production surface; these aliases keep
+    # old call sites importable one release longer. Use the SQ/CQ client
+    # (``StorageClient.submit``) — or, in tests, the underscore names.
+    def fetch_direct(self, state, t_submit, valid):
+        warnings.warn(
+            "DevicePipeline.fetch_direct is deprecated (test-only "
+            "ring-less path): production consumers go through "
+            "StorageClient.submit; tests use _fetch_direct",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._fetch_direct(state, t_submit, valid)
+
+    def submit_direct(self, state, batch):
+        warnings.warn(
+            "DevicePipeline.submit_direct is deprecated (test-only "
+            "ring-less path): production consumers go through "
+            "StorageClient.submit; tests use _submit_direct",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._submit_direct(state, batch)
 
 
 def init_array_state(init_fn, num_devices: int):

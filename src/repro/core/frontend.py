@@ -353,7 +353,7 @@ def direct_fetch_times(
     """TEST-ONLY ring-less frontend for directly submitted batches.
 
     Production consumers submit through the SQ rings; this shortcut
-    backs ``DevicePipeline.fetch_direct`` for stage-2-4 unit tests.
+    backs ``DevicePipeline._fetch_direct`` for stage-2-4 unit tests.
 
     Applications issue a flat batch with no SQ machinery: requests are dealt
     round-robin to the ``U`` service units in contiguous runs, and each

@@ -68,6 +68,68 @@ class RequestBatch:
         )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StorageOps:
+    """A flat batch of storage operations for ``StorageClient.submit``.
+
+    The unified client op descriptor: one slot per operation, carrying
+    everything the rings -> pipeline -> CQ path needs — opcode, block
+    address, QoS tenant class, and the virtual submission clock. Every
+    legacy ``StorageClient`` entry point (``read``/``write``/
+    ``read_array``/``write_array``/``read_striped``/``read_replicated``)
+    lowers to one of these and goes through the single ``submit``
+    implementation. Build batches with ``StorageOps.make`` (broadcasts
+    scalars) rather than the raw constructor.
+
+    ``valid`` masks live slots; invalid slots never touch the rings, the
+    cache, or the device, and their payload fields are arbitrary.
+    """
+
+    opcode: jax.Array    # (N,) i32 — OP_READ / OP_WRITE
+    lba: jax.Array       # (N,) i32 — logical block address
+    t_submit: jax.Array  # (N,) f32 — virtual submission clock (us)
+    tenant: jax.Array    # (N,) i32 — QoS class (fabric WFQ arbiter)
+    valid: jax.Array     # (N,) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.lba.shape[0]
+
+    @staticmethod
+    def make(
+        lba: jax.Array,
+        t_submit: "jax.Array | float" = 0.0,
+        opcode: "jax.Array | int" = OP_READ,
+        tenant: "jax.Array | int" = 0,
+        valid: jax.Array | None = None,
+    ) -> "StorageOps":
+        """Broadcasting constructor: scalars fan out to ``lba``'s shape.
+
+        Works for flat (N,) batches and per-device (M, N) array batches
+        alike (everything broadcasts against ``lba`` by numpy rules).
+        """
+        lba = jnp.asarray(lba, jnp.int32)
+        shape = lba.shape
+        if valid is None:
+            valid = jnp.ones(shape, bool)
+        return StorageOps(
+            opcode=jnp.broadcast_to(jnp.asarray(opcode, jnp.int32), shape),
+            lba=lba,
+            t_submit=jnp.broadcast_to(
+                jnp.asarray(t_submit, jnp.float32), shape
+            ),
+            tenant=jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), shape),
+            valid=valid,
+        )
+
+    def concat(self, other: "StorageOps") -> "StorageOps":
+        """Concatenate two op batches (e.g. faults + write-backs)."""
+        return jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), self, other
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class SSDConfig:
     """Target-device model parameters (NVMeVirt simple timing model).

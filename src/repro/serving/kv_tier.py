@@ -2,28 +2,54 @@
 
 The paper's §I motivation: agentic/long-context serving pushes KV out of
 HBM into an IOPS-optimized storage tier accessed by GPU-initiated I/O.
-Here the decode path keeps a ``hot_window`` of recent KV pages in HBM; all
-older pages live on the emulated SSD and every decode step must fault them
-in (full attention reads the whole history). The SwarmIO virtual-time
-engine prices those reads, making tokens/s a function of device IOPS —
-exactly the study the emulator exists to enable.
+Here the decode path keeps a ``hot_window`` of recent KV pages in HBM;
+all older pages live on the emulated SSD and every decode step must
+fault them in (full attention reads the whole history). The SwarmIO
+virtual-time engine prices those reads, making tokens/s a function of
+device IOPS — exactly the study the emulator exists to enable.
 
-Functional path: cold pages are striped over emulated flash blocks; a
-step's page reads go through ``StorageClient`` (timing) and the block
-gather (data), and the gathered bytes are verified against the live cache
-in tests.
+The tier is backed by the *real* paged KV cache and the *real* device
+pipeline end to end:
+
+* logical pages map to SSD LBAs through the live ``PagedKV`` page
+  table — physical page p owns the block run ``[p*nb, (p+1)*nb)`` in
+  its layer's region of the flash store (``paged_kv.page_run_lbas``);
+* a decode step builds ONE mixed ``StorageOps`` batch — cold-page
+  fault reads under the latency (decode) tenant, the freshly demoted
+  hot-window page's write-back, and an optional background context-
+  ingest read stream under the prefill tenant — and submits it
+  through the single
+  ``StorageClient.submit`` rings -> timing -> flash -> CQ path
+  (``submit_striped`` over the array when ``num_devices > 1``);
+* the gathered fault bytes are checked against the live pool contents
+  every step (``data_check_max_abs`` in the returned stats — the tier
+  never fabricates data);
+* ``EngineConfig.cache`` puts the stage-0 GPU page cache (and its
+  readahead) in front of the faults, so re-faulted cold pages can hit
+  at GPU-local latency.
+
+Step latency is ``max(gpu_step_us, storage critical path)`` where the
+critical path is the latest completion among the decode tenant's ops;
+the background bulk stream is priced (it congests the device and the
+fabric) but does not gate the step.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.client import ClientState, StorageClient
-from repro.core.types import EngineConfig, PlatformModel, SSDConfig
+from repro.core.types import (
+    OP_WRITE,
+    EngineConfig,
+    PlatformModel,
+    SSDConfig,
+    StorageOps,
+)
 from repro.models.config import ModelConfig
+from repro.serving import paged_kv as pk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +58,16 @@ class KVTierConfig:
     hot_window: int = 1024         # tokens kept in HBM
     block_bytes: int = 512         # SSD I/O granularity
     gpu_step_us: float = 150.0     # modeled per-token GPU compute time
+    decode_tenant: int = 0         # QoS class: faults + write-backs
+    prefill_tenant: int = 1        # QoS class: prefill flush + bulk
+    bulk_blocks_per_step: int = 0  # bulk-tenant ingest reads/step
+    num_devices: int = 1           # > 1: stripe over a drive array
+    stripe_width: int | None = None
+
+    @property
+    def hot_pages(self) -> int:
+        """Pages of the hot window (>= 1: the page being written)."""
+        return max(self.hot_window // self.page_tokens, 1)
 
 
 def kv_page_blocks(cfg: ModelConfig, tier: KVTierConfig) -> int:
@@ -44,50 +80,249 @@ def kv_page_blocks(cfg: ModelConfig, tier: KVTierConfig) -> int:
 def cold_blocks_per_step(
     cfg: ModelConfig, tier: KVTierConfig, cache_len: int
 ) -> int:
-    """Block reads a single decode step must fault in (full attention)."""
+    """Analytic block reads one decode step faults in (full attention).
+
+    An estimate for sizing studies; the live tier reports the *actual*
+    per-step op count from its page tables (``blocks_per_step``).
+    """
     cold_tokens = max(cache_len - tier.hot_window, 0)
     pages = -(-cold_tokens // tier.page_tokens)
     return pages * kv_page_blocks(cfg, tier) * cfg.n_kv_heads * cfg.n_layers
 
 
+def paged_cfg_for(
+    cfg: ModelConfig,
+    tier: KVTierConfig,
+    batch: int,
+    start_len: int,
+    n_steps: int,
+) -> pk.PagedKVConfig:
+    """PagedKVConfig sized exactly for a (batch, start_len + n_steps)
+    serving run of one layer group of ``cfg``."""
+    mp = -(-(start_len + n_steps) // tier.page_tokens)
+    return pk.PagedKVConfig(
+        page_tokens=tier.page_tokens,
+        n_pages=batch * mp,
+        max_pages=mp,
+        kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.d_head,
+        dtype=cfg.dtype,
+    )
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class TierState:
-    client: ClientState
-    clock: jax.Array        # () f32 virtual time (us)
+    """Live serving-tier state carried across decode steps."""
+
+    client: ClientState      # device/array virtual-time state
+    kv: pk.PagedKV           # the real paged KV cache (page tables!)
+    flash: jax.Array         # (flash_blocks, block_values) block store
+    clock: jax.Array         # () f32 virtual time (us)
 
 
-def init_tier(ssd: SSDConfig, ecfg: EngineConfig) -> TierState:
+def _submit(storage, tier, client, flash, ops, data):
+    """One mixed op batch down the unified client path (striped over
+    the array when the tier spans multiple drives)."""
+    if tier.num_devices > 1:
+        return storage.submit_striped(
+            client, flash, ops, data=data,
+            stripe_width=tier.stripe_width, with_data=True,
+        )
+    return storage.submit(client, flash, ops, data=data, with_data=True)
+
+
+def _page_write_ops(kv, pcfg, tier, mask, layers, region, clock, tenant):
+    """Write-back ops + payload rows for every masked (B, MP) page,
+    tiled over the per-layer LBA regions."""
+    nb = pk.page_blocks(pcfg, tier.block_bytes)
+    bv = region_block_values(pcfg, tier)
+    lay = jnp.arange(layers, dtype=jnp.int32)
+    runs = pk.page_run_lbas(kv.page_table, nb)           # (B, MP, nb)
+    lba = runs[:, :, None, :] + (lay * region)[None, None, :, None]
+    valid = jnp.broadcast_to(mask[:, :, None, None], lba.shape)
+    ops = StorageOps.make(
+        lba.reshape(-1).astype(jnp.int32), clock,
+        opcode=OP_WRITE, tenant=tenant, valid=valid.reshape(-1),
+    )
+    packed = pk.pack_pages(kv, pcfg, bv)                 # (P, nb, bv)
+    rows = packed[jnp.maximum(kv.page_table, 0)]         # (B, MP, nb, bv)
+    data = jnp.broadcast_to(
+        rows[:, :, None], lba.shape + (bv,)
+    ).reshape(-1, bv)
+    return ops, data
+
+
+def region_block_values(pcfg: pk.PagedKVConfig, tier: KVTierConfig) -> int:
+    """Values per block row: one flash row is one block's payload."""
+    return tier.block_bytes // jnp.dtype(pcfg.dtype).itemsize
+
+
+def init_tier(
+    storage: StorageClient,
+    pcfg: pk.PagedKVConfig,
+    tier: KVTierConfig,
+    batch: int,
+    flash_blocks: int,
+) -> TierState:
+    """Fresh tier: empty paged KV, zeroed block store, clock zero."""
+    client = (
+        storage.init_array_state(tier.num_devices)
+        if tier.num_devices > 1 else storage.init_state()
+    )
+    bv = region_block_values(pcfg, tier)
     return TierState(
-        client=StorageClient(ssd, ecfg).init_state(),
+        client=client,
+        kv=pk.init_paged(pcfg, batch),
+        flash=jnp.zeros((flash_blocks, bv), jnp.float32),
         clock=jnp.float32(0),
     )
 
 
-def step_storage_time(
+def prefill_flush(
     state: TierState,
     storage: StorageClient,
-    flash: jax.Array,
-    n_blocks: int,
-    batch: int,
-    rng_base: jax.Array,
-) -> tuple[TierState, jax.Array, jax.Array]:
-    """Fault in ``n_blocks`` blocks per sequence (batched) at the current
-    virtual time. Returns (state', data, step_storage_latency_us)."""
-    total = n_blocks * batch
-    lba = (
-        (rng_base + jnp.arange(total, dtype=jnp.uint32))
-        * jnp.uint32(2654435761)
-    ) % jnp.uint32(flash.shape[0])
-    client, data, done = storage.read(
-        state.client, flash, lba.astype(jnp.int32), state.clock
+    pcfg: pk.PagedKVConfig,
+    tier: KVTierConfig,
+    layers: int,
+    region: int,
+) -> TierState:
+    """Flush every cold page of a prefilled cache to its LBA run.
+
+    One bulk-tenant write batch through the same submit path; the clock
+    advances to the flush's completion so decode starts with the tier
+    durable (every page that decode can fault is on flash).
+    """
+    cold = pk.cold_page_mask(state.kv, pcfg, tier.hot_pages)
+    ops, data = _page_write_ops(
+        state.kv, pcfg, tier, cold, layers, region, state.clock,
+        tier.prefill_tenant,
     )
-    t_done = jnp.max(done)
-    return (
-        TierState(client=client, clock=state.clock),
-        data,
-        t_done - state.clock,
+    client, flash, _, done = _submit(
+        storage, tier, state.client, state.flash, ops, data
     )
+    clock = jnp.max(jnp.where(ops.valid, done, state.clock))
+    return TierState(
+        client=client, kv=state.kv, flash=flash, clock=clock
+    )
+
+
+def tier_step(
+    state: TierState,
+    storage: StorageClient,
+    pcfg: pk.PagedKVConfig,
+    tier: KVTierConfig,
+    layers: int,
+    region: int,
+    k_new: jax.Array,        # (B, H, D) this step's keys
+    v_new: jax.Array,
+    step_idx: jax.Array,     # () i32 — cycles the bulk scratch region
+) -> tuple[TierState, dict]:
+    """One decode step against the live tier.
+
+    Appends the token to the paged cache, then submits ONE mixed op
+    batch: page-table-driven fault reads for every cold page (decode
+    tenant), the freshly demoted page's write-back (decode tenant), and
+    the optional background bulk-write stream (prefill tenant). Returns
+    (state', per-step stats) with the clock advanced by
+    ``max(gpu_step_us, storage critical path)``.
+    """
+    nb = pk.page_blocks(pcfg, tier.block_bytes)
+    bv = region_block_values(pcfg, tier)
+    b, mp = state.kv.page_table.shape
+    lay = jnp.arange(layers, dtype=jnp.int32)
+
+    kv_new = pk.append_token(state.kv, pcfg, k_new, v_new)
+
+    # Fault reads: pages cold *before* this token (the demoted page is
+    # still resident this step — it is being evicted, not re-read).
+    cold = pk.cold_page_mask(state.kv, pcfg, tier.hot_pages)
+    runs = pk.page_run_lbas(state.kv.page_table, nb)      # (B, MP, nb)
+    r_lba = runs[:, :, None, :] + (lay * region)[None, None, :, None]
+    r_valid = jnp.broadcast_to(cold[:, :, None, None], r_lba.shape)
+    n_read = b * mp * layers * nb
+    read_ops = StorageOps.make(
+        r_lba.reshape(-1).astype(jnp.int32), state.clock,
+        tenant=tier.decode_tenant, valid=r_valid.reshape(-1),
+    )
+
+    # Write-back: the page (at most one per sequence) that just left
+    # the hot window is demoted from HBM to its LBA run.
+    demoted = pk.cold_page_mask(kv_new, pcfg, tier.hot_pages) & ~cold
+    write_ops, w_data = _page_write_ops(
+        kv_new, pcfg, tier, demoted, layers, region, state.clock,
+        tier.decode_tenant,
+    )
+
+    ops = read_ops.concat(write_ops)
+    data = jnp.concatenate([jnp.zeros((n_read, bv)), w_data])
+
+    # Background bulk stream (prefill tenant): context-ingest reads
+    # for the *next* requests' prompts, cycling through the scratch
+    # region past the KV regions. Priced — it congests the device and
+    # the shared fabric against the decode tenant — but never gates
+    # the decode step.
+    nbulk = tier.bulk_blocks_per_step
+    if nbulk:
+        scratch0 = layers * region
+        scratch = state.flash.shape[0] - scratch0
+        b_lba = scratch0 + (
+            step_idx * nbulk + jnp.arange(nbulk, dtype=jnp.int32)
+        ) % scratch
+        bulk_ops = StorageOps.make(
+            b_lba.astype(jnp.int32), state.clock,
+            tenant=tier.prefill_tenant,
+        )
+        ops = ops.concat(bulk_ops)
+        data = jnp.concatenate([data, jnp.zeros((nbulk, bv))])
+
+    client, flash, out, done = _submit(
+        storage, tier, state.client, state.flash, ops, data
+    )
+
+    # Step latency: GPU compute overlaps the decode tenant's storage
+    # critical path (latest fault or write-back completion).
+    gating = ops.valid & (ops.tenant == tier.decode_tenant)
+    t_done = jnp.max(jnp.where(gating, done, state.clock))
+    storage_us = t_done - state.clock
+    step_us = jnp.maximum(storage_us, tier.gpu_step_us)
+
+    # Data integrity: gathered fault bytes == live pool contents. Cold
+    # pages' pool rows are immutable (bump allocation, append touches
+    # only the hot page), so the block image written at demotion must
+    # round-trip bit-exactly.
+    packed = pk.pack_pages(kv_new, pcfg, bv)
+    exp = packed[jnp.maximum(state.kv.page_table, 0)]     # (B, MP, nb, bv)
+    exp = jnp.broadcast_to(exp[:, :, None], r_lba.shape + (bv,))
+    err = jnp.abs(out[:n_read].reshape(exp.shape) - exp)
+    err = jnp.max(jnp.where(r_valid[..., None], err, 0.0))
+
+    stats = {
+        "storage_us": storage_us,
+        "step_us": step_us,
+        "blocks": jnp.sum(gating),
+        "data_err": err,
+    }
+    state = TierState(
+        client=client, kv=kv_new, flash=flash,
+        clock=state.clock + step_us,
+    )
+    return state, stats
+
+
+def _synth_kv(pcfg: pk.PagedKVConfig, batch: int, t: jax.Array):
+    """Deterministic per-token KV payload (distinct across t/b/h/d) so
+    the round-trip check actually exercises the bytes."""
+    h, d = pcfg.kv_heads, pcfg.head_dim
+    tt = (t.astype(jnp.float32) % 509.0) * 0.0625
+    grid = (
+        jnp.arange(batch, dtype=jnp.float32)[:, None, None] * 0.5
+        + jnp.arange(h, dtype=jnp.float32)[None, :, None] * 0.125
+        + jnp.arange(d, dtype=jnp.float32)[None, None, :] * 0.03125
+    )
+    k = (tt + grid).astype(jnp.dtype(pcfg.dtype))
+    v = (tt - grid).astype(jnp.dtype(pcfg.dtype))
+    return k, v
 
 
 def decode_tokens_per_s(
@@ -100,50 +335,61 @@ def decode_tokens_per_s(
     n_steps: int,
     plat: PlatformModel | None = None,
     flash_blocks: int = 1 << 14,
-    block_words: int = 128,
 ) -> dict:
     """Virtual-time decode throughput with the SSD-backed cold KV tier.
 
-    Per step: storage faults (priced by the SwarmIO engine) overlap the
-    modeled GPU compute; step latency = max(compute, storage). Returns
-    aggregate stats incl. achieved IOPS demand vs. device capability.
+    Runs the real tier: prefill ``start_len`` tokens into a paged KV
+    cache, flush the cold pages to flash (prefill tenant), then scan
+    ``n_steps`` decode steps — each faulting its cold pages through the
+    page tables and writing back demotions via one mixed
+    ``StorageClient.submit`` batch. Step latency = max(GPU compute,
+    storage critical path). Returns aggregate stats incl. achieved
+    IOPS demand vs. device capability and the end-to-end
+    ``data_check_max_abs`` round-trip error (must be 0.0).
     """
     storage = StorageClient(ssd, ecfg, plat or PlatformModel())
-    flash = (
-        jnp.arange(flash_blocks, dtype=jnp.float32)[:, None]
-        + jnp.arange(block_words, dtype=jnp.float32)[None, :] * 1e-3
-    )
-    state = init_tier(ssd, ecfg)
+    pcfg = paged_cfg_for(cfg, tier, batch, start_len, n_steps)
+    layers = max(cfg.n_layers, 1)
+    nb = pk.page_blocks(pcfg, tier.block_bytes)
+    region = pcfg.n_pages * nb
+    needed = layers * region + max(tier.bulk_blocks_per_step, 1)
+    flash_blocks = max(flash_blocks, needed)
 
-    def one_step(state, step_idx):
-        cache_len = start_len + step_idx
-        # Static block count for jit: use start_len (cache grows ~n_steps
-        # tokens over the run; negligible vs start_len in our studies).
-        nb = cold_blocks_per_step(cfg, tier, start_len)
-        nb_arr = jnp.int32(nb)
-        state2, data, storage_us = step_storage_time(
-            state, storage, flash, nb, batch,
-            (step_idx * 1315423911 + 7).astype(jnp.uint32),
+    @jax.jit
+    def run():
+        state = init_tier(storage, pcfg, tier, batch, flash_blocks)
+
+        def fill(kv, t):
+            k, v = _synth_kv(pcfg, batch, t)
+            return pk.append_token(kv, pcfg, k, v), None
+
+        kv, _ = jax.lax.scan(
+            fill, state.kv, jnp.arange(start_len, dtype=jnp.int32)
         )
-        step_us = jnp.maximum(storage_us, tier.gpu_step_us)
-        return (
-            TierState(client=state2.client, clock=state.clock + step_us),
-            (storage_us, step_us, data.sum()),
+        state = dataclasses.replace(state, kv=kv)
+        state = prefill_flush(state, storage, pcfg, tier, layers, region)
+
+        def body(state, i):
+            k, v = _synth_kv(pcfg, batch, start_len + i)
+            return tier_step(
+                state, storage, pcfg, tier, layers, region, k, v, i
+            )
+
+        state, stats = jax.lax.scan(
+            body, state, jnp.arange(n_steps, dtype=jnp.int32)
         )
+        return stats
 
-    def body(state, i):
-        s2, out = one_step(state, i)
-        return s2, out
-
-    state, (storage_us, step_us, _) = jax.lax.scan(
-        body, state, jnp.arange(n_steps)
-    )
+    stats = run()
+    step_us = stats["step_us"]
     total_us = float(jnp.sum(step_us))
-    nb = cold_blocks_per_step(cfg, tier, start_len)
+    blocks = float(jnp.mean(stats["blocks"]))
     return {
         "tokens_per_s": batch * n_steps / (total_us * 1e-6),
         "avg_step_us": total_us / n_steps,
-        "avg_storage_us": float(jnp.mean(storage_us)),
-        "blocks_per_step": nb * batch,
-        "iops_demand": nb * batch / (float(jnp.mean(step_us)) * 1e-6),
+        "avg_storage_us": float(jnp.mean(stats["storage_us"])),
+        "blocks_per_step": blocks,
+        "iops_demand": blocks / (float(jnp.mean(step_us)) * 1e-6),
+        "data_check_max_abs": float(jnp.max(stats["data_err"])),
+        "hot_pages": tier.hot_pages,
     }

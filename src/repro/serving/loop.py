@@ -4,6 +4,17 @@ Functional generation (the real model, real KV caches) with virtual-time
 step accounting from the SSD-backed KV tier — wall-clock generation speed
 is a CPU artifact here; the *virtual-time* tokens/s is the deployment
 metric the case studies report.
+
+``serve_with_kv_tier`` runs the tier end to end over the real device
+pipeline (``kv_tier.decode_tokens_per_s``): a synthetic prefill is
+flushed to per-layer flash regions, every decode step faults its cold
+pages back in as page-table-driven LBA-run reads through SQ -> timing ->
+flash -> CQ, and demoted hot-window pages are written back through the
+same path. The returned stats include ``tokens_per_s``, ``avg_step_us``,
+``avg_storage_us``, ``blocks_per_step``, ``iops_demand``, and
+``data_check_max_abs`` — the latter is the max abs error between the
+bytes each fault gathered from flash and the live pool contents, and
+must be exactly 0.0.
 """
 from __future__ import annotations
 

@@ -98,28 +98,78 @@ def gather_dense(
 def page_blocks(cfg: PagedKVConfig, block_bytes: int = 512) -> int:
     """512-byte device blocks per page (both K and V fragments)."""
     dt = jnp.dtype(cfg.dtype)
-    page_bytes = 2 * cfg.page_tokens * cfg.kv_heads * cfg.head_dim * dt.itemsize
+    page_bytes = (
+        2 * cfg.page_tokens * cfg.kv_heads * cfg.head_dim * dt.itemsize
+    )
     return -(-page_bytes // block_bytes)
+
+
+def cold_page_mask(
+    kv: PagedKV, cfg: PagedKVConfig, hot_pages: int
+) -> jax.Array:
+    """(B, max_pages) bool — mapped pages older than the hot window.
+
+    Page p of a sequence is *cold* when it trails the page currently
+    being written by more than ``hot_pages``: it has been evicted from
+    HBM and lives only in its SSD block run.
+    """
+    cur_page = kv.lengths // cfg.page_tokens
+    page_idx = jnp.arange(cfg.max_pages)[None, :]
+    return (kv.page_table >= 0) & (page_idx < cur_page[:, None] - hot_pages)
+
+
+def page_run_lbas(page_table: jax.Array, nb: int) -> jax.Array:
+    """(B, MP) page table -> (B, MP, nb) LBA runs.
+
+    Physical page p owns the contiguous block run
+    ``[p * nb, (p + 1) * nb)`` — the page-table-driven address map the
+    tier reads and writes through (unmapped entries clamp to page 0 and
+    must be masked by the caller's valid bits).
+    """
+    return (
+        jnp.maximum(page_table, 0)[..., None] * nb
+        + jnp.arange(nb, dtype=jnp.int32)[None, None, :]
+    )
+
+
+def pack_pages(
+    kv: PagedKV, cfg: PagedKVConfig, block_values: int
+) -> jax.Array:
+    """Serialize the pool to its on-device block image.
+
+    Returns (n_pages, nb, block_values) f32: page p's K then V values,
+    flattened, zero-padded to ``nb`` blocks of ``block_values`` values
+    each (``block_values = block_bytes // dtype_bytes``, so a row *is*
+    one device block's payload). Write-back scatters these rows; a
+    fault's gathered rows must compare equal — the tier's end-to-end
+    data-integrity check.
+    """
+    p = kv.k_pool.shape[0]
+    flat = jnp.concatenate(
+        [kv.k_pool.reshape(p, -1), kv.v_pool.reshape(p, -1)], axis=1
+    ).astype(jnp.float32)
+    nb = -(-flat.shape[1] // block_values)
+    pad = nb * block_values - flat.shape[1]
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(p, nb, block_values)
 
 
 def fault_pages_virtual_time(
     kv: PagedKV, cfg: PagedKVConfig, storage, cstate, flash,
-    t_submit, hot_pages: int = 2,
+    t_submit, hot_pages: int = 2, tenant: int = 0,
 ):
     """Price the cold-page faults of one decode step through the SwarmIO
     client: every mapped page older than ``hot_pages`` is a device read of
-    ``page_blocks`` blocks. Returns (client_state', completion_time)."""
-    b, mp = kv.page_table.shape
-    cur_page = kv.lengths // cfg.page_tokens
-    page_idx = jnp.arange(mp)[None, :]
-    cold = (kv.page_table >= 0) & (page_idx < cur_page[:, None] - hot_pages)
+    ``page_blocks`` blocks at its page-table LBA run. Returns
+    (client_state', completion_time)."""
+    from repro.core.types import StorageOps
+
     nb = page_blocks(cfg)
-    lba = (
-        jnp.maximum(kv.page_table, 0)[..., None] * nb
-        + jnp.arange(nb)[None, None, :]
-    ).reshape(-1) % flash.shape[0]
+    cold = cold_page_mask(kv, cfg, hot_pages)
+    lba = page_run_lbas(kv.page_table, nb).reshape(-1) % flash.shape[0]
     valid = jnp.repeat(cold.reshape(-1), nb)
-    cstate, _, done = storage.read(
-        cstate, flash, lba.astype(jnp.int32), t_submit, valid
+    ops = StorageOps.make(
+        lba.astype(jnp.int32), t_submit, tenant=tenant, valid=valid
     )
+    cstate, _, _, done = storage.submit(cstate, flash, ops)
     return cstate, jnp.max(done)

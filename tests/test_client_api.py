@@ -1,0 +1,244 @@
+"""The unified ``StorageClient.submit(ops)`` op API.
+
+Pins the redesign's contract: the six legacy entry points (read, write,
+read_array, write_array, read_striped, read_replicated) are thin
+wrappers over ``submit``/``submit_array``/``submit_striped`` and must
+stay *bit-exact* against op batches built by hand — including tenant
+QoS classes and remote switched-fabric configs. Also covers mixed
+read/write batches and the deprecation of the ring-less
+``DevicePipeline.fetch_direct``/``submit_direct`` shortcuts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import StorageClient
+from repro.core.device import DevicePipeline, make_direct_batch
+from repro.core.segops import segment_rank
+from repro.core.types import (
+    OP_WRITE,
+    CacheConfig,
+    EngineConfig,
+    FabricConfig,
+    SSDConfig,
+    StorageOps,
+)
+
+SSD = SSDConfig(t_max_iops=1e6, l_min_us=20.0, n_instances=32,
+                num_blocks=1 << 10)
+LOCAL = EngineConfig(num_sqs=8, sq_depth=64, num_units=4, fetch_width=32)
+REMOTE_QOS = LOCAL.replace(
+    fabric=FabricConfig(
+        remote=True, tx_bytes_per_us=1000.0, rx_bytes_per_us=1000.0,
+        rtt_us=2.0, wire_txn_us=0.2, mtu_batch=4, mtu_timeout_us=5.0,
+        switch_bytes_per_us=2000.0, switch_fanin=2,
+        qos_weights=(2.0, 1.0),
+    )
+)
+CACHED = LOCAL.replace(
+    cache=CacheConfig(enabled=True, num_sets=16, ways=2, readahead=1)
+)
+CONFIGS = [("local", LOCAL), ("remote_qos", REMOTE_QOS),
+           ("cached", CACHED)]
+
+
+def _flash(n=1 << 10, w=16):
+    return (
+        jnp.arange(n, dtype=jnp.float32)[:, None]
+        + jnp.arange(w, dtype=jnp.float32)[None, :] * 1e-3
+    )
+
+
+def _batch(n=48, seed=0):
+    rng = np.random.default_rng(seed)
+    lba = jnp.asarray(rng.integers(0, 1 << 10, n), jnp.int32)
+    t = jnp.asarray(rng.uniform(0.0, 5.0, n), jnp.float32)
+    valid = jnp.asarray(rng.random(n) > 0.1)
+    tenant = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    return lba, t, valid, tenant
+
+
+@pytest.mark.parametrize("name,ecfg", CONFIGS)
+def test_read_is_bit_exact_wrapper_over_submit(name, ecfg):
+    client = StorageClient(SSD, ecfg)
+    flash = _flash()
+    lba, t, valid, tenant = _batch()
+    st1, data1, done1 = client.read(
+        client.init_state(), flash, lba, t, valid, tenant=tenant
+    )
+    ops = StorageOps.make(lba, t, tenant=tenant, valid=valid)
+    st2, _, data2, done2 = client.submit(
+        client.init_state(), flash, ops, with_data=True
+    )
+    np.testing.assert_array_equal(np.asarray(done1), np.asarray(done2))
+    np.testing.assert_array_equal(np.asarray(data1), np.asarray(data2))
+    for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name,ecfg", CONFIGS)
+def test_write_is_bit_exact_wrapper_over_submit(name, ecfg):
+    client = StorageClient(SSD, ecfg)
+    flash = _flash()
+    lba, t, valid, tenant = _batch(seed=1)
+    data = jnp.ones((48, 16)) * jnp.arange(48)[:, None]
+    st1, fl1, done1 = client.write(
+        client.init_state(), flash, data, lba, t, valid, tenant=tenant
+    )
+    ops = StorageOps.make(
+        lba, t, opcode=OP_WRITE, tenant=tenant, valid=valid
+    )
+    st2, fl2, _, done2 = client.submit(
+        client.init_state(), flash, ops, data=data
+    )
+    np.testing.assert_array_equal(np.asarray(done1), np.asarray(done2))
+    np.testing.assert_array_equal(np.asarray(fl1), np.asarray(fl2))
+
+
+@pytest.mark.parametrize("name,ecfg", [CONFIGS[0], CONFIGS[1]])
+def test_array_wrappers_bit_exact(name, ecfg):
+    m, n = 2, 24
+    client = StorageClient(SSD, ecfg)
+    flash = _flash()
+    rng = np.random.default_rng(2)
+    lba = jnp.asarray(rng.integers(0, 1 << 10, (m, n)), jnp.int32)
+    t = jnp.asarray(rng.uniform(0.0, 3.0, (m, n)), jnp.float32)
+    valid = jnp.asarray(rng.random((m, n)) > 0.1)
+    tenant = jnp.asarray(rng.integers(0, 2, (m, n)), jnp.int32)
+    ops = StorageOps.make(lba, t, tenant=tenant, valid=valid)
+
+    st1, data1, done1 = client.read_array(
+        client.init_array_state(m), flash, lba, t, valid, tenant=tenant
+    )
+    st2, _, data2, done2 = client.submit_array(
+        client.init_array_state(m), flash, ops, with_data=True
+    )
+    np.testing.assert_array_equal(np.asarray(done1), np.asarray(done2))
+    np.testing.assert_array_equal(np.asarray(data1), np.asarray(data2))
+
+    wdata = jnp.ones((m, n, 16)) * 7.0
+    wops = StorageOps.make(
+        lba, t, opcode=OP_WRITE, tenant=tenant, valid=valid
+    )
+    st3, fl3, done3 = client.write_array(
+        client.init_array_state(m), flash, wdata, lba, t, valid,
+        tenant=tenant,
+    )
+    st4, fl4, _, done4 = client.submit_array(
+        client.init_array_state(m), flash, wops, data=wdata
+    )
+    np.testing.assert_array_equal(np.asarray(done3), np.asarray(done4))
+    np.testing.assert_array_equal(np.asarray(fl3), np.asarray(fl4))
+
+
+@pytest.mark.parametrize("name,ecfg", [CONFIGS[0], CONFIGS[1]])
+def test_read_striped_bit_exact(name, ecfg):
+    m = 3
+    client = StorageClient(SSD, ecfg)
+    flash = _flash()
+    lba, t, valid, tenant = _batch(n=29, seed=3)   # ragged tail stripe
+    st1, data1, done1 = client.read_striped(
+        client.init_array_state(m), flash, lba, t, valid,
+        stripe_width=2, tenant=tenant,
+    )
+    ops = StorageOps.make(lba, t, tenant=tenant, valid=valid)
+    st2, _, data2, done2 = client.submit_striped(
+        client.init_array_state(m), flash, ops, stripe_width=2,
+        with_data=True,
+    )
+    np.testing.assert_array_equal(np.asarray(done1), np.asarray(done2))
+    np.testing.assert_array_equal(np.asarray(data1), np.asarray(data2))
+
+
+@pytest.mark.parametrize("name,ecfg", [CONFIGS[0], CONFIGS[1]])
+def test_read_replicated_r1_bit_exact_vs_submit_array(name, ecfg):
+    """With replicas=1 routing is deterministic (drive = lba % M), so
+    the wrapper must equal a hand-scattered submit_array op batch."""
+    m, n = 2, 20
+    client = StorageClient(SSD, ecfg)
+    flash = _flash()
+    lba, t, valid, tenant = _batch(n=n, seed=4)
+    st1, data1, done1 = client.read_replicated(
+        client.init_array_state(m), flash, lba, t, valid, replicas=1,
+        tenant=tenant,
+    )
+
+    drive = jnp.where(valid, lba % m, m)
+    rank = segment_rank(drive)
+    row = jnp.clip(drive, 0, m - 1)
+    col = jnp.where(valid, rank, n)
+
+    def scat(x, fill, dtype):
+        base = jnp.full((m, n), fill, dtype)
+        return base.at[row, col].set(x, mode="drop")
+
+    ops = StorageOps(
+        opcode=scat(jnp.zeros((n,), jnp.int32), 0, jnp.int32),
+        lba=scat(lba, 0, jnp.int32),
+        t_submit=scat(t, 0.0, jnp.float32),
+        tenant=scat(tenant, 0, jnp.int32),
+        valid=scat(valid, False, bool),
+    )
+    _, _, _, done2d = client.submit_array(
+        client.init_array_state(m), flash, ops
+    )
+    done2 = jnp.where(
+        valid, done2d[row, jnp.clip(col, 0, n - 1)], 0.0
+    )
+    np.testing.assert_array_equal(np.asarray(done1), np.asarray(done2))
+    np.testing.assert_array_equal(
+        np.asarray(data1), np.asarray(flash[jnp.where(valid, lba, 0)])
+    )
+
+
+def test_mixed_batch_reads_observe_writes():
+    """One submit may mix opcodes/tenants: the functional gather sees
+    this batch's writes, and every valid op completes."""
+    client = StorageClient(SSD, LOCAL)
+    flash = _flash()
+    n = 16
+    lba = jnp.arange(n, dtype=jnp.int32)
+    opcode = jnp.asarray([OP_WRITE, 0] * (n // 2), jnp.int32)
+    tenant = jnp.asarray([1, 0] * (n // 2), jnp.int32)
+    ops = StorageOps.make(lba, 0.0, opcode=opcode, tenant=tenant)
+    data = jnp.full((n, 16), -5.0)
+    _, flash2, out, done = client.submit(
+        client.init_state(), flash, ops, data=data, with_data=True
+    )
+    # Write slots landed; the batch-level gather reflects them.
+    np.testing.assert_array_equal(
+        np.asarray(flash2[0]), np.full((16,), -5.0)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out[::2]), np.full((n // 2, 16), -5.0)
+    )
+    assert float(jnp.min(done)) > 0.0
+
+
+def test_wrapper_kwargs_are_uniform():
+    """Every entry point accepts the same (t_submit=0.0, valid=None,
+    tenant=0) keyword surface — the API-unification satellite."""
+    import inspect
+
+    for name in ("read", "write", "read_array", "write_array",
+                 "read_striped", "read_replicated"):
+        params = inspect.signature(
+            getattr(StorageClient, name)
+        ).parameters
+        assert params["t_submit"].default == 0.0, name
+        assert params["valid"].default is None, name
+        assert params["tenant"].default == 0, name
+
+
+def test_direct_aliases_warn_deprecation():
+    from repro.core.types import PlatformModel
+
+    pipe = DevicePipeline(LOCAL, SSD, PlatformModel())
+    t = jnp.zeros((8,), jnp.float32)
+    valid = jnp.ones((8,), bool)
+    batch = make_direct_batch(jnp.arange(8, dtype=jnp.int32), t, valid)
+    with pytest.warns(DeprecationWarning, match="fetch_direct"):
+        pipe.fetch_direct(pipe.init_state(), t, valid)
+    with pytest.warns(DeprecationWarning, match="submit_direct"):
+        pipe.submit_direct(pipe.init_state(), batch)

@@ -139,7 +139,9 @@ def test_engine_neutral_qp_matches_no_cq_pipeline():
         jnp.float32(1.0),
     )
     st = pipe.init_state()
-    st1, fetch_done, unit = pipe.fetch_direct(st, batch.arrival, batch.valid)
+    st1, fetch_done, unit = pipe._fetch_direct(
+        st, batch.arrival, batch.valid
+    )
     out_cq, cq, res_cq = pipe.process(st1, batch, fetch_done, unit,
                                       pipe.init_cq())
     out_no, none_cq, res_no = pipe.process(st1, batch, fetch_done, unit)
