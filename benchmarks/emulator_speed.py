@@ -13,17 +13,25 @@ wall-second** across three configs:
 Each config runs three variants:
 
   * ``seed``             — the pre-optimization path (no buffer donation,
-                           per-stage sorts: ``use_sort_plan=False``);
-  * ``optimized``        — donated state buffers + the epoch sort plan;
+                           per-stage sorts and segmented reductions:
+                           ``use_sort_plan=False, use_compaction=False``);
+  * ``optimized``        — donated state buffers + the epoch sort plan +
+                           the PR-8 compaction paths (sort-free timing
+                           layout, counting-sorted flash/lanes, block CQ
+                           ranks, fused ring scatters);
   * ``optimized_pallas`` — optimized plus the Pallas segmented-scan
                            queueing core (``use_pallas_segscan=True``).
 
 Every variant is timed for ``--reps`` repetitions *post-warmup*, chaining
 the state through (``st = runner(st)``) so donation is observable; each
-rep records its own wall seconds and requests retired. Results persist to
-``BENCH_emulator_speed.json`` at the repo root (schema documented in the
-README's "Emulator speed" section) and a CSV summary row per
-config/variant flows through ``benchmarks/run.py``.
+rep records its own wall seconds and requests retired. Each (config,
+variant) gets its own two-invocation warmup — compile plus one dispatch
+on already-device-resident state — and rep 0 is sanity-checked at
+``<= 3x`` the rep median (a violation means compile or retrace leaked
+into the timed region; it is recorded in the JSON and warned about, not
+fatal). Results persist to ``BENCH_emulator_speed.json`` at the repo
+root (schema documented in the README's "Emulator speed" section) and a
+CSV summary row per config/variant flows through ``benchmarks/run.py``.
 
     PYTHONPATH=src python -m benchmarks.emulator_speed [--quick]
 """
@@ -51,11 +59,28 @@ JSON_PATH = os.path.join(
 
 # variant name -> (EngineConfig field overrides, donate buffers?)
 VARIANTS = [
-    ("seed", dict(use_sort_plan=False, use_pallas_segscan=False), False),
-    ("optimized", dict(use_sort_plan=True, use_pallas_segscan=False), True),
+    (
+        "seed",
+        dict(
+            use_sort_plan=False, use_compaction=False,
+            use_pallas_segscan=False,
+        ),
+        False,
+    ),
+    (
+        "optimized",
+        dict(
+            use_sort_plan=True, use_compaction=True,
+            use_pallas_segscan=False,
+        ),
+        True,
+    ),
     (
         "optimized_pallas",
-        dict(use_sort_plan=True, use_pallas_segscan=True),
+        dict(
+            use_sort_plan=True, use_compaction=True,
+            use_pallas_segscan=True,
+        ),
         True,
     ),
 ]
@@ -97,9 +122,13 @@ def time_variant(cfg, ssd, wl, rounds, num_devices, donate, reps):
     """Warm up one runner, then time ``reps`` chained invocations.
 
     Returns the per-rep records plus the final state (for virtual-time
-    metrics). The warmup call pays compile + first dispatch and is never
-    timed; reps feed each call's output back in, which is exactly the
-    regime buffer donation optimizes.
+    metrics). Two warmup calls pay compile + first dispatch and are never
+    timed — the second catches any retrace triggered by the first call's
+    *output* avals differing from ``init_state``'s (the historical rep-0
+    contamination: a weak-typed leaf in ``Metrics.zero`` silently forced
+    a second compile inside the first timed rep). Reps feed each call's
+    output back in, which is exactly the regime buffer donation
+    optimizes.
     """
     plat = PlatformModel()
     if num_devices == 1:
@@ -112,7 +141,8 @@ def time_variant(cfg, ssd, wl, rounds, num_devices, donate, reps):
                                           donate=donate)
     if donate:
         st = engine.unalias(st)
-    st = jax.block_until_ready(runner(st))  # warmup: compile + run
+    st = jax.block_until_ready(runner(st))  # warmup 1: compile + run
+    st = jax.block_until_ready(runner(st))  # warmup 2: steady-state avals
     rep_records = []
     for _ in range(reps):
         before = _completed(st)
@@ -144,12 +174,24 @@ def bench(quick: bool = False, reps: int | None = None):
                 spec["num_devices"], donate, reps,
             )
             best = max(r["req_per_wall_s"] for r in recs)
+            walls = sorted(r["wall_s"] for r in recs)
+            median_wall = walls[len(walls) // 2]
+            rep0_clean = recs[0]["wall_s"] <= 3.0 * median_wall
+            if not rep0_clean:
+                print(
+                    f"  WARN: {name}/{vname} rep 0 took "
+                    f"{recs[0]['wall_s']:.3f}s vs median "
+                    f"{median_wall:.3f}s — compile/retrace leaked into "
+                    f"the timed region"
+                )
             variants[vname] = {
                 "donate": donate,
                 "use_sort_plan": overrides["use_sort_plan"],
+                "use_compaction": overrides["use_compaction"],
                 "use_pallas_segscan": overrides["use_pallas_segscan"],
                 "reps": recs,
                 "req_per_wall_s": best,  # best-of-reps (noise floor)
+                "rep0_clean": rep0_clean,  # rep 0 <= 3x median wall_s
                 "virtual_miops": float(engine.aggregate_iops(st)) / 1e6,
             }
             rows.append([

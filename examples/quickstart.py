@@ -176,18 +176,22 @@ for label, weights in [("fifo", ()), ("wfq 4:1", (4.0, 1.0))]:
 #     throughput (emulated time), while how fast the engine retires
 #     emulated requests per *real* second is what
 #     `benchmarks/emulator_speed.py` measures (full matrix ->
-#     BENCH_emulator_speed.json). Two EngineConfig flags gate the fast
-#     path: use_sort_plan (default on) computes each epoch's segment
+#     BENCH_emulator_speed.json). EngineConfig gates the fast path:
+#     use_sort_plan (default on) computes each epoch's segment
 #     order/heads/rank once and reuses it across the unit, CQ, and
-#     fabric sorts; use_pallas_segscan (default off) routes the
-#     queueing recurrence through the Pallas segmented-scan kernel.
-#     Both are bit-exact in virtual time (tests/test_emulator_speed.py).
-#     donate=True lets XLA reuse the state buffers in place — donated
-#     inputs must not alias, so deep-copy fresh states with
-#     engine.unalias before the first call.
+#     fabric sorts; use_compaction (default on) adds the sort-free
+#     epoch-compacted forms (dense round-robin timing layout,
+#     counting-sorted flash/lanes, block CQ ranks, fused ring
+#     scatters); use_pallas_segscan (default None = auto) routes the
+#     queueing recurrence through the Pallas segmented-scan kernel
+#     whenever types.integer_timestamps proves it bit-exact for this
+#     platform. All are bit-exact in virtual time
+#     (tests/test_emulator_speed.py). donate=True lets XLA reuse the
+#     state buffers in place — donated inputs must not alias, so
+#     deep-copy fresh states with engine.unalias before the first call.
 from repro.core.types import PlatformModel
 
-fast_cfg = cfg.replace(use_sort_plan=True)  # the default, shown explicit
+fast_cfg = cfg.replace(use_compaction=True)  # the default, shown explicit
 runner = engine.make_runner(fast_cfg, ssd, wl, PlatformModel(), rounds=8,
                             donate=True)
 st = engine.unalias(engine.init_state(fast_cfg, ssd, wl))

@@ -52,7 +52,12 @@ def best_virtual_miops(csv_path: Path) -> float:
 
 
 def advisory_wallclock(json_path: Path, floor: float) -> None:
-    """Log (never fail) the wall-clock floor from the speed benchmark."""
+    """Log (never fail) the wall-clock floor from the speed benchmark.
+
+    Also reports each config's optimized-vs-seed (and +pallas-vs-seed)
+    speedup ratio so a collapsing optimization shows up in the CI log
+    even while absolute rates drift with the runner hardware.
+    """
     if not json_path.exists():
         print(f"note: {json_path} missing — wall-clock advisory skipped")
         return
@@ -67,6 +72,13 @@ def advisory_wallclock(json_path: Path, floor: float) -> None:
         )
         if rate > best:
             best, best_cfg = rate, cfg["name"]
+        opt = cfg.get("speedup_optimized_vs_seed")
+        pal = cfg.get("speedup_optimized_pallas_vs_seed")
+        print(
+            f"note (advisory): {cfg['name']} optimized-vs-seed "
+            f"{f'{opt:.2f}x' if opt else 'n/a'}, +pallas "
+            f"{f'{pal:.2f}x' if pal else 'n/a'}"
+        )
     verdict = "OK" if best >= floor else "WARN"
     print(
         f"{verdict} (advisory): best optimized wall-clock rate "

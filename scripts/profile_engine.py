@@ -11,9 +11,18 @@ Two views of where the emulator's wall-clock goes:
     the full ``engine_round`` — so stage costs and their sum can be
     compared against the fused round.
 
+Stage closures honor the config's compaction/Pallas flags exactly as
+``DevicePipeline.process`` threads them, so the table reflects the
+pipeline actually being benchmarked. ``--assert-shares`` turns the table
+into a CI smoke gate: exit 1 if any of the historical hot stages
+(timing, flash, qp) exceeds ``--max-share`` of a full engine round —
+the regression signature PR 8 optimized away. ``--no-trace`` skips the
+profiler trace for fast smoke runs.
+
     PYTHONPATH=src python scripts/profile_engine.py \
         [--config local_1drive|array_4drive|remote_qos] \
-        [--rounds N] [--reps N] [--outdir DIR]
+        [--rounds N] [--reps N] [--outdir DIR] \
+        [--no-trace] [--assert-shares] [--max-share F]
 """
 from __future__ import annotations
 
@@ -52,6 +61,11 @@ def stage_table(spec, reps: int):
     pipe = DevicePipeline(cfg, ssd, plat)
     st = engine.init_state(cfg, ssd, wl)
     unit = frontend.fetch_row_units(cfg)
+    # Resolve the flags the same way DevicePipeline.process does, so the
+    # isolated-stage closures time the code path the engine actually runs
+    # (use_pallas_segscan may be None = auto).
+    pallas = cfg.resolve_pallas_segscan(ssd, plat)
+    compact = cfg.use_compaction
 
     fetch_fn = jax.jit(lambda s: frontend.fetch(
         s.rings, s.clock, s.device.disp_time, cfg, plat
@@ -62,7 +76,9 @@ def stage_table(spec, reps: int):
 
     rows = [("frontend.fetch", _timeit(fetch_fn, st, reps=reps))]
     rows.append(("timing.update", _timeit(
-        jax.jit(lambda ts, b: timing.update(ts, b, ssd, cfg.mode)),
+        jax.jit(lambda ts, b: timing.update(
+            ts, b, ssd, cfg.mode, use_compaction=compact
+        )),
         dev.tstate, tbatch, reps=reps,
     )))
     if cfg.batched_datapath:
@@ -75,14 +91,17 @@ def stage_table(spec, reps: int):
     else:
         rows.append(("datapath.baseline_worker_times", _timeit(
             jax.jit(lambda w, m, fd, b: datapath.baseline_worker_times(
-                w, m, fd, b, cfg, plat, ssd, unit=unit
+                w, m, fd, b, cfg, plat, ssd, unit=unit,
+                use_counting_sort=compact,
             )),
             dev.work_time, dev.map_time, fetch_done, batch, reps=reps,
         )))
     if ssd.flash_backend:
         rows.append(("flash.flash_stage", _timeit(
             jax.jit(lambda f, b, a: flash.flash_stage(
-                f, b, a, a, ssd, use_pallas=cfg.use_pallas_segscan
+                f, b, a, a, ssd, use_pallas=pallas,
+                use_counting_sort=compact,
+                use_pallas_flash=cfg.use_pallas_flash,
             )),
             dev.flash, batch, fetch_done, reps=reps,
         )))
@@ -90,12 +109,16 @@ def stage_table(spec, reps: int):
         jax.jit(lambda c, b, d: qp.post_and_reap(
             c, b.sq_id, d, b.req_id, b.valid, cfg.qp,
             fused_sort=cfg.use_sort_plan,
-            use_pallas=cfg.use_pallas_segscan,
+            use_pallas=pallas,
+            fused_scatter=compact,
+            use_pallas_reap=cfg.use_pallas_reap,
         )),
         st.cq, batch, fetch_done, reps=reps,
     )))
     rows.append(("pipeline.process (stages 2-5)", _timeit(
-        jax.jit(lambda d, b, fd, c: pipe.process(d, b, fd, unit, c)),
+        jax.jit(lambda d, b, fd, c: pipe.process(
+            d, b, fd, unit, c, ring_layout=True
+        )),
         dev, batch, fetch_done, st.cq, reps=reps,
     )))
     rows.append(("engine_round (full)", _timeit(
@@ -105,7 +128,13 @@ def stage_table(spec, reps: int):
     return rows
 
 
-def main() -> None:
+# Stages whose share of a full round ``--assert-shares`` gates on: the
+# three that dominated the seed profile (and that PR 8's compaction /
+# fused-kernel work targeted).
+HOT_STAGES = ("timing.update", "flash.flash_stage", "qp.post_and_reap")
+
+
+def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--config", default="local_1drive",
                     choices=[s["name"] for s in _configs(quick=True)])
@@ -115,6 +144,15 @@ def main() -> None:
                     help="timed repetitions per stage closure")
     ap.add_argument("--outdir", default="experiments/profile",
                     help="jax.profiler trace output directory")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jax.profiler trace (fast smoke)")
+    ap.add_argument("--assert-shares", action="store_true",
+                    help="exit 1 if any hot stage (timing/flash/qp) "
+                         "exceeds --max-share of a full engine round")
+    ap.add_argument("--max-share", type=float, default=0.5,
+                    help="per-stage share ceiling for --assert-shares "
+                         "(fraction of engine_round; generous by design "
+                         "— CI machines are noisy)")
     args = ap.parse_args()
 
     spec = next(s for s in _configs(quick=False)
@@ -124,21 +162,25 @@ def main() -> None:
     C.jit_warmup()
 
     # -- trace one post-warmup steady-state runner invocation --------------
-    m = spec["num_devices"]
-    if m == 1:
-        st = engine.init_state(cfg, ssd, wl)
-        runner = engine.make_runner(cfg, ssd, wl, plat, args.rounds)
-    else:
-        st = engine.init_array_state(cfg, ssd, wl, m)
-        runner = engine.make_array_runner(cfg, ssd, wl, plat, args.rounds)
-    st = jax.block_until_ready(runner(st))  # warmup/compile round
-    Path(args.outdir).mkdir(parents=True, exist_ok=True)
-    try:
-        with jax.profiler.trace(args.outdir):
-            st = jax.block_until_ready(runner(st))
-        print(f"trace: 1 x {args.rounds}-round invocation -> {args.outdir}")
-    except Exception as e:  # noqa: BLE001 — profiling is best-effort
-        print(f"trace: SKIPPED ({type(e).__name__}: {e})")
+    if not args.no_trace:
+        m = spec["num_devices"]
+        if m == 1:
+            st = engine.init_state(cfg, ssd, wl)
+            runner = engine.make_runner(cfg, ssd, wl, plat, args.rounds)
+        else:
+            st = engine.init_array_state(cfg, ssd, wl, m)
+            runner = engine.make_array_runner(
+                cfg, ssd, wl, plat, args.rounds
+            )
+        st = jax.block_until_ready(runner(st))  # warmup/compile round
+        Path(args.outdir).mkdir(parents=True, exist_ok=True)
+        try:
+            with jax.profiler.trace(args.outdir):
+                st = jax.block_until_ready(runner(st))
+            print(f"trace: 1 x {args.rounds}-round invocation -> "
+                  f"{args.outdir}")
+        except Exception as e:  # noqa: BLE001 — profiling is best-effort
+            print(f"trace: SKIPPED ({type(e).__name__}: {e})")
 
     # -- per-stage cost table ----------------------------------------------
     print(f"\nper-stage cost, config={args.config} "
@@ -150,6 +192,21 @@ def main() -> None:
         print(f"  {name:<{width}}  {dt * 1e6:>10.1f} us/call "
               f"({dt / total * 100:5.1f}% of a round)")
 
+    if args.assert_shares:
+        bad = [
+            (name, dt / total)
+            for name, dt in rows
+            if name in HOT_STAGES and dt / total > args.max_share
+        ]
+        if bad:
+            for name, share in bad:
+                print(f"FAIL: {name} is {share * 100:.1f}% of a round "
+                      f"(ceiling {args.max_share * 100:.0f}%)")
+            return 1
+        print(f"OK: all hot stages <= {args.max_share * 100:.0f}% "
+              f"of a round ({', '.join(HOT_STAGES)})")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

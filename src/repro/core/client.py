@@ -197,8 +197,10 @@ class StorageClient:
                 rings, clock, dev.disp_time, cfg, plat
             )
             dev = dataclasses.replace(dev, disp_time=disp_time)
+            # Ring-fetched batches are SQ-major (the same promise the
+            # engine round relies on), so compaction's block tricks hold.
             dev, cq, res = pipe.process(
-                dev, batch, fetch_done, row_unit, cq
+                dev, batch, fetch_done, row_unit, cq, ring_layout=True
             )
             idx = jnp.where(batch.valid, batch.req_id, n)
             done = done.at[idx].set(res.reaped, mode="drop")

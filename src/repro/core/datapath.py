@@ -19,7 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.segops import queueing_scan, segment_rank
+from repro.core.segops import counting_sort_plan, queueing_scan, segment_rank
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
@@ -78,6 +78,7 @@ def baseline_worker_times(
     ssd: SSDConfig,
     unit: jax.Array | None = None,   # (N,) non-decreasing service-unit ids
     unit_rank: jax.Array | None = None,  # (N,) within-unit rank (epoch plan)
+    use_counting_sort: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """NVMeVirt backend: per-request map/unmap + CPU copy, W lanes per unit.
 
@@ -90,10 +91,12 @@ def baseline_worker_times(
     ``unit_rank`` (``DevicePipeline.process``'s epoch sort plan) supplies
     the within-unit ranks precomputed without a sort; omitted, they are
     recovered from ``unit`` via ``segment_rank`` (a full stable sort).
+    ``use_counting_sort`` swaps the stable lane sort for the
+    bit-identical counting-sort plan (the lane alphabet is u*w, small).
     """
     u, w = work_time.shape
     n = fetch_done.shape[0]
-    pallas = cfg.use_pallas_segscan
+    pallas = cfg.resolve_pallas_segscan(ssd, plat)
     txn, bw = _p2p(cfg, plat)
     idx = jnp.arange(n, dtype=jnp.int32)
     if unit is None:
@@ -117,10 +120,14 @@ def baseline_worker_times(
     cost = txn + _bytes(batch, ssd) / bw
     cost = jnp.where(batch.valid, cost, 0.0)
     lane = unit * w + (rank_in_unit % w)            # global lane id
-    order = jnp.argsort(lane, stable=True)
-    heads = jnp.concatenate(
-        [jnp.ones((1,), bool), lane[order][1:] != lane[order][:-1]]
-    )
+    if use_counting_sort:
+        plan = counting_sort_plan(lane, u * w)
+        order, heads = plan.order, plan.heads
+    else:
+        order = jnp.argsort(lane, stable=True)
+        heads = jnp.concatenate(
+            [jnp.ones((1,), bool), lane[order][1:] != lane[order][:-1]]
+        )
     seed = work_time.reshape(-1)[lane[order]]
     busy = queueing_scan(
         mapped[order], cost[order], heads, seed, use_pallas=pallas

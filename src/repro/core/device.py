@@ -207,6 +207,7 @@ class DevicePipeline:
         fetch_done: jax.Array,  # (N,) per-row fetch completion times
         unit: jax.Array,        # (N,) i32 non-decreasing service-unit ids
         cq: CQRings | None = None,
+        ring_layout: bool = False,
     ) -> Tuple[DeviceState, CQRings | None, PipelineResult]:
         """Timing model under the global lock, then the backend data path,
         then the flash-level backend (writes/GC/mapping misses), then the
@@ -215,7 +216,15 @@ class DevicePipeline:
         ``result.reaped`` is the consumer-observed completion time.
 
         ``cq=None`` (test-only) skips stage 5: ``reaped`` is the wire-
-        returned completion with no CQ machinery on top."""
+        returned completion with no CQ machinery on top.
+
+        ``ring_layout=True`` promises the batch came from the SQ-ring
+        gather (``frontend._gather_entries``): rows are SQ-major with
+        exactly ``cfg.fetch_width`` rows per SQ and ``N // num_units``
+        rows per unit, so the compaction path may replace segmented
+        reductions with fixed-width block reductions. The engine and
+        client set it; the test-only direct path (whose ``sq_id`` is all
+        zero) must not."""
         cfg, ssd, plat = self.cfg, self.ssd, self.plat
         fab = cfg.fabric
         u = state.num_units
@@ -227,13 +236,25 @@ class DevicePipeline:
         # non-decreasing: their segment layouts need no sort at all, and
         # the time-major fabric/CQ sorts fuse into one lexicographic
         # pass. Virtual time is identical either way (parity-tested).
+        # ``use_compaction`` (PR 8) layers the epoch-compacted forms on
+        # top: block-wise CQ ranks/counts and unit reductions (ring
+        # layout only), the dense round-robin timing matrix, the
+        # counting-sorted flash layout, and fused ring scatters — all
+        # bit-exact, pinned by full-run parity tests.
         use_plan = cfg.use_sort_plan
-        pallas = cfg.use_pallas_segscan
+        compact = cfg.use_compaction
+        blocky = compact and ring_layout
+        pallas = cfg.resolve_pallas_segscan(ssd, plat)
         unit_rank = segops.presorted_plan(unit).rank if use_plan else None
-        cq_rank = (
-            segops.masked_presorted_rank(batch.sq_id, valid)
-            if use_plan else None
-        )
+        if blocky:
+            cq_rank = segops.block_masked_rank(valid, cfg.fetch_width)
+            cq_counts = segops.block_counts(valid, cfg.fetch_width)
+        else:
+            cq_rank = (
+                segops.masked_presorted_rank(batch.sq_id, valid)
+                if use_plan else None
+            )
+            cq_counts = None
 
         # -- stage 1.5: fabric TX hop (remote drives only). Fetched SQEs
         # (plus write payloads) cross the wire before the target-side
@@ -255,13 +276,22 @@ class DevicePipeline:
                 fused_sort=use_plan, use_pallas=pallas,
             )
 
-        # -- stage 2a: global timing-model lock.
-        n_valid_u = jax.ops.segment_sum(
-            valid.astype(jnp.int32), unit, num_segments=u
-        )
-        batch_ready = jax.ops.segment_max(
-            jnp.where(valid, fetch_done, 0.0), unit, num_segments=u
-        )
+        # -- stage 2a: global timing-model lock. Under the ring layout
+        # units are fixed-width row blocks (frontend.fetch_row_units), so
+        # the segment reductions collapse to row-wise reshapes (integer
+        # sums and maxes — exact under any association).
+        if blocky:
+            n_valid_u = segops.block_counts(valid, valid.shape[0] // u)
+            batch_ready = jnp.max(
+                jnp.where(valid, fetch_done, 0.0).reshape(u, -1), axis=1
+            )
+        else:
+            n_valid_u = jax.ops.segment_sum(
+                valid.astype(jnp.int32), unit, num_segments=u
+            )
+            batch_ready = jax.ops.segment_max(
+                jnp.where(valid, fetch_done, 0.0), unit, num_segments=u
+            )
         lock_time, lock_done = lock_pass(
             state.lock_time, batch_ready, n_valid_u, cfg, plat
         )
@@ -272,19 +302,30 @@ class DevicePipeline:
         tbatch = dataclasses.replace(batch, arrival=arrival)
         if cfg.timing_scope == "local":
             tstate, target = timing.local_scope_update(
-                state.tstate, arrival, valid, ssd, u
+                state.tstate, arrival, valid, ssd, u,
+                use_compaction=compact,
             )
         else:
-            tstate, target = timing.update(state.tstate, tbatch, ssd, cfg.mode)
+            tstate, target = timing.update(
+                state.tstate, tbatch, ssd, cfg.mode, use_compaction=compact
+            )
 
         # -- stage 3: backend data transfer.
         if cfg.batched_datapath:
             # DSA engine also carried the fetch transfer (engine sharing /
             # interference, paper Fig. 9b): bump cursors by fetch bytes.
-            fetch_bytes_u = jax.ops.segment_sum(
-                jnp.where(valid, jnp.float32(plat.sqe_bytes), 0.0),
-                unit, num_segments=u,
-            )
+            # count * sqe_bytes == the segment_sum of the constant bit-
+            # for-bit: every partial sum of equal integer-valued f32
+            # terms below 2^24 is exact under any association.
+            if blocky:
+                fetch_bytes_u = n_valid_u.astype(jnp.float32) * jnp.float32(
+                    plat.sqe_bytes
+                )
+            else:
+                fetch_bytes_u = jax.ops.segment_sum(
+                    jnp.where(valid, jnp.float32(plat.sqe_bytes), 0.0),
+                    unit, num_segments=u,
+                )
             dsa_time0 = state.dsa_time + fetch_bytes_u / plat.dsa_bytes_per_us
             dsa_time, ready = datapath.dsa_worker_times(
                 dsa_time0, arrival, batch, cfg, plat, ssd, unit=unit
@@ -294,13 +335,16 @@ class DevicePipeline:
             work_time, map_time, ready = datapath.baseline_worker_times(
                 state.work_time, state.map_time, arrival, batch, cfg, plat,
                 ssd, unit=unit, unit_rank=unit_rank,
+                use_counting_sort=compact,
             )
             dsa_time = state.dsa_time
 
         # -- stage 4: flash-level backend (writes, GC, mapping misses).
         if ssd.flash_backend:
             fstate, flash_done = flash_stage(
-                state.flash, batch, arrival, target, ssd, use_pallas=pallas
+                state.flash, batch, arrival, target, ssd, use_pallas=pallas,
+                use_counting_sort=compact,
+                use_pallas_flash=cfg.use_pallas_flash,
             )
         else:
             fstate, flash_done = state.flash, jnp.where(valid, arrival, 0.0)
@@ -346,6 +390,8 @@ class DevicePipeline:
             cq, reaped = qp.post_and_reap(
                 cq, batch.sq_id, wire_done, batch.req_id, valid, cfg.qp,
                 posted_rank=cq_rank, fused_sort=use_plan, use_pallas=pallas,
+                posted_counts=cq_counts, fused_scatter=compact,
+                use_pallas_reap=cfg.use_pallas_reap,
             )
         return new_state, cq, PipelineResult(
             arrival=arrival, target=target, ready=ready,

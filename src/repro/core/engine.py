@@ -114,8 +114,13 @@ class Metrics:
     @staticmethod
     def zero(num_tenants: int = 1) -> "Metrics":
         z = jnp.float32(0)
+        # first_submit must be a *strong* f32: a python-float FAR would
+        # make the fresh state weakly typed where a runner's output state
+        # is strong — an aval mismatch that silently recompiled the jit
+        # runner on the first benchmark rep (the rep-0 "compile" outlier
+        # was mostly this second trace, not the warmup's).
         return Metrics(
-            z, z, z, z, z, jnp.float32(0), FAR,
+            z, z, z, z, z, jnp.float32(0), jnp.float32(FAR),
             jnp.zeros((HIST_BUCKETS,), jnp.float32), z,
             jnp.zeros((num_tenants,), jnp.float32),
             jnp.zeros((num_tenants,), jnp.float32),
@@ -214,6 +219,7 @@ def init_state(
     rings = frontend.submit_grouped(
         rings, pre.submit, pre.opcode, pre.lba, pre.nblocks, buf_id,
         pre.req_id, pre.valid, tenant=pre.tenant,
+        fused=cfg.use_compaction,
     )
 
     nb = ssd.num_blocks if cfg.emulate_data else 1
@@ -275,7 +281,11 @@ def engine_round(
 
     # -- 2-5. the unified device pipeline (timing + data path + QP) ----------
     dev = dataclasses.replace(state.device, disp_time=disp_time)
-    dev, cqr, res = pipe.process(dev, batch, fetch_done, unit, state.cq)
+    # Fetched batches are SQ-major with fetch_width rows per SQ — the
+    # ring-layout promise that lets compaction use block reductions.
+    dev, cqr, res = pipe.process(
+        dev, batch, fetch_done, unit, state.cq, ring_layout=True
+    )
 
     # -- completion metrics: the consumer observes ``reaped`` (post-CQ) ------
     valid = batch.valid
@@ -418,6 +428,7 @@ def engine_round(
         pick(new_req),
         pick(resub_valid),
         tenant=pick(tenant_rows),
+        fused=cfg.use_compaction,
     )
 
     # -- clock advance --------------------------------------------------------

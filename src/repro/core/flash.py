@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.segops import (
     NEG,
+    counting_positions,
     hash_u32,
     queueing_scan,
     sort_by_segment,
@@ -100,6 +101,10 @@ def mapping_miss(
     request-id streams coincide. ``mapping_hit_rate=1.0`` can never
     miss — ``uniform01`` is open at 1.0.
     """
+    if ssd.mapping_hit_rate >= 1.0:
+        # Static shortcut: ``uniform01`` is open at 1.0, so a fully
+        # cached mapping table can never miss — skip the hash entirely.
+        return jnp.zeros_like(batch.valid)
     is_read = batch.valid & (batch.opcode != OP_WRITE)
     h = hash_u32(
         batch.req_id.astype(jnp.uint32)
@@ -116,6 +121,8 @@ def flash_stage(
     target: jax.Array,    # (N,) f32 stage-2 timing-model completions
     ssd: SSDConfig,
     use_pallas: bool = False,
+    use_counting_sort: bool = False,
+    use_pallas_flash: bool = False,
 ) -> Tuple[FlashState, jax.Array]:
     """Price one epoch's flash-level events. Returns (state', flash_done).
 
@@ -132,6 +139,15 @@ def flash_stage(
 
     Die cursors only ever move forward: events advance them via a
     per-chip queueing scan, GC adds non-negative stolen time.
+
+    ``use_counting_sort`` (PR 8) swaps the stable die sort for the
+    bit-identical ``segops.counting_positions`` layout (the die alphabet
+    is small) plus one stacked scatter and a gather-side unsort — same
+    permutation, same scan, same times. ``use_pallas_flash`` routes the
+    whole contention pass (sort + scan + cursor max) through the
+    ``kernels/ops`` sequential die-contention kernel; like the segscan
+    kernel it is bit-exact on integer-valued timestamps (it folds the
+    recurrence sequentially instead of re-associating the scan).
     """
     k = ssd.num_chips
     valid = batch.valid
@@ -154,21 +170,57 @@ def flash_stage(
     # Queue event rows per die (dispatch order within a die); rows without
     # an event sort into a trailing pseudo-segment and touch nothing.
     key = jnp.where(event, chip, jnp.int32(k))
-    order, heads, _ = sort_by_segment(key)
-    safe = jnp.clip(key[order], 0, k - 1)
-    busy_sorted = queueing_scan(
-        arrival[order], cost[order], heads, fstate.chip_busy[safe],
-        use_pallas=use_pallas,
-    )
-    busy = jnp.zeros_like(busy_sorted).at[order].set(busy_sorted)
-    chip_busy = jnp.maximum(
-        fstate.chip_busy,
-        jax.ops.segment_max(
-            jnp.where(event, busy, NEG),
-            jnp.clip(key, 0, k - 1),
-            num_segments=k,
-        ),
-    )
+    if use_pallas_flash:
+        from repro.kernels import ops as kops  # lazy: pulls in pallas
+
+        busy, new_cursors = kops.die_contention(
+            arrival, cost, jnp.clip(key, 0, k - 1), event,
+            fstate.chip_busy,
+        )
+        chip_busy = new_cursors
+    elif use_counting_sort:
+        # Counting-sort layout: same stable segment-major permutation as
+        # the sort (segops.counting_positions), with the three sorted-
+        # side gathers fused into one stacked scatter and the unsort
+        # done as a gather by the (inverse) position permutation.
+        position, rank_in_key, _, _ = counting_positions(key, k + 1)
+        page = jnp.stack(
+            [
+                arrival,
+                cost,
+                fstate.chip_busy[jnp.clip(key, 0, k - 1)],
+                (rank_in_key == 0).astype(jnp.float32),
+            ],
+            axis=-1,
+        )
+        n = key.shape[0]
+        s = jnp.zeros((n, 4), jnp.float32).at[position].set(page)
+        busy_sorted = queueing_scan(
+            s[:, 0], s[:, 1], s[:, 3] > 0.0, s[:, 2],
+            use_pallas=use_pallas,
+        )
+        busy = busy_sorted[position]
+    else:
+        order, heads, _ = sort_by_segment(key)
+        safe = jnp.clip(key[order], 0, k - 1)
+        busy_sorted = queueing_scan(
+            arrival[order], cost[order], heads, fstate.chip_busy[safe],
+            use_pallas=use_pallas,
+        )
+        busy = jnp.zeros_like(busy_sorted).at[order].set(busy_sorted)
+    if not use_pallas_flash:
+        # Kept on the original layout even under compaction: the scan's
+        # per-row busy values are not float-guaranteed monotone within a
+        # die, so "gather the last sorted row" could pick a different
+        # (tied) maximum — segment_max reproduces the reference exactly.
+        chip_busy = jnp.maximum(
+            fstate.chip_busy,
+            jax.ops.segment_max(
+                jnp.where(event, busy, NEG),
+                jnp.clip(key, 0, k - 1),
+                num_segments=k,
+            ),
+        )
 
     # Epoch-start view for non-event rows: reads contend with die work
     # scheduled in *previous* epochs but are otherwise already priced.

@@ -126,11 +126,17 @@ def submit_grouped(
     req_id: jax.Array,
     valid: jax.Array,        # (Q, F) bool
     tenant: jax.Array | None = None,  # (Q, F) i32 QoS class (None = 0)
+    fused: bool = False,
 ) -> SQRings:
     """Fast-path append: row q's valid entries go to SQ q in array order.
 
     Used by the closed-loop engine where resubmissions are naturally SQ-major.
     Rows must be pre-sorted by submit time.
+
+    ``fused`` collapses the seven per-field ring scatters into one
+    stacked (Q, F, 7) pass: the six i32 fields ride as raw bits via
+    ``bitcast_convert_type`` (scatters move bits, never arithmetic, so
+    the round-trip is exact and the rings land bit-identical).
     """
     q, f = submit_time.shape
     if tenant is None:
@@ -139,6 +145,44 @@ def submit_grouped(
     pos = (rings.tail[:, None] + offset) % rings.depth
     pos = jnp.where(valid, pos, rings.depth)  # drop invalid
     rows = jnp.broadcast_to(jnp.arange(q, dtype=jnp.int32)[:, None], (q, f))
+    tail = rings.tail + jnp.sum(valid, axis=1, dtype=jnp.int32)
+
+    if fused:
+        bits = jax.lax.bitcast_convert_type
+
+        def f32(x):
+            return bits(x, jnp.float32)
+
+        page = jnp.stack(
+            [
+                submit_time, f32(opcode), f32(lba), f32(nblocks),
+                f32(buf_id), f32(req_id), f32(tenant),
+            ],
+            axis=-1,
+        )
+        stacked = jnp.stack(
+            [
+                rings.submit_time, f32(rings.opcode), f32(rings.lba),
+                f32(rings.nblocks), f32(rings.buf_id), f32(rings.req_id),
+                f32(rings.tenant),
+            ],
+            axis=-1,
+        ).at[rows, pos].set(page, mode="drop")
+
+        def i32(x):
+            return bits(x, jnp.int32)
+
+        return dataclasses.replace(
+            rings,
+            submit_time=stacked[..., 0],
+            opcode=i32(stacked[..., 1]),
+            lba=i32(stacked[..., 2]),
+            nblocks=i32(stacked[..., 3]),
+            buf_id=i32(stacked[..., 4]),
+            req_id=i32(stacked[..., 5]),
+            tenant=i32(stacked[..., 6]),
+            tail=tail,
+        )
 
     def scat(field, val):
         return field.at[rows, pos].set(val, mode="drop")
@@ -152,7 +196,7 @@ def submit_grouped(
         buf_id=scat(rings.buf_id, buf_id),
         req_id=scat(rings.req_id, req_id),
         tenant=scat(rings.tenant, tenant),
-        tail=rings.tail + jnp.sum(valid, axis=1, dtype=jnp.int32),
+        tail=tail,
     )
 
 

@@ -93,23 +93,51 @@ def _scatter_entries(
     visible: jax.Array,
     req_id: jax.Array,
     valid: jax.Array,
+    counts: jax.Array | None = None,  # (Q,) i32 valid entries per CQ
+    fused: bool = False,
 ) -> CQRings:
-    """Write posted entries into the rings and advance the tails."""
+    """Write posted entries into the rings and advance the tails.
+
+    ``counts`` lets the caller hand in per-CQ valid counts it already
+    knows (the compacted epoch's block counts) instead of paying a
+    segment_sum. ``fused`` replaces the three ring scatters with one
+    stacked (N, 3) scatter — the i32 ``req_id`` channel rides as raw
+    bits via ``bitcast_convert_type`` (scatters move bits, never
+    arithmetic, so the round-trip is exact).
+    """
     q, d = cq.num_cqs, cq.depth
     row = jnp.clip(key, 0, q - 1)
     pos = (cq.tail[row] + rank) % d
     pos = jnp.where(valid, pos, d)  # invalid rows drop out of bounds
-    counts = jax.ops.segment_sum(
-        valid.astype(jnp.int32), key, num_segments=q + 1
-    )[:q]
+    if counts is None:
+        counts = jax.ops.segment_sum(
+            valid.astype(jnp.int32), key, num_segments=q + 1
+        )[:q]
+    # The consumer polls continuously: every entry posted this epoch
+    # is reaped within it, so the head tracks the tail.
+    if fused:
+        bits = jax.lax.bitcast_convert_type
+        page = jnp.stack(
+            [done, visible, bits(req_id, jnp.float32)], axis=-1
+        )
+        rings = jnp.stack(
+            [cq.done_time, cq.visible_time, bits(cq.req_id, jnp.float32)],
+            axis=-1,
+        ).at[row, pos].set(page, mode="drop")
+        return dataclasses.replace(
+            cq,
+            done_time=rings[..., 0],
+            visible_time=rings[..., 1],
+            req_id=bits(rings[..., 2], jnp.int32),
+            tail=cq.tail + counts,
+            head=cq.head + counts,
+        )
     return dataclasses.replace(
         cq,
         done_time=cq.done_time.at[row, pos].set(done, mode="drop"),
         visible_time=cq.visible_time.at[row, pos].set(visible, mode="drop"),
         req_id=cq.req_id.at[row, pos].set(req_id, mode="drop"),
         tail=cq.tail + counts,
-        # The consumer polls continuously: every entry posted this epoch
-        # is reaped within it, so the head tracks the tail.
         head=cq.head + counts,
     )
 
@@ -124,6 +152,9 @@ def post_and_reap(
     posted_rank: jax.Array | None = None,  # (N,) epoch-plan CQ ranks
     fused_sort: bool = False,
     use_pallas: bool = False,
+    posted_counts: jax.Array | None = None,  # (Q,) per-CQ valid counts
+    fused_scatter: bool = False,
+    use_pallas_reap: bool = False,
 ) -> Tuple[CQRings, jax.Array]:
     """Post one epoch's completions and reap them. Returns (cq', reaped).
 
@@ -136,7 +167,13 @@ def post_and_reap(
     path's per-CQ ranks from its epoch sort plan (fetched batches are
     SQ-major, so the ranks come sort-free); ``fused_sort`` replaces the
     non-neutral path's two-sort layout with the fused lexicographic
-    sort. Both are bit-exact layout changes, not model changes.
+    sort; ``posted_counts``/``fused_scatter`` (PR 8) skip the per-CQ
+    segment_sum and collapse the three ring scatters into one stacked
+    pass. All are bit-exact layout changes, not model changes.
+    ``use_pallas_reap`` routes the whole neutral posting path (rank +
+    ring scatter + counts) through the ``kernels/ops`` fused one-pass
+    kernel — pure integer bookkeeping and data movement, exact for any
+    inputs (parity-tested in tests/test_segops.py).
     """
     q = cq.num_cqs
     key = jnp.where(valid, cq_id, q)
@@ -145,8 +182,23 @@ def post_and_reap(
         # Transparent completion path: entries are recorded for ring
         # observability, but nothing is ever delayed (bit-exact parity
         # with the pre-QP pipeline by construction).
+        if use_pallas_reap:
+            from repro.kernels import ops as kops  # lazy: pulls in pallas
+
+            dt, vt, rid, counts = kops.fused_reap(
+                cq.done_time, cq.visible_time, cq.req_id, cq.tail,
+                key, done, req_id, valid,
+            )
+            cq = dataclasses.replace(
+                cq, done_time=dt, visible_time=vt, req_id=rid,
+                tail=cq.tail + counts, head=cq.head + counts,
+            )
+            return cq, jnp.where(valid, done, 0.0)
         rank = posted_rank if posted_rank is not None else segment_rank(key)
-        cq = _scatter_entries(cq, key, rank, done, done, req_id, valid)
+        cq = _scatter_entries(
+            cq, key, rank, done, done, req_id, valid,
+            counts=posted_counts, fused=fused_scatter,
+        )
         return cq, jnp.where(valid, done, 0.0)
 
     n_coal = qp.cq_coalesce_n
@@ -206,7 +258,10 @@ def post_and_reap(
 
     cq = dataclasses.replace(
         _scatter_entries(
-            cq, s_key, rank, s_done, posted, req_id[order], s_valid
+            cq, s_key, rank, s_done, posted, req_id[order], s_valid,
+            # Per-CQ valid counts are layout-independent, so the
+            # dispatch-order epoch counts apply to the sorted layout too.
+            counts=posted_counts, fused=fused_scatter,
         ),
         bell_time=bell_time,
     )

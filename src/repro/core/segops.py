@@ -19,7 +19,19 @@ Wall-clock hot-path helpers live here too:
   * ``queueing_scan(..., use_pallas=True)`` — routes the (max,+) scan
     core through the ``kernels/seg_scan`` Pallas kernel via the exact
     prefix-max reduction ``busy = S + segmax(a - S)`` with
-    ``S = cumsum(cost)``.
+    ``S = cumsum(cost)``;
+  * ``CompactPlan`` / ``compact_epoch`` — the PR-8 epoch-compaction
+    layout: valid rows gathered to a dense prefix (invalid rows packed
+    after, in original order) so downstream stages operate on a dense
+    valid block instead of a full-width masked epoch;
+  * ``counting_sort_plan`` — a sort-free ``make_sort_plan`` for small
+    integer key alphabets (S segments): one (S, N) one-hot cumsum
+    replaces the O(N log N) stable sort, producing the bit-identical
+    permutation (stable counting sort IS the stable sort);
+  * ``block_masked_rank`` / ``block_counts`` — ``masked_presorted_rank``
+    and per-segment valid counts specialized to fixed-width segment
+    blocks (the ring-major epoch layout, N = Q * F): a row-contiguous
+    (Q, F) cumsum replaces the segmented scans.
 """
 from __future__ import annotations
 
@@ -180,6 +192,95 @@ def masked_presorted_rank(
         jnp.where(heads, exc, 0).astype(jnp.float32), heads
     ).astype(jnp.int32)
     return jnp.where(valid, exc - base, 0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompactPlan:
+    """Dense-prefix layout of one epoch's valid rows.
+
+    ``pos[i]`` is row i's slot in the compacted layout: valid rows land
+    at ``0 .. n_valid-1`` in original order, invalid rows pack after in
+    original order (``pos`` is a true permutation, so dense-side
+    scatters by ``pos`` and gathers ``dense[pos]`` are exact inverses).
+    Built once per epoch (``compact_epoch``) and threaded through the
+    stages that only do work proportional to the valid rows.
+    """
+
+    pos: jax.Array      # (N,) i32 permutation into the dense layout
+    n_valid: jax.Array  # () i32 number of valid rows
+
+
+def compact_epoch(valid: jax.Array) -> CompactPlan:
+    """Build the dense-prefix compaction plan for one epoch's validity."""
+    vi = valid.astype(jnp.int32)
+    cs = jnp.cumsum(vi)
+    n_valid = cs[-1]
+    idx = jnp.arange(valid.shape[0], dtype=jnp.int32)
+    pos = jnp.where(valid, cs - 1, n_valid + (idx - cs))
+    return CompactPlan(pos=pos, n_valid=n_valid)
+
+
+def counting_positions(
+    key: jax.Array, num_keys: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Stable counting-sort positions for a small integer key alphabet.
+
+    Returns ``(position, rank_in_key, counts, offsets)``: row i of the
+    input lands at ``position[i]`` in the segment-major layout (segments
+    ordered by key value, original order preserved within a segment —
+    exactly the stable-sort permutation), ``rank_in_key[i]`` is its
+    within-segment rank there, ``counts[k]``/``offsets[k]`` are segment
+    sizes and segment start offsets. One (num_keys, N) one-hot cumsum
+    along the contiguous axis replaces the stable sort; cost is
+    O(num_keys * N) flops at O(1) sort depth, a win whenever the
+    alphabet is small (service units, flash chips, CQ ids).
+    """
+    n = key.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    oh = key[None, :] == jnp.arange(num_keys, dtype=key.dtype)[:, None]
+    csum = jnp.cumsum(oh.astype(jnp.int32), axis=1)  # (S, N) contiguous
+    counts = csum[:, -1]
+    offsets = jnp.cumsum(counts) - counts
+    rank_in_key = csum[key, idx] - 1
+    return offsets[key] + rank_in_key, rank_in_key, counts, offsets
+
+
+def counting_sort_plan(key: jax.Array, num_keys: int) -> SortPlan:
+    """``make_sort_plan`` via counting sort — bit-identical for
+    ``0 <= key < num_keys`` (stable counting sort IS the stable sort)."""
+    n = key.shape[0]
+    position, rank_in_key, _, _ = counting_positions(key, num_keys)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    page = jnp.stack(
+        [idx, rank_in_key, (rank_in_key == 0).astype(jnp.int32)], axis=-1
+    )
+    s = jnp.zeros((n, 3), jnp.int32).at[position].set(page)
+    return SortPlan(order=s[:, 0], rank=s[:, 1], heads=s[:, 2].astype(bool))
+
+
+def block_masked_rank(valid: jax.Array, block: int) -> jax.Array:
+    """``masked_presorted_rank`` for fixed-width segment blocks.
+
+    When the (non-decreasing) group key is ``arange(N) // block`` — the
+    ring-major epoch layout, where segment f of width ``block`` occupies
+    rows ``f*block .. (f+1)*block - 1`` — the masked rank is a plain
+    row-wise exclusive cumsum of the validity reshaped to (N//block,
+    block). Bit-identical to ``masked_presorted_rank`` there (integer
+    counting; invalid rows return 0).
+    """
+    v = valid.reshape(-1, block).astype(jnp.int32)
+    rank = (jnp.cumsum(v, axis=1) - v).reshape(-1)
+    return jnp.where(valid, rank, 0)
+
+
+def block_counts(valid: jax.Array, block: int) -> jax.Array:
+    """Per-segment valid counts for fixed-width segment blocks.
+
+    ``segment_sum(valid, arange(N) // block, N // block)`` as one
+    row-wise reduction — exact (integer sums associate freely).
+    """
+    return jnp.sum(valid.reshape(-1, block).astype(jnp.int32), axis=1)
 
 
 def queueing_scan_via_segmax(

@@ -31,7 +31,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.segops import NEG, segmented_prefix_max, sort_by_segment
+from repro.core.segops import (
+    NEG,
+    compact_epoch,
+    segmented_prefix_max,
+    sort_by_segment,
+)
 from repro.core.types import RequestBatch, SSDConfig, TimingState
 
 
@@ -94,28 +99,28 @@ def per_request_update(
 # SwarmIO: aggregated batch updates via segmented (max,+) scan.
 # ---------------------------------------------------------------------------
 
-def aggregated_batch_times(
-    busy_init: jax.Array,
-    arrival: jax.Array,
-    inst: jax.Array,
-    valid: jax.Array,
+def _sorted_batch_core(
+    busy_init: jax.Array,  # (K,) f32
+    s_arr: jax.Array,      # (N,) f32 arrivals in instance-major layout
+    s_inst: jax.Array,     # (N,) i32 instance key, K for invalid rows
+    s_valid: jax.Array,    # (N,) bool
+    head: jax.Array,       # (N,) bool segment starts
+    rank: jax.Array,       # (N,) i32 within-segment rank
+    order: jax.Array,      # (N,) i32 sorted index -> dispatch index
     ssd: SSDConfig,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Vectorized exact batch timing. Returns (completion, new_busy).
+    """The (max,+) closed form on an instance-major layout.
 
-    ``busy_init`` is the (K,) shared busy-until state; requests are taken in
-    array order (the dispatch order). Invalid rows do not affect anything.
+    Shared verbatim by the stable-sort reference and the sort-free
+    compacted path: the float expression tree must be *identical* in
+    both (same ops, shapes, dtypes), because backend instruction
+    selection (e.g. folding ``b + rank*sched`` into an FMA) rounds
+    differently per pattern — two algebraically equal formulations can
+    drift one ULP apart and cascade through the closed loop.
     """
     k = ssd.n_instances
     sched = jnp.float32(ssd.sched_us)
     lmin = jnp.float32(ssd.l_min_us)
-
-    # Sort by (instance, original order) — stable sort of instance suffices.
-    inst_sorted_key = jnp.where(valid, inst, jnp.int32(k))  # invalid last
-    order, head, rank = sort_by_segment(inst_sorted_key)
-    s_inst = inst_sorted_key[order]
-    s_arr = arrival[order]
-    s_valid = valid[order]
 
     # Seed each segment with its instance's current busy time: emulate the
     # b_{-1} = busy[k] seed by max-ing the head element against busy[k].
@@ -149,10 +154,97 @@ def aggregated_batch_times(
     return completion, new_busy
 
 
+def aggregated_batch_times(
+    busy_init: jax.Array,
+    arrival: jax.Array,
+    inst: jax.Array,
+    valid: jax.Array,
+    ssd: SSDConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized exact batch timing. Returns (completion, new_busy).
+
+    ``busy_init`` is the (K,) shared busy-until state; requests are taken in
+    array order (the dispatch order). Invalid rows do not affect anything.
+    """
+    k = ssd.n_instances
+    # Sort by (instance, original order) — stable sort of instance suffices.
+    inst_sorted_key = jnp.where(valid, inst, jnp.int32(k))  # invalid last
+    order, head, rank = sort_by_segment(inst_sorted_key)
+    return _sorted_batch_core(
+        busy_init, arrival[order], inst_sorted_key[order], valid[order],
+        head, rank, order, ssd,
+    )
+
+
+def compact_rr_batch_times(
+    busy_init: jax.Array,  # (K,) f32 shared busy-until state
+    arrival: jax.Array,    # (N,) f32 dispatch-order arrivals
+    rr: jax.Array,         # ()  i32 round-robin cursor
+    valid: jax.Array,      # (N,) bool
+    ssd: SSDConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-free aggregated timing on the compacted epoch (PR 8).
+
+    Round-robin routing assigns the p-th *valid* request (dispatch
+    order) to instance ``(rr + p) % K``, so the instance-major stable
+    sort ``aggregated_batch_times`` pays an argsort for has a closed
+    form: instance c's requests are the valid ranks ``p = (c-rr)%K,
+    (c-rr)%K + K, ...`` in dispatch order, and a request's sorted slot
+    is ``offset[c] + p // K``. One ``compact_epoch`` cumsum plus a
+    stacked scatter builds the whole (order, key, rank) layout; the
+    float arithmetic then runs through the *same* ``_sorted_batch_core``
+    as the reference — deliberately, so both paths present the backend
+    with the identical expression tree (see the core's docstring: an
+    algebraically equal reformulation compiled with different FMA
+    contraction one ULP apart). Bit-identical to
+    ``aggregated_batch_times`` with round-robin assignment, pinned by
+    tests/test_segops.py. Returns ``(completion, new_busy, rr')``.
+    """
+    k = ssd.n_instances
+    n = arrival.shape[0]
+    plan = compact_epoch(valid)
+    pos, n_valid = plan.pos, plan.n_valid
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    # Per-instance valid counts and exclusive offsets: instance c's
+    # column of the dense round-robin deal is q = (c - rr) % K, holding
+    # ceil((n_valid - q) / K) requests.
+    q_of_c = (jnp.arange(k, dtype=jnp.int32) - rr) % k
+    m_c = jnp.maximum(-(-(n_valid - q_of_c) // k), 0)
+    offsets = jnp.cumsum(m_c) - m_c
+
+    # Each dispatch row's slot in the instance-major layout: valid rows
+    # by (instance offset + within-instance rank), invalid rows keep
+    # their compacted position (they pack after n_valid in dispatch
+    # order — exactly where the stable sort's pseudo-segment puts them).
+    inst_row = (rr + pos) % k
+    spos = jnp.where(valid, offsets[inst_row] + pos // k, pos)
+    rank_row = jnp.where(valid, pos // k, pos - n_valid)
+    key_row = jnp.where(valid, inst_row, jnp.int32(k))
+    page = jnp.stack([idx, rank_row, key_row], axis=-1)
+    s = jnp.zeros((n, 3), jnp.int32).at[spos].set(page)
+    order, rank, s_inst = s[:, 0], s[:, 1], s[:, 2]
+    head = rank == 0
+
+    completion, new_busy = _sorted_batch_core(
+        busy_init, arrival[order], s_inst, valid[order], head, rank,
+        order, ssd,
+    )
+    return completion, new_busy, (rr + n_valid) % k
+
+
 def aggregated_update(
-    state: TimingState, batch: RequestBatch, ssd: SSDConfig
+    state: TimingState,
+    batch: RequestBatch,
+    ssd: SSDConfig,
+    use_compaction: bool = False,
 ) -> Tuple[TimingState, jax.Array]:
     """SwarmIO aggregated timing update (single shared-state write)."""
+    if use_compaction and ssd.routing == "round_robin":
+        completion, new_busy, rr = compact_rr_batch_times(
+            state.busy_until, batch.arrival, state.rr, batch.valid, ssd
+        )
+        return TimingState(new_busy, rr), completion
     inst, rr = assign_instances(state, batch, ssd)
     completion, new_busy = aggregated_batch_times(
         state.busy_until, batch.arrival, inst, batch.valid, ssd
@@ -166,6 +258,7 @@ def local_scope_update(
     valid: jax.Array,       # (N,) bool
     ssd: SSDConfig,
     num_units: int,
+    use_compaction: bool = False,
 ) -> Tuple[TimingState, jax.Array]:
     """Paper's rejected design (§IV-D ablation): per-unit timing state.
 
@@ -180,6 +273,11 @@ def local_scope_update(
     rr_u = jnp.broadcast_to(state.rr, (u,))
 
     def per_unit(bu_u, rr_1, val_u, arr_u):
+        if use_compaction and ssd.routing == "round_robin":
+            comp, nb, rr_2 = compact_rr_batch_times(
+                bu_u, arr_u, rr_1, val_u, local_ssd
+            )
+            return nb, rr_2, comp
         inst_u, rr_2 = assign_rr(rr_1, val_u, k_u)
         comp, nb = aggregated_batch_times(
             bu_u, arr_u, inst_u, val_u, local_ssd
@@ -239,12 +337,18 @@ def update(
     ssd: SSDConfig,
     mode: str = "aggregated",
     axis_name: str | None = None,
+    use_compaction: bool = False,
 ) -> Tuple[TimingState, jax.Array]:
-    """Dispatch to the configured update mechanism."""
+    """Dispatch to the configured update mechanism.
+
+    ``use_compaction`` routes round-robin aggregated updates through the
+    sort-free compacted form (``compact_rr_batch_times``); every other
+    mode/routing combination falls back to its reference path.
+    """
     if axis_name is not None and mode == "aggregated":
         return distributed_aggregated_update(state, batch, ssd, axis_name)
     if mode == "per_request":
         return per_request_update(state, batch, ssd)
     if mode == "aggregated":
-        return aggregated_update(state, batch, ssd)
+        return aggregated_update(state, batch, ssd, use_compaction)
     raise ValueError(f"unknown timing mode: {mode}")

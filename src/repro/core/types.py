@@ -517,13 +517,37 @@ class EngineConfig:
     # segment the same batch (datapath unit ranks, the CQ posting rank,
     # the fused fabric/CQ time-major frame sorts) instead of re-sorting
     # per stage — bit-exact by construction, parity-tested in
-    # tests/test_segops.py. ``use_pallas_segscan`` routes the
-    # ``segops.queueing_scan`` (max,+) core through the
-    # ``kernels/seg_scan`` Pallas kernel (off by default: the lax
-    # associative-scan path is the reference; see segops.py for the
-    # float-association caveat of the reduction).
+    # tests/test_segops.py. ``use_compaction`` (PR 8, default on like
+    # ``use_sort_plan``) switches the hot stages to epoch-compacted /
+    # counting-sort / fused-scatter forms — dense round-robin timing
+    # (``timing.compact_rr_batch_times``), counting-sorted flash die
+    # contention, block-wise CQ ranks, and stacked one-pass ring
+    # scatters — all proven bit-exact in virtual time and pinned by
+    # full-run parity tests (tests/test_emulator_speed.py).
+    # ``use_pallas_segscan`` routes the ``segops.queueing_scan`` (max,+)
+    # core through the ``kernels/seg_scan`` Pallas kernel. ``None`` (the
+    # default) auto-resolves per pipeline via
+    # ``resolve_pallas_segscan``: on iff ``integer_timestamps`` proves
+    # every config-derived virtual-time cost is an integer number of
+    # microseconds — the bit-exactness precondition PR 6 established for
+    # the kernel's prefix-max reduction (integer-valued f32 sums are
+    # exact under any association). Fallback note: with any fractional
+    # cost in the model (the default PlatformModel has several) the
+    # auto check fails closed and the ``lax.associative_scan`` reference
+    # path runs; pass an explicit ``True``/``False`` to override —
+    # explicit ``False`` is the safe choice when driving fractional
+    # arrival processes (e.g. Poisson open loop) on an otherwise
+    # integer-costed platform, which the static check cannot see.
     use_sort_plan: bool = True
-    use_pallas_segscan: bool = False
+    use_compaction: bool = True
+    use_pallas_segscan: "bool | None" = None
+    # Fused Pallas stage kernels (kernels/ops/): a one-pass
+    # post-and-reap ring layout (``fused_reap``) and a sequential flash
+    # die-contention fold (``die_contention``). Off by default — the lax
+    # paths are the reference; both kernels are TPU-targeted (interpret
+    # mode on CPU) and parity-tested in tests/test_segops.py.
+    use_pallas_reap: bool = False
+    use_pallas_flash: bool = False
     # Sub-configs (split out rather than growing this class flat):
     qp: QPConfig = QPConfig()         # completion-side (CQ) model
     cache: CacheConfig = CacheConfig()  # GPU-side page cache (stage 0)
@@ -564,6 +588,96 @@ class EngineConfig:
 
     def replace(self, **kw: Any) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
+
+    def resolve_pallas_segscan(
+        self, ssd: "SSDConfig", plat: "PlatformModel"
+    ) -> bool:
+        """Resolve the ``use_pallas_segscan`` auto default (``None``).
+
+        Explicit ``True``/``False`` wins; ``None`` resolves to the
+        ``integer_timestamps`` static proof that the Pallas reduction is
+        bit-exact for this (cfg, ssd, plat) triple. See the field
+        docstring for the fractional-arrival fallback note.
+        """
+        if self.use_pallas_segscan is not None:
+            return self.use_pallas_segscan
+        return integer_timestamps(self, ssd, plat)
+
+
+def integer_timestamps(
+    cfg: "EngineConfig", ssd: "SSDConfig", plat: "PlatformModel"
+) -> bool:
+    """True iff every config-derived virtual-time cost is integer-valued.
+
+    The static bit-exactness precondition for the Pallas segmented-scan
+    reduction (``queueing_scan_via_segmax``): integer-valued f32 sums
+    below 2^24 are exact under *any* association, so re-associating the
+    cost cumsum cannot diverge from the reference scan. The check is
+    deliberately conservative (False negatives are fine — the reference
+    path is always correct): it requires every microsecond cost the
+    engine can derive from (cfg, ssd, plat) to be a whole number, every
+    wire/link byte-rate to divide its integer byte counts exactly (or be
+    ``inf``, a zero cost), and bails on model paths with fractional
+    hard-coded constants (the DSA batched datapath) or non-trivial GPS
+    weight ratios (multi-tenant QoS).
+    """
+
+    def ints(*vals: float) -> bool:
+        return all(float(v).is_integer() for v in vals)
+
+    def div_ok(nbytes: float, bw: float) -> bool:
+        return math.isinf(bw) or (float(nbytes) / bw).is_integer()
+
+    if cfg.batched_datapath:
+        return False  # dsa_worker_times carries fractional constants
+    if not ints(
+        plat.cpu_sqe_fetch_us, plat.cpu_coal_byte_us, plat.cpu_coal_base_us,
+        plat.dsa_sqe_fetch_us, plat.dsa_coal_base_us, plat.host_txn_base_us,
+        plat.txn_base_us, plat.per_req_map_us, plat.dsa_desc_issue_us,
+        plat.dsa_batch_setup_us, plat.lock_per_req_us, plat.lock_per_batch_us,
+        plat.doorbell_poll_us, cfg.poll_quantum_us,
+    ):
+        return False
+    if not (
+        div_ok(ssd.block_bytes, plat.link_bytes_per_us)
+        and div_ok(ssd.block_bytes, plat.host_bytes_per_us)
+        and div_ok(ssd.block_bytes, plat.dsa_bytes_per_us)
+        and div_ok(plat.sqe_bytes, plat.host_bytes_per_us)
+    ):
+        return False
+    if not ints(ssd.sched_us, ssd.l_min_us):
+        return False
+    if ssd.flash_backend and not ints(
+        ssd.flash_read_us, ssd.flash_program_us, ssd.flash_erase_us
+    ):
+        return False
+    if cfg.cache.enabled and not ints(cfg.cache.hit_us):
+        return False
+    if not ints(
+        cfg.qp.cq_coalesce_us, cfg.qp.cq_doorbell_us,
+        cfg.qp.cq_poll_us, cfg.qp.cqe_reap_us,
+    ):
+        return False
+    fab = cfg.fabric
+    if fab.remote:
+        if fab.num_tenants > 1:
+            return False  # GPS weight ratios inflate costs fractionally
+        if not ints(0.5 * fab.rtt_us, fab.wire_txn_us, fab.mtu_timeout_us):
+            return False
+        if not (
+            div_ok(plat.sqe_bytes, fab.tx_bytes_per_us)
+            and div_ok(ssd.block_bytes, fab.tx_bytes_per_us)
+            and div_ok(fab.cqe_bytes, fab.rx_bytes_per_us)
+            and div_ok(ssd.block_bytes, fab.rx_bytes_per_us)
+        ):
+            return False
+        if fab.switched and not (
+            div_ok(plat.sqe_bytes, fab.switch_share_bytes_per_us)
+            and div_ok(ssd.block_bytes, fab.switch_share_bytes_per_us)
+            and div_ok(fab.cqe_bytes, fab.switch_share_bytes_per_us)
+        ):
+            return False
+    return True
 
 
 @jax.tree_util.register_dataclass

@@ -1,0 +1,99 @@
+"""Fused CQ post-and-reap as a Pallas kernel (neutral QP hot path).
+
+The neutral completion path (core/qp.py) spends its time on bookkeeping,
+not modeling: a per-CQ posting rank (``segment_rank`` — a stable sort),
+three ring scatters, and a per-CQ ``segment_sum`` of valid entries. This
+kernel fuses all of it into one sequential pass over the epoch's rows:
+a (Q,) counter vector in the output ref *is* the rank, the ring slot,
+and the count at once — row i of CQ c posts at ``(tail[c] + cnt[c]) % D``
+and bumps ``cnt[c]``. Grid is a single step (the pass is inherently
+sequential); everything is integer bookkeeping and data movement, so the
+result is bit-exact against the reference for *any* inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_reap_kernel(
+    dt_in, vt_in, rid_in, tail_ref, key_ref, done_ref, req_ref, valid_ref,
+    dt_out, vt_out, rid_out, counts_ref, *, depth: int,
+):
+    dt_out[...] = dt_in[...]
+    vt_out[...] = vt_in[...]
+    rid_out[...] = rid_in[...]
+    counts_ref[...] = jnp.zeros_like(counts_ref)
+    n = key_ref.shape[1]
+
+    def body(i, carry):
+        @pl.when(valid_ref[0, i] != 0)
+        def _post():
+            c = key_ref[0, i]
+            r = counts_ref[0, c]
+            pos = (tail_ref[0, c] + r) % depth
+            # Neutral path: visible time == device completion time.
+            dt_out[c, pos] = done_ref[0, i]
+            vt_out[c, pos] = done_ref[0, i]
+            rid_out[c, pos] = req_ref[0, i]
+            counts_ref[0, c] = r + 1
+
+        return carry
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_reap(
+    done_time: jax.Array,     # (Q, D) f32 ring
+    visible_time: jax.Array,  # (Q, D) f32 ring
+    req_id_ring: jax.Array,   # (Q, D) i32 ring
+    tail: jax.Array,          # (Q,) i32 free-running producer index
+    key: jax.Array,           # (N,) i32 target CQ, == Q for invalid rows
+    done: jax.Array,          # (N,) f32 completion times
+    req_id: jax.Array,        # (N,) i32
+    valid: jax.Array,         # (N,) bool
+    *,
+    interpret: bool = True,
+):
+    """One-pass neutral post: returns (done_time', visible_time',
+    req_id', counts) with ``counts`` the (Q,) per-CQ valid entries."""
+    q, d = done_time.shape
+    # Invalid rows carry key == Q; clip for safe counter indexing (the
+    # valid gate already keeps them from posting).
+    safe_key = jnp.clip(key, 0, q - 1)
+    dt, vt, rid, counts = pl.pallas_call(
+        functools.partial(_fused_reap_kernel, depth=d),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(done_time.shape, lambda i: (0, 0)),
+            pl.BlockSpec(visible_time.shape, lambda i: (0, 0)),
+            pl.BlockSpec(req_id_ring.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, q), lambda i: (0, 0)),
+            pl.BlockSpec((1, key.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((1, key.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((1, key.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((1, key.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(done_time.shape, lambda i: (0, 0)),
+            pl.BlockSpec(visible_time.shape, lambda i: (0, 0)),
+            pl.BlockSpec(req_id_ring.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, q), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, d), jnp.float32),
+            jax.ShapeDtypeStruct((q, d), jnp.float32),
+            jax.ShapeDtypeStruct((q, d), jnp.int32),
+            jax.ShapeDtypeStruct((1, q), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        done_time, visible_time, req_id_ring, tail[None, :],
+        safe_key[None, :], done[None, :], req_id[None, :],
+        valid.astype(jnp.int32)[None, :],
+    )
+    return dt, vt, rid, counts[0]

@@ -11,7 +11,9 @@ import jax
 
 from repro.kernels import block_gather as _bg
 from repro.kernels import decode_attention as _da
+from repro.kernels import die_contention as _dc
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_reap as _fr
 from repro.kernels import seg_scan as _ss
 
 
@@ -25,6 +27,20 @@ def block_gather(flash, idx):
 
 def seg_scan(values, heads, *, chunk: int = 256):
     return _ss.seg_scan(values, heads, chunk=chunk, interpret=_interpret())
+
+
+def fused_reap(done_time, visible_time, req_id_ring, tail, key, done,
+               req_id, valid):
+    return _fr.fused_reap(
+        done_time, visible_time, req_id_ring, tail, key, done, req_id,
+        valid, interpret=_interpret(),
+    )
+
+
+def die_contention(ready, cost, chip, event, chip_busy):
+    return _dc.die_contention(
+        ready, cost, chip, event, chip_busy, interpret=_interpret()
+    )
 
 
 def flash_attention(q, k, v, **kw):

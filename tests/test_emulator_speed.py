@@ -13,12 +13,14 @@ import pytest
 
 from repro.core import engine
 from repro.core.types import (
+    CacheConfig,
     EngineConfig,
     FabricConfig,
     PlatformModel,
     QPConfig,
     SSDConfig,
     WorkloadConfig,
+    integer_timestamps,
 )
 from repro.workloads import MultiTenant
 
@@ -65,6 +67,15 @@ CONFIGS = {
         ),
         **SMALL,
     ),
+    # GPU page cache with hit-chasing exercises the partial-validity
+    # epochs compaction must handle (hits never reach the rings, so
+    # fetched batches are sparse in irregular patterns)
+    "cached": EngineConfig(
+        cache=CacheConfig(
+            enabled=True, num_sets=8, ways=2, chase=2, readahead=1
+        ),
+        **SMALL,
+    ),
 }
 
 
@@ -78,14 +89,58 @@ def test_sort_plan_bit_exact(name):
     _assert_states_equal(a, b)
 
 
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_compaction_bit_exact(name):
+    """use_compaction=True reproduces the uncompacted path bit-exactly.
+
+    The PR-8 epoch-compaction forms (dense round-robin timing layout,
+    counting-sorted flash/lane contention, block CQ ranks, fused ring
+    scatters) must be pure layout changes: whole-state pytree equality
+    over full engine runs, per config family.
+    """
+    cfg = CONFIGS[name]
+    wl = MultiTenant(io_depth=16) if name == "remote_qos" else WL
+    a = _run(dataclasses.replace(cfg, use_compaction=False), wl)
+    b = _run(dataclasses.replace(cfg, use_compaction=True), wl)
+    _assert_states_equal(a, b)
+
+
 def test_pallas_segscan_flag_gated_and_runs():
-    """The Pallas routing is off by default and runs when enabled."""
-    assert EngineConfig().use_pallas_segscan is False
+    """The Pallas routing defaults to auto (None) and runs when forced."""
+    assert EngineConfig().use_pallas_segscan is None
     cfg = dataclasses.replace(
         CONFIGS["baseline_dp"], use_pallas_segscan=True
     )
     out = _run(cfg)
     assert float(out.metrics.completed) > 0
+
+
+def test_pallas_segscan_auto_resolution():
+    """``None`` resolves via the ``integer_timestamps`` static proof.
+
+    The stock SSD's sched_us = 64/2.47e6*1e6 is fractional, so the auto
+    default must fall back to the lax reference; an all-integer platform
+    must resolve on; an explicit False always wins.
+    """
+    cfg = EngineConfig(batched_datapath=False, **SMALL)
+    assert cfg.resolve_pallas_segscan(SSD, PLAT) is False
+
+    int_ssd = SSD.replace(l_min_us=50.0, t_max_iops=64e6, n_instances=64)
+    # Every checked cost integer; every byte-rate divides sqe_bytes (64)
+    # and block_bytes (512) exactly.
+    int_plat = PlatformModel(
+        cpu_sqe_fetch_us=10.0, cpu_coal_byte_us=0.0, cpu_coal_base_us=1.0,
+        dsa_sqe_fetch_us=4.0, dsa_coal_base_us=18.0,
+        dsa_desc_issue_us=1.0, dsa_batch_setup_us=1.0,
+        dsa_bytes_per_us=64.0, doorbell_poll_us=1.0,
+        host_txn_base_us=1.0, host_bytes_per_us=64.0,
+        txn_base_us=1.0, link_bytes_per_us=64.0,
+        per_req_map_us=3.0, lock_per_req_us=1.0, lock_per_batch_us=1.0,
+    )
+    assert integer_timestamps(cfg, int_ssd, int_plat) is True
+    assert cfg.resolve_pallas_segscan(int_ssd, int_plat) is True
+    forced_off = dataclasses.replace(cfg, use_pallas_segscan=False)
+    assert forced_off.resolve_pallas_segscan(int_ssd, int_plat) is False
 
 
 def test_pallas_segscan_bit_exact_integer_times():
@@ -112,6 +167,41 @@ def test_pallas_segscan_bit_exact_integer_times():
         c = dataclasses.replace(cfg, use_pallas_segscan=use_pallas)
         st = engine.init_state(c, ssd, wl)
         return engine.make_runner(c, ssd, wl, plat, 4)(st)
+
+    _assert_states_equal(run(False), run(True))
+
+
+def test_pallas_reap_bit_exact():
+    """Fused post-and-reap kernel ≡ the scatter path over a full run.
+
+    The kernel is integer bookkeeping + data movement only (no float
+    arithmetic), so parity holds on any config with a neutral QP — the
+    only path the kernel replaces.
+    """
+    cfg = CONFIGS["baseline_dp"]
+    a = _run(cfg)
+    b = _run(dataclasses.replace(cfg, use_pallas_reap=True))
+    _assert_states_equal(a, b)
+
+
+def test_pallas_flash_bit_exact_integer_times():
+    """Fused die-contention kernel ≡ sort/scan path on integer times.
+
+    The kernel's sequential per-chip fold re-associates the (max,+)
+    recurrence relative to the reference's segmented scan, which is
+    bit-exact exactly when timestamps stay integer-valued f32 — the same
+    contract as ``use_pallas_segscan``.
+    """
+    # sched_us = 64 / 2.56e6 * 1e6 = 25.0 exactly; flash costs are
+    # integers by default.
+    ssd = SSD.replace(l_min_us=50.0, t_max_iops=2.56e6)
+    cfg = CONFIGS["baseline_dp"]
+    wl = WorkloadConfig(io_depth=16, read_frac=0.5, resubmit_delay_us=1.0)
+
+    def run(use_pallas_flash):
+        c = dataclasses.replace(cfg, use_pallas_flash=use_pallas_flash)
+        st = engine.init_state(c, ssd, wl)
+        return engine.make_runner(c, ssd, wl, PLAT, 6)(st)
 
     _assert_states_equal(run(False), run(True))
 

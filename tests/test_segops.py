@@ -5,6 +5,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional hypothesis dep"
 )
 st = pytest.importorskip("hypothesis.strategies")
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -234,3 +235,277 @@ def test_masked_presorted_rank(case):
     np.testing.assert_array_equal(
         np.asarray(out)[valid], np.asarray(ref)[valid]
     )
+
+
+# ---------------------------------------------------------------------------
+# Epoch compaction (PR 8): dense-prefix layouts vs their reference sorts.
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(st.lists(st.booleans(), min_size=1, max_size=120))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_compact_epoch_is_order_preserving_permutation(valid):
+    """Valid rows land at 0..n_valid-1 in original order; invalid rows
+    pack after, also in original order; ``pos`` is a true permutation."""
+    v = np.asarray(valid, bool)
+    plan = segops.compact_epoch(jnp.asarray(v))
+    pos = np.asarray(plan.pos)
+    n_valid = int(plan.n_valid)
+    assert n_valid == int(v.sum())
+    assert sorted(pos.tolist()) == list(range(len(v)))  # permutation
+    np.testing.assert_array_equal(
+        np.sort(pos[v]), pos[v]  # order-preserving among valid rows
+    )
+    np.testing.assert_array_equal(np.sort(pos[~v]), pos[~v])
+    assert (pos[v] < n_valid).all()
+    assert (pos[~v] >= n_valid).all()
+
+
+def test_compact_epoch_edge_epochs():
+    """All-invalid, single-valid, and all-valid epochs."""
+    n = 16
+    for v in (
+        np.zeros(n, bool),
+        np.zeros(n, bool) | (np.arange(n) == 7),
+        np.ones(n, bool),
+    ):
+        plan = segops.compact_epoch(jnp.asarray(v))
+        pos = np.asarray(plan.pos)
+        assert int(plan.n_valid) == int(v.sum())
+        assert sorted(pos.tolist()) == list(range(n))
+
+
+@hypothesis.given(keyed_rows())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_counting_sort_plan_matches_make_sort_plan(case):
+    """counting_sort_plan ≡ make_sort_plan for a small key alphabet."""
+    key, _, _ = case
+    k = jnp.asarray(key)
+    ref = segops.make_sort_plan(k)
+    plan = segops.counting_sort_plan(k, 7)
+    np.testing.assert_array_equal(
+        np.asarray(plan.order), np.asarray(ref.order)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(plan.heads), np.asarray(ref.heads)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(plan.rank), np.asarray(ref.rank)
+    )
+
+
+@st.composite
+def blocked_valids(draw):
+    blocks = draw(st.integers(1, 8))
+    width = draw(st.integers(1, 16))
+    v = draw(
+        st.lists(
+            st.booleans(),
+            min_size=blocks * width, max_size=blocks * width,
+        )
+    )
+    return np.asarray(v, bool), width
+
+
+@hypothesis.given(blocked_valids())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_block_masked_rank_and_counts(case):
+    """Block forms ≡ masked_presorted_rank / segment_sum on the
+    fixed-width block key ``arange(N) // block``."""
+    valid, width = case
+    v = jnp.asarray(valid)
+    group = jnp.arange(valid.shape[0], dtype=jnp.int32) // width
+    ref_rank = segops.masked_presorted_rank(group, v)
+    out_rank = segops.block_masked_rank(v, width)
+    np.testing.assert_array_equal(np.asarray(out_rank), np.asarray(ref_rank))
+    nseg = valid.shape[0] // width
+    ref_counts = np.asarray(
+        jax.ops.segment_sum(
+            v.astype(jnp.int32), group, num_segments=nseg
+        )
+    )
+    out_counts = np.asarray(segops.block_counts(v, width))
+    np.testing.assert_array_equal(out_counts, ref_counts)
+
+
+# ---------------------------------------------------------------------------
+# Compacted round-robin timing ≡ the stable-sort reference (PR 8).
+# ---------------------------------------------------------------------------
+
+@st.composite
+def rr_timing_cases(draw):
+    n = draw(st.integers(1, 96))
+    k = draw(st.integers(1, 8))
+    arrival = draw(
+        st.lists(
+            st.floats(
+                min_value=0, max_value=1e4, width=32, allow_subnormal=False
+            ),
+            min_size=n, max_size=n,
+        )
+    )
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    busy = draw(
+        st.lists(
+            st.floats(
+                min_value=0, max_value=1e4, width=32, allow_subnormal=False
+            ),
+            min_size=k, max_size=k,
+        )
+    )
+    rr = draw(st.integers(0, k - 1))
+    return (
+        np.asarray(arrival, np.float32),
+        np.asarray(valid, bool),
+        np.asarray(busy, np.float32),
+        rr, k,
+    )
+
+
+def _assert_rr_parity(arrival, valid, busy, rr, k):
+    from repro.core import timing
+    from repro.core.types import SSDConfig
+
+    ssd = SSDConfig(n_instances=k)
+    rr = jnp.int32(rr)
+    inst, rr_ref = timing.assign_rr(rr, jnp.asarray(valid), k)
+    comp_ref, busy_ref = timing.aggregated_batch_times(
+        jnp.asarray(busy), jnp.asarray(arrival), inst, jnp.asarray(valid),
+        ssd,
+    )
+    comp, new_busy, rr_out = timing.compact_rr_batch_times(
+        jnp.asarray(busy), jnp.asarray(arrival), rr, jnp.asarray(valid),
+        ssd,
+    )
+    np.testing.assert_array_equal(np.asarray(comp), np.asarray(comp_ref))
+    np.testing.assert_array_equal(
+        np.asarray(new_busy), np.asarray(busy_ref)
+    )
+    assert int(rr_out) == int(rr_ref)
+
+
+@hypothesis.given(rr_timing_cases())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_compact_rr_batch_times_bit_exact(case):
+    """compact_rr_batch_times ≡ aggregated_batch_times + assign_rr.
+
+    Bit-exact for ANY float arrivals/cursors: both paths feed the same
+    instance-major layout through the shared ``_sorted_batch_core``
+    float expression tree, so only the (integer) permutation
+    construction differs.
+    """
+    _assert_rr_parity(*case)
+
+
+def test_compact_rr_batch_times_edge_epochs():
+    """All-invalid, single-valid, and all-valid epochs, rr offsets."""
+    n, k = 24, 4
+    arrival = (np.arange(n, dtype=np.float32) * 3.5) % 17
+    busy = np.asarray([5.0, 0.0, 12.25, 2.0], np.float32)
+    for rr in (0, 3):
+        for valid in (
+            np.zeros(n, bool),
+            np.zeros(n, bool) | (np.arange(n) == 11),
+            np.ones(n, bool),
+        ):
+            _assert_rr_parity(arrival, valid, busy, rr, k)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas stage kernels (PR 8) vs sequential python references.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def reap_cases(draw):
+    q = draw(st.integers(1, 4))
+    depth = draw(st.integers(1, 8))
+    n = draw(st.integers(1, 48))
+    key = draw(st.lists(st.integers(0, q - 1), min_size=n, max_size=n))
+    done = draw(st.lists(st.integers(0, 1000), min_size=n, max_size=n))
+    req = draw(st.lists(st.integers(0, 1 << 20), min_size=n, max_size=n))
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    tail = draw(st.lists(st.integers(0, 1 << 20), min_size=q, max_size=q))
+    return q, depth, (
+        np.asarray(key, np.int32), np.asarray(done, np.float32),
+        np.asarray(req, np.int32), np.asarray(valid, bool),
+        np.asarray(tail, np.int32),
+    )
+
+
+@hypothesis.given(reap_cases())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_fused_reap_matches_sequential_reference(case):
+    """kernels/fused_reap ≡ the per-row posting loop for ANY inputs
+    (pure integer bookkeeping + data movement; no float arithmetic)."""
+    from repro.kernels import ops as kops
+
+    q, depth, (key, done, req, valid, tail) = case
+    rng = np.random.default_rng(0)
+    dt0 = rng.uniform(0, 9, (q, depth)).astype(np.float32)
+    vt0 = rng.uniform(0, 9, (q, depth)).astype(np.float32)
+    rid0 = rng.integers(0, 99, (q, depth)).astype(np.int32)
+
+    ref_dt, ref_vt, ref_rid = dt0.copy(), vt0.copy(), rid0.copy()
+    counts = np.zeros(q, np.int32)
+    for i in range(len(key)):
+        if valid[i]:
+            c = key[i]
+            pos = (tail[c] + counts[c]) % depth
+            ref_dt[c, pos] = done[i]
+            ref_vt[c, pos] = done[i]
+            ref_rid[c, pos] = req[i]
+            counts[c] += 1
+
+    dt, vt, rid, cnt = kops.fused_reap(
+        jnp.asarray(dt0), jnp.asarray(vt0), jnp.asarray(rid0),
+        jnp.asarray(tail), jnp.asarray(key), jnp.asarray(done),
+        jnp.asarray(req), jnp.asarray(valid),
+    )
+    np.testing.assert_array_equal(np.asarray(dt), ref_dt)
+    np.testing.assert_array_equal(np.asarray(vt), ref_vt)
+    np.testing.assert_array_equal(np.asarray(rid), ref_rid)
+    np.testing.assert_array_equal(np.asarray(cnt), counts)
+
+
+@st.composite
+def die_cases(draw):
+    n = draw(st.integers(1, 48))
+    k = draw(st.integers(1, 6))
+    ready = draw(st.lists(st.integers(0, 1000), min_size=n, max_size=n))
+    cost = draw(st.lists(st.integers(1, 50), min_size=n, max_size=n))
+    chip = draw(st.lists(st.integers(0, k - 1), min_size=n, max_size=n))
+    event = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    cur = draw(st.lists(st.integers(0, 1000), min_size=k, max_size=k))
+    return (
+        np.asarray(ready, np.float32), np.asarray(cost, np.float32),
+        np.asarray(chip, np.int32), np.asarray(event, bool),
+        np.asarray(cur, np.float32),
+    )
+
+
+@hypothesis.given(die_cases())
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_die_contention_matches_sequential_reference(case):
+    """kernels/die_contention ≡ the sequential per-die fold.
+
+    Integer-valued f32 inputs (the kernel's bit-exactness contract —
+    same as ``use_pallas_segscan``; full-run engine parity on such a
+    platform is pinned in tests/test_emulator_speed.py).
+    """
+    from repro.kernels import ops as kops
+
+    ready, cost, chip, event, cur0 = case
+    cur = cur0.copy()
+    ref_busy = np.zeros_like(ready)
+    for i in range(len(ready)):
+        if event[i]:
+            c = chip[i]
+            b = max(cur[c], ready[i]) + cost[i]
+            ref_busy[i] = b
+            cur[c] = b
+
+    busy, new_cur = kops.die_contention(
+        jnp.asarray(ready), jnp.asarray(cost), jnp.asarray(chip),
+        jnp.asarray(event), jnp.asarray(cur0),
+    )
+    np.testing.assert_array_equal(np.asarray(busy), ref_busy)
+    np.testing.assert_array_equal(np.asarray(new_cur), cur)
