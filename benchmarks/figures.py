@@ -755,6 +755,101 @@ def fig26_tenant_qos(quick=False):
             "tenant0_e2e_us", "tenant1_e2e_us"], rows
 
 
+def fig29_lock_order(quick=False):
+    """Ready-time vs program-order timing lock on a *misaligned*
+    two-tenant mix (PR 9). Latency read tenant + bulk write tenant on
+    interleaved SQs (tenant = sq % 2) with one unit per SQ, so tenant
+    units alternate through the unit loop — the placement fig26
+    sidesteps by aligning tenants to contiguous unit blocks. Under the
+    program-order lock every latency unit serializes behind the bulk
+    unit one loop position earlier even when its batch arrived first;
+    the ready-time lock admits units by post-TX batch arrival and
+    restores isolation. Sweeps lock_order x {FIFO, WFQ 2:1} on a
+    TX-bound wire and persists latency-tenant p99 / SLO attainment to
+    BENCH_lock_order.json for the floor checker's advisory."""
+    import json
+    import os
+    import platform as _platform
+
+    from repro import workloads
+    from repro.core.types import FabricConfig
+
+    # One unit per SQ keeps every unit single-tenant — the lock
+    # serializes whole units, so this is the finest isolation any
+    # acquisition order can express (see MultiTenant docstring).
+    cfg = C.swarmio_cfg(num_sqs=16, fetch_width=64, num_units=16,
+                        sq_depth=128)
+    wl = workloads.MultiTenant(io_depth=64, tenant_read_frac=(1.0, 0.0),
+                               interleave=True)
+    rounds = 48 if quick else 96
+    slo_us = 500.0
+    rows, points = [], []
+    for arb_name, weights in [("fifo", ()), ("wfq_2_1", (2.0, 1.0))]:
+        fab = FabricConfig(remote=True, tx_bytes_per_us=400.0,
+                           rx_bytes_per_us=16000.0, qos_weights=weights)
+        for order in ("program", "ready_time"):
+            out = C.run_engine(
+                cfg.replace(fabric=fab, lock_order=order),
+                C.D7_PS1010, wl, rounds=rounds,
+            )
+            m = out.metrics
+            p99 = m.tenant_p99_us()
+            slo = m.slo_attainment(slo_us)
+            share = m.tenant_share()
+            row = [arb_name, order, float(p99[0]), float(p99[1]),
+                   float(slo[0]), float(share[0])]
+            rows.append(row)
+            points.append({
+                "arbiter": arb_name, "lock_order": order,
+                "latency_p99_us": float(p99[0]),
+                "bulk_p99_us": float(p99[1]),
+                "latency_slo_attainment": float(slo[0]),
+                "latency_share": float(share[0]),
+                "slo_us": slo_us,
+            })
+
+    def _p99(arb, order):
+        return next(r[2] for r in rows if r[0] == arb and r[1] == order)
+
+    json_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_lock_order.json",
+    )
+    payload = {}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            payload = {}
+    payload.update({
+        "schema": "lock_order/v1",
+        "quick": quick,
+        "host": {
+            "machine": _platform.machine(),
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+        },
+        "slo_us": slo_us,
+        "fig29": points,
+    })
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"  -> {json_path} [fig29]")
+    wfq_gain = _p99("wfq_2_1", "program") / max(
+        _p99("wfq_2_1", "ready_time"), 1e-9
+    )
+    print(f"fig29: misaligned latency-tenant p99 under WFQ "
+          f"{_p99('wfq_2_1', 'program'):.0f}us (program lock) -> "
+          f"{_p99('wfq_2_1', 'ready_time'):.0f}us (ready-time lock, "
+          f"{wfq_gain:.1f}x lower); FIFO "
+          f"{_p99('fifo', 'program'):.0f} -> "
+          f"{_p99('fifo', 'ready_time'):.0f}us")
+    return ["arbiter", "lock_order", "latency_p99_us", "bulk_p99_us",
+            "latency_slo_attainment", "latency_share"], rows
+
+
 ALL = [
     ("fig03_frontend", fig03_frontend_plateau),
     ("fig04_per_request_overhead", fig04_per_request_overhead),
@@ -777,4 +872,5 @@ ALL = [
     ("fig26_tenant_qos", fig26_tenant_qos),
     ("fig27_kv_serving_iops", _kv_serving.fig27),
     ("fig28_kv_tier_hierarchy", _kv_serving.fig28),
+    ("fig29_lock_order", fig29_lock_order),
 ]

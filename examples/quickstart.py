@@ -236,3 +236,32 @@ for label, t, dev in [
           f"(step {r['avg_step_us']:.0f} us, "
           f"{r['blocks_per_step']:.0f} blk/step, "
           f"data check {r['data_check_max_abs']:.1f})")
+
+# 14. Misaligned multi-tenant isolation: the ready-time timing lock.
+#     A latency read tenant and a bulk write tenant on *interleaved*
+#     SQs (tenant = sq % 2, one unit per SQ) — the placement where the
+#     default program-order lock chains every latency unit behind the
+#     bulk unit one loop position earlier, even with weighted-fair wire
+#     QoS. lock_order="ready_time" admits units by post-fabric-TX batch
+#     arrival instead and restores isolation (fig29,
+#     BENCH_lock_order.json).
+from repro.core.types import FabricConfig
+from repro.workloads import MultiTenant
+
+mt_wl = MultiTenant(io_depth=64, tenant_read_frac=(1.0, 0.0),
+                    interleave=True)
+mt_ssd = SSDConfig(t_max_iops=2.47e6, l_min_us=50.0, n_instances=64)
+for order in ("program", "ready_time"):
+    mt_cfg = EngineConfig(
+        num_sqs=16, num_units=16, sq_depth=128, fetch_width=64,
+        fabric=FabricConfig(remote=True, tx_bytes_per_us=400.0,
+                            rx_bytes_per_us=16000.0,
+                            qos_weights=(2.0, 1.0)),
+        lock_order=order,
+    )
+    mm = engine.simulate(mt_cfg, mt_ssd, mt_wl, rounds=32).metrics
+    p99 = mm.tenant_p99_us()
+    slo = mm.slo_attainment(500.0)
+    print(f"lock {order:10s}: latency-tenant p99 {float(p99[0]):7.0f} us "
+          f"(SLO<=500us attained {float(slo[0])*100:5.1f}%), "
+          f"bulk p99 {float(p99[1]):7.0f} us")

@@ -22,6 +22,13 @@ monotone non-decreasing in device MIOPS (virtual time — deterministic,
 so a violation means the tier or the device model regressed, yet it
 stays advisory because the smoke sweep is a reduced shape).
 
+A third advisory reads ``BENCH_lock_order.json`` (written by fig29 in
+``benchmarks/figures.py``): on the misaligned two-tenant WFQ mix the
+ready-time timing lock must not leave the latency tenant's p99 above
+the program-order lock's (that isolation is the refactor's whole
+point). Virtual time again, but advisory: the smoke sweep is short
+and the margin on a reduced round count is config-sensitive.
+
     PYTHONPATH=src python scripts/check_bench_floor.py --min-miops 40
 """
 from __future__ import annotations
@@ -117,6 +124,42 @@ def advisory_kv_tier(json_path: Path) -> None:
         )
 
 
+def advisory_lock_order(json_path: Path) -> None:
+    """Log (never fail) the fig29 ready-time-lock isolation check."""
+    if not json_path.exists():
+        print(f"note: {json_path} missing — lock-order advisory skipped")
+        return
+    points = json.loads(json_path.read_text()).get("fig29", [])
+
+    def p99(arb, order):
+        return next(
+            (
+                p["latency_p99_us"]
+                for p in points
+                if p["arbiter"] == arb and p["lock_order"] == order
+            ),
+            None,
+        )
+
+    prog, ready = p99("wfq_2_1", "program"), p99("wfq_2_1", "ready_time")
+    if prog is None or ready is None:
+        print("note: fig29 WFQ points missing — lock-order advisory skipped")
+        return
+    if ready <= prog:
+        gain = prog / max(ready, 1e-9)
+        print(
+            f"OK (advisory): fig29 misaligned WFQ latency-tenant p99 "
+            f"{prog:.0f}us (program lock) -> {ready:.0f}us (ready-time, "
+            f"{gain:.1f}x lower)"
+        )
+    else:
+        print(
+            f"WARN (advisory): fig29 ready-time lock RAISED the "
+            f"misaligned WFQ latency-tenant p99: {prog:.0f}us (program) "
+            f"-> {ready:.0f}us (never fails the job)"
+        )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--min-miops", type=float, default=40.0)
@@ -139,12 +182,18 @@ def main() -> int:
         default="BENCH_kv_tier.json",
         help="kv-tier serving JSON written by benchmarks/kv_serving.py",
     )
+    ap.add_argument(
+        "--lock-order-json",
+        default="BENCH_lock_order.json",
+        help="lock-order JSON written by fig29 (benchmarks/figures.py)",
+    )
     args = ap.parse_args()
 
     advisory_wallclock(
         Path(args.wallclock_json), args.advisory_req_per_wall_s
     )
     advisory_kv_tier(Path(args.kv_tier_json))
+    advisory_lock_order(Path(args.lock_order_json))
     path = Path(args.csv)
     if not path.exists():
         print(f"FAIL: {path} missing — did the benchmark run?")

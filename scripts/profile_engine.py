@@ -41,6 +41,11 @@ from benchmarks.emulator_speed import _configs  # noqa: E402
 from repro.core import engine, frontend, qp, timing  # noqa: E402
 from repro.core import datapath, flash  # noqa: E402
 from repro.core.device import DevicePipeline  # noqa: E402
+from repro.core.epoch import (  # noqa: E402
+    Epoch,
+    admission_row_order,
+    unit_ready_order,
+)
 from repro.core.types import PlatformModel  # noqa: E402
 
 
@@ -74,10 +79,23 @@ def stage_table(spec, reps: int):
     dev = dataclasses.replace(st.device, disp_time=disp)
     tbatch = dataclasses.replace(batch, arrival=fetch_done)
 
+    # The timing closure honors cfg.lock_order the way process does:
+    # under the ready-time lock the batch dispatches through the epoch's
+    # admission-order row permutation (a representative one, derived
+    # from this batch's post-fetch ready times).
+    dispatch_order = None
+    if cfg.lock_order == "ready_time" and cfg.timing_scope != "local":
+        ep = Epoch.from_batch(batch, fetch_done, unit, "ring")
+        dispatch_order = admission_row_order(
+            unit_ready_order(ep.unit_ready(cfg.num_units)),
+            ep, cfg.num_units,
+        )
+
     rows = [("frontend.fetch", _timeit(fetch_fn, st, reps=reps))]
     rows.append(("timing.update", _timeit(
         jax.jit(lambda ts, b: timing.update(
-            ts, b, ssd, cfg.mode, use_compaction=compact
+            ts, b, ssd, cfg.mode, use_compaction=compact,
+            dispatch_order=dispatch_order,
         )),
         dev.tstate, tbatch, reps=reps,
     )))
@@ -153,10 +171,17 @@ def main() -> int:
                     help="per-stage share ceiling for --assert-shares "
                          "(fraction of engine_round; generous by design "
                          "— CI machines are noisy)")
+    ap.add_argument("--lock-order", default=None,
+                    choices=["program", "ready_time"],
+                    help="override EngineConfig.lock_order — profile the "
+                         "ready-time admission permutation's overhead "
+                         "against the program-order path")
     args = ap.parse_args()
 
-    spec = next(s for s in _configs(quick=False)
-                if s["name"] == args.config)
+    spec = dict(next(s for s in _configs(quick=False)
+                     if s["name"] == args.config))
+    if args.lock_order is not None:
+        spec["cfg"] = spec["cfg"].replace(lock_order=args.lock_order)
     cfg, ssd, wl = spec["cfg"], spec["ssd"], spec["wl"]
     plat = PlatformModel()
     C.jit_warmup()

@@ -26,7 +26,7 @@ reads with writes or tenants in one batch) should build a
 ``StorageOps`` and call ``submit``/``submit_array``/``submit_striped``
 directly; the wrappers remain for the common homogeneous cases. The
 ring-less ``DevicePipeline.fetch_direct``/``submit_direct`` shortcuts
-are deprecated (test-only; the public aliases warn).
+were removed in PR 9 (only the underscore test-only names remain).
 
 The client runs the *same queue-pair path as the engine* at every layer:
 each ``submit`` posts SQEs into real ``SQRings`` (requests dealt
@@ -159,7 +159,12 @@ class StorageClient:
         service units' SQs (time-sorted, so rings stay in-order), the
         configured ring frontend fetches them in as many passes as the
         fetch window requires, and completion times are the CQ-reaped
-        times. Returns (dev', done (N,) in the original request order).
+        times. Each fetch pass flows through ``DevicePipeline.process``
+        as one admission epoch (``core/epoch.py``) — under
+        ``cfg.lock_order="ready_time"`` the units of a client batch
+        acquire the stage-2a lock by post-TX batch arrival exactly as
+        the engine's do. Returns (dev', done (N,) in the original
+        request order).
         """
         cfg, plat, pipe = self.cfg, self.plat, self.pipeline
         n = lba.shape[0]
@@ -575,3 +580,76 @@ class StorageClient:
         )
         data = flash[jnp.where(valid, lba, 0)]
         return state, data, done
+
+    def write_replicated(
+        self,
+        state: ClientState,    # stacked array state (M devices)
+        flash: jax.Array,
+        data: jax.Array,       # (N, block_words) blocks to persist
+        lba: jax.Array,        # (N,) i32 — any N
+        t_submit: "jax.Array | float" = 0.0,   # () or (N,) f32
+        valid: jax.Array | None = None,
+        replicas: int = 2,
+        tenant: "jax.Array | int" = 0,   # () or (N,) i32 QoS class
+    ) -> Tuple[ClientState, jax.Array, jax.Array]:
+        """Replica-write fan-out over an M-drive array.
+
+        The durability dual of ``read_replicated``: block b's R replicas
+        live on drives ``(b + r) % M`` (chained declustering), and a
+        write must land on *all* of them, so every request fans out to
+        its full candidate set — no routing choice — and its completion
+        time is the **max** over the R per-replica completions (the
+        write is durable only once the slowest replica has programmed).
+        Each drive prices its share of the fan-out through its own
+        pipeline (wire, lock, chips, GC); the functional scatter into
+        the shared block store lands once per request, not R times.
+        Returns (state', flash', done (N,)) in request order. Reads of
+        any replica then see the block via ``read_replicated``.
+        """
+        m = jax.tree.leaves(state.dev)[0].shape[0]
+        if not 1 <= replicas <= m:
+            raise ValueError(
+                f"replicas={replicas} must be in [1, M={m}] — a block "
+                "cannot have more replicas than the array has drives"
+            )
+        n = lba.shape[0]
+        r = replicas
+        lba = lba.astype(jnp.int32)
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        t_submit = jnp.broadcast_to(jnp.asarray(t_submit, jnp.float32), (n,))
+        tenant = jnp.broadcast_to(jnp.asarray(tenant, jnp.int32), (n,))
+
+        # (N, R) candidate drives, flattened request-major so each
+        # drive's slots fill in request order. Within one request the R
+        # candidates are distinct (R <= M), so no drive sees a request
+        # twice and per-drive occupancy is <= N — an (M, N) grid holds
+        # the whole fan-out.
+        cand = (
+            lba[:, None] + jnp.arange(r, dtype=jnp.int32)[None, :]
+        ) % m                                            # (N, R)
+        valid_rep = jnp.repeat(valid, r)                 # (N*R,)
+        drive = jnp.where(valid_rep, cand.reshape(-1), jnp.int32(m))
+        rank = segment_rank(drive)
+        row = jnp.clip(drive, 0, m - 1)
+        col = jnp.where(valid_rep, rank, n * r)
+
+        def scat(x, fill, dtype):
+            base = jnp.full((m, n), fill, dtype)
+            return base.at[row, col].set(x, mode="drop")
+
+        ops2d = StorageOps(
+            opcode=jnp.full((m, n), OP_WRITE, jnp.int32),
+            lba=scat(jnp.repeat(lba, r), 0, jnp.int32),
+            t_submit=scat(jnp.repeat(t_submit, r), 0.0, jnp.float32),
+            tenant=scat(jnp.repeat(tenant, r), 0, jnp.int32),
+            valid=scat(valid_rep, False, bool),
+        )
+        state, _, _, done2d = self.submit_array(state, flash, ops2d)
+        done_rep = done2d[row, jnp.clip(col, 0, n - 1)].reshape(n, r)
+        done = jnp.where(valid, jnp.max(done_rep, axis=1), 0.0)
+        # One functional store per request — replica fan-out is a
+        # device-time phenomenon; the shared block store holds one copy.
+        dst = jnp.where(valid, lba, flash.shape[0])
+        flash = flash.at[dst].set(data, mode="drop")
+        return state, flash, done

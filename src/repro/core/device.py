@@ -50,15 +50,27 @@ layer is symmetric end to end. A multi-drive array is the same program
 ``vmap``-ed over a leading device axis (see
 ``engine.simulate(num_devices=...)`` and ``StorageClient.read_striped``).
 
+Stage 2 consumes the batch as an admission ``Epoch`` (epoch.py): the
+post-fabric-TX ready times, tenant ids, validity, unit ids, and the
+row-layout promise travel as one struct, and ``EngineConfig.lock_order``
+decides how service units acquire the global timing lock over it —
+``"program"`` (default, bit-exact with every earlier PR) serializes
+units in loop index order; ``"ready_time"`` grants the lock in order of
+each unit's batch ready time and dispatches the timing model in the
+same acquisition order (whole unit blocks permute; within a unit
+program order always holds, and stages 3-5 keep the program row layout
+— their resources are per-unit/per-die, so only the lock and the shared
+timing state are admission-ordered).
+
 The ring-less direct path (``_fetch_direct``/``_submit_direct``) is a
 test-only shortcut for unit tests that probe stages 2-4 in isolation —
-no production consumer uses it. The old public names ``fetch_direct``/
-``submit_direct`` remain as deprecated aliases that warn.
+no production consumer uses it. The deprecated public aliases
+``fetch_direct``/``submit_direct`` were removed in PR 9; go through
+``StorageClient.submit`` (or the underscore names in tests).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Tuple
 
 import jax
@@ -66,6 +78,7 @@ import jax.numpy as jnp
 
 from repro.core import datapath, fabric as fabric_mod, frontend, qp, segops
 from repro.core import timing
+from repro.core.epoch import Epoch, admission_row_order, unit_ready_order
 from repro.core.fabric import FabricState
 from repro.core.flash import FlashState, flash_stage
 from repro.core.qp import CQRings
@@ -126,21 +139,39 @@ class PipelineResult:
                            # drive with no CQ threaded or a neutral QP)
 
 
-def lock_pass(
+def acquire_lock(
     lock_time: jax.Array,
-    batch_ready: jax.Array,   # (U,) time each unit's batch is ready
-    n_valid_u: jax.Array,     # (U,) valid requests per unit
+    epoch: Epoch,
+    num_units: int,
     cfg: EngineConfig,
     plat: PlatformModel,
-) -> Tuple[jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array | None]:
     """Serialize service units on the global timing-model lock.
 
-    Returns (lock_time', lock_done (U,)). Units acquire in index order after
-    their batch is ready. Cost = per-request (baseline) or per-batch
-    (aggregated). Local timing scope has no shared lock at all.
+    Returns ``(lock_time', lock_done (U,), unit_order)``. Cost =
+    per-request (baseline) or per-batch (aggregated). Local timing scope
+    has no shared lock at all: the "grant" is each unit's own batch
+    ready time and ``unit_order`` is ``None``.
+
+    ``cfg.lock_order`` picks the acquisition order:
+
+      * ``"program"`` — units acquire in index order once their batch is
+        ready (``unit_order=None``; the scan below runs on the unordered
+        arrays, so the code path is byte-identical to every pre-PR-9
+        release — the bit-exactness contract);
+      * ``"ready_time"`` — units acquire in order of their batch ready
+        time (ties by unit index, a stable sort): the ``(ready, unit)``
+        keys permute the scan inputs, the grants unsort back to unit
+        index order, and ``unit_order`` (the (U,) acquisition
+        permutation) is returned so the caller can dispatch the timing
+        model in the same order. When ready times are monotone in
+        program order the permutation is the identity and both orders
+        produce bit-identical grants.
     """
     if cfg.timing_scope == "local":
-        return lock_time, batch_ready
+        return lock_time, epoch.unit_ready(num_units), None
+    n_valid_u = epoch.unit_counts(num_units)
+    batch_ready = epoch.unit_ready(num_units)
     if cfg.mode == "per_request":
         cost = n_valid_u.astype(jnp.float32) * plat.lock_per_req_us
     else:
@@ -151,8 +182,15 @@ def lock_pass(
         done = jnp.maximum(t, ready) + c
         return done, done
 
+    if cfg.lock_order == "ready_time":
+        unit_order = unit_ready_order(batch_ready)
+        lock_end, granted = jax.lax.scan(
+            step, lock_time, (batch_ready[unit_order], cost[unit_order])
+        )
+        lock_done = jnp.zeros_like(granted).at[unit_order].set(granted)
+        return lock_end, lock_done, unit_order
     lock_end, lock_done = jax.lax.scan(step, lock_time, (batch_ready, cost))
-    return lock_end, lock_done
+    return lock_end, lock_done, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,30 +314,36 @@ class DevicePipeline:
                 fused_sort=use_plan, use_pallas=pallas,
             )
 
-        # -- stage 2a: global timing-model lock. Under the ring layout
-        # units are fixed-width row blocks (frontend.fetch_row_units), so
-        # the segment reductions collapse to row-wise reshapes (integer
-        # sums and maxes — exact under any association).
-        if blocky:
-            n_valid_u = segops.block_counts(valid, valid.shape[0] // u)
-            batch_ready = jnp.max(
-                jnp.where(valid, fetch_done, 0.0).reshape(u, -1), axis=1
-            )
-        else:
-            n_valid_u = jax.ops.segment_sum(
-                valid.astype(jnp.int32), unit, num_segments=u
-            )
-            batch_ready = jax.ops.segment_max(
-                jnp.where(valid, fetch_done, 0.0), unit, num_segments=u
-            )
-        lock_time, lock_done = lock_pass(
-            state.lock_time, batch_ready, n_valid_u, cfg, plat
+        # -- stage 2a: global timing-model lock over the admission epoch.
+        # The post-TX ``fetch_done`` *defines* the epoch's ready times (a
+        # remote unit's batch is not at the device until its last frame
+        # lands); the epoch's per-unit reductions are reshapes under the
+        # ring layout (fixed-width unit slabs — integer sums and f32
+        # maxes, exact under any association) and segmented forms on the
+        # direct path. ``cfg.lock_order`` decides acquisition order; see
+        # ``acquire_lock``.
+        epoch = Epoch.from_batch(
+            batch, fetch_done, unit, "ring" if ring_layout else "direct"
+        )
+        n_valid_u = epoch.unit_counts(u)
+        lock_time, lock_done, unit_order = acquire_lock(
+            state.lock_time, epoch, u, cfg, plat
         )
         disp_time = jnp.maximum(state.disp_time, lock_done)
-        arrival = jnp.maximum(fetch_done, lock_done[unit])
+        epoch = epoch.admit(lock_done)
+        arrival = epoch.arrival
 
-        # -- stage 2b: target completion times.
+        # -- stage 2b: target completion times. Under the ready-time lock
+        # the shared timing state is updated in lock-acquisition order:
+        # unit blocks dispatch as their units acquired the lock (within a
+        # unit program order holds), via a pure gather/scatter row
+        # permutation — the float expression tree inside timing.update is
+        # the verbatim reference one either way.
         tbatch = dataclasses.replace(batch, arrival=arrival)
+        dispatch_order = (
+            admission_row_order(unit_order, epoch, u)
+            if unit_order is not None else None
+        )
         if cfg.timing_scope == "local":
             tstate, target = timing.local_scope_update(
                 state.tstate, arrival, valid, ssd, u,
@@ -307,7 +351,8 @@ class DevicePipeline:
             )
         else:
             tstate, target = timing.update(
-                state.tstate, tbatch, ssd, cfg.mode, use_compaction=compact
+                state.tstate, tbatch, ssd, cfg.mode, use_compaction=compact,
+                dispatch_order=dispatch_order,
             )
 
         # -- stage 3: backend data transfer.
@@ -415,30 +460,6 @@ class DevicePipeline:
         )
         state, _, res = self.process(state, batch, fetch_done, unit)
         return state, res
-
-    # -- deprecated public aliases of the ring-less direct path --------------
-    # The direct path was never a production surface; these aliases keep
-    # old call sites importable one release longer. Use the SQ/CQ client
-    # (``StorageClient.submit``) — or, in tests, the underscore names.
-    def fetch_direct(self, state, t_submit, valid):
-        warnings.warn(
-            "DevicePipeline.fetch_direct is deprecated (test-only "
-            "ring-less path): production consumers go through "
-            "StorageClient.submit; tests use _fetch_direct",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self._fetch_direct(state, t_submit, valid)
-
-    def submit_direct(self, state, batch):
-        warnings.warn(
-            "DevicePipeline.submit_direct is deprecated (test-only "
-            "ring-less path): production consumers go through "
-            "StorageClient.submit; tests use _submit_direct",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return self._submit_direct(state, batch)
 
 
 def init_array_state(init_fn, num_devices: int):

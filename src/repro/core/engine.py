@@ -110,6 +110,10 @@ class Metrics:
     # device and are excluded.
     tenant_completed: jax.Array  # (T,) f32
     tenant_sum_e2e: jax.Array    # (T,) f32 us
+    # Per-tenant E2E latency histograms, same log-spaced buckets as
+    # lat_hist — the tail-latency view the ready-time lock study (fig29)
+    # reads its per-class p99 and SLO-attainment numbers from.
+    tenant_lat_hist: jax.Array   # (T, HIST_BUCKETS) f32
 
     @staticmethod
     def zero(num_tenants: int = 1) -> "Metrics":
@@ -124,6 +128,7 @@ class Metrics:
             jnp.zeros((HIST_BUCKETS,), jnp.float32), z,
             jnp.zeros((num_tenants,), jnp.float32),
             jnp.zeros((num_tenants,), jnp.float32),
+            jnp.zeros((num_tenants, HIST_BUCKETS), jnp.float32),
         )
 
     def iops(self) -> jax.Array:
@@ -162,6 +167,39 @@ class Metrics:
             -1, self.tenant_sum_e2e.shape[-1]
         ).sum(axis=0)
         return s / jnp.maximum(c, 1.0)
+
+    def _pooled_tenant_hist(self) -> jax.Array:
+        """(T, HIST_BUCKETS) with any leading device axes summed away."""
+        t = self.tenant_completed.shape[-1]
+        return self.tenant_lat_hist.reshape(-1, t, HIST_BUCKETS).sum(axis=0)
+
+    def tenant_p99_us(self) -> jax.Array:
+        """(T,) per-tenant p99 E2E latency (device completions; stage-0
+        cache hits never reach the device and are excluded, matching
+        ``tenant_completed``)."""
+        return jax.vmap(lambda h: hist_percentile(h, 0.99))(
+            self._pooled_tenant_hist()
+        )
+
+    def tenant_p50_us(self) -> jax.Array:
+        """(T,) per-tenant median E2E latency (device completions)."""
+        return jax.vmap(lambda h: hist_percentile(h, 0.50))(
+            self._pooled_tenant_hist()
+        )
+
+    def slo_attainment(self, slo_us: float) -> jax.Array:
+        """(T,) fraction of each tenant's device completions whose E2E
+        latency landed at or below ``slo_us`` (histogram-resolution: a
+        request counts as attained when its bucket's *lower* edge is
+        under the SLO, so the estimate errs optimistic by at most one
+        log-bucket). Tenants with no completions report 1.0 — an empty
+        class has missed nothing."""
+        h = self._pooled_tenant_hist()
+        n = jnp.arange(HIST_BUCKETS, dtype=jnp.int32)
+        ok = (n <= latency_bucket(jnp.float32(slo_us))).astype(jnp.float32)
+        met = jnp.sum(h * ok[None, :], axis=1)
+        tot = jnp.sum(h, axis=1)
+        return jnp.where(tot > 0, met / jnp.maximum(tot, 1.0), 1.0)
 
     def p50_us(self) -> jax.Array:
         return hist_percentile(self.lat_hist, 0.50)
@@ -283,6 +321,9 @@ def engine_round(
     dev = dataclasses.replace(state.device, disp_time=disp_time)
     # Fetched batches are SQ-major with fetch_width rows per SQ — the
     # ring-layout promise that lets compaction use block reductions.
+    # process() wraps the batch in one admission epoch: the service
+    # units of this round contend for the stage-2a lock in unit-loop
+    # order, or by post-TX batch arrival under lock_order="ready_time".
     dev, cqr, res = pipe.process(
         dev, batch, fetch_done, unit, state.cq, ring_layout=True
     )
@@ -306,6 +347,9 @@ def engine_round(
         valid.astype(jnp.float32), t_bucket, num_segments=n_ten
     )
     tenant_sum_e2e = jax.ops.segment_sum(e2e, t_bucket, num_segments=n_ten)
+    tenant_lat_hist = jnp.zeros((n_ten, HIST_BUCKETS), jnp.float32).at[
+        t_bucket, latency_bucket(e2e)
+    ].add(valid.astype(jnp.float32))
 
     # -- functional data movement --------------------------------------------
     flash, bufs = state.flash, state.bufs
@@ -401,6 +445,7 @@ def engine_round(
         cache_hits=m.cache_hits + hits_count,
         tenant_completed=m.tenant_completed + tenant_completed,
         tenant_sum_e2e=m.tenant_sum_e2e + tenant_sum_e2e,
+        tenant_lat_hist=m.tenant_lat_hist + tenant_lat_hist,
     )
 
     resub_t = jnp.where(resub_valid, resub_t, FAR)

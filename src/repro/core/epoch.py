@@ -1,0 +1,161 @@
+"""The admission epoch: one fetched batch's view of the timing core.
+
+Every ``DevicePipeline.process`` pass handles one *epoch* — the set of
+requests a round of dispatchers fetched together. Before PR 9 the
+stage-2 inputs (arrival cursor, post-fabric ready times, tenant ids,
+validity mask, unit ids, and the ring-layout promise) traveled as loose
+positional arguments, and the global timing lock could only serialize
+units in their loop index order because nothing carried "when did this
+unit's batch actually become ready" as first-class state. ``Epoch``
+packages exactly that tuple — ``(arrival, ready, tenant, valid, unit,
+layout)`` — so the lock (``device.acquire_lock``) and the timing model
+(``timing.update(dispatch_order=...)``) can consume admission order as
+data:
+
+  * ``ready``   — per-row device-arrival times *after* the fabric TX hop
+                  (the hop defines ready times: a remote unit's batch is
+                  not at the device until its last frame lands);
+  * ``arrival`` — the evolving per-row time cursor: equals ``ready`` at
+                  admission, then ``max(ready, lock grant)`` once the
+                  unit holds the lock (``admit``);
+  * ``layout``  — "ring" promises the SQ-major fixed-width row blocks of
+                  ``frontend._gather_entries`` (units are contiguous
+                  ``N // U`` row slabs), which turns the per-unit
+                  reductions and the admission-order row permutation into
+                  reshapes/gathers; "direct" falls back to segmented
+                  forms on the non-decreasing ``unit`` key.
+
+Ordering helpers (``unit_ready_order`` / ``admission_row_order``) build
+the lock-acquisition permutation from ``(ready, unit)`` keys: a stable
+sort, so ties (and the all-equal single-tenant case) preserve program
+order — the property the ``lock_order="ready_time"`` equivalence tests
+pin. The permutation moves *whole unit blocks* and never any float
+arithmetic, so the timing model's expression tree stays verbatim (the
+PR-8 FMA-contraction lesson: gathers are bit-exact, reformulations are
+not).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import RequestBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Epoch:
+    """One fetched batch's admission state (struct of (N,) arrays).
+
+    ``layout`` is static metadata ("ring" | "direct"), not a leaf —
+    registered via explicit ``data_fields``/``meta_fields`` below.
+    """
+
+    arrival: jax.Array  # (N,) f32 evolving per-row time cursor
+    ready: jax.Array    # (N,) f32 post-fabric-TX device arrival times
+    tenant: jax.Array   # (N,) i32 QoS class per row
+    valid: jax.Array    # (N,) bool
+    unit: jax.Array     # (N,) i32 non-decreasing service-unit ids
+    layout: str = "direct"   # "ring" | "direct" (static)
+
+    @staticmethod
+    def from_batch(
+        batch: RequestBatch,
+        ready: jax.Array,
+        unit: jax.Array,
+        layout: str,
+    ) -> "Epoch":
+        """Admission view of a fetched batch; ``ready`` is the post-TX
+        fetch-done vector (== raw fetch times on a local drive)."""
+        return Epoch(
+            arrival=ready, ready=ready, tenant=batch.tenants,
+            valid=batch.valid, unit=unit, layout=layout,
+        )
+
+    @property
+    def capacity(self) -> int:
+        return self.ready.shape[0]
+
+    @property
+    def is_ring(self) -> bool:
+        return self.layout == "ring"
+
+    def rows_per_unit(self, num_units: int) -> int:
+        """Fixed block width of the ring layout's unit slabs."""
+        return self.capacity // num_units
+
+    # -- per-unit reductions (stage-2a inputs) -------------------------------
+    def unit_counts(self, num_units: int) -> jax.Array:
+        """(U,) valid-request count per unit (exact integer reduction)."""
+        if self.is_ring:
+            return jnp.sum(
+                self.valid.reshape(num_units, -1).astype(jnp.int32), axis=1
+            )
+        return jax.ops.segment_sum(
+            self.valid.astype(jnp.int32), self.unit, num_segments=num_units
+        )
+
+    def unit_ready(self, num_units: int) -> jax.Array:
+        """(U,) batch ready time per unit: the max over its valid rows
+        (a unit's batch enters the lock once its last frame has landed;
+        empty units reduce to 0)."""
+        masked = jnp.where(self.valid, self.ready, 0.0)
+        if self.is_ring:
+            return jnp.max(masked.reshape(num_units, -1), axis=1)
+        return jax.ops.segment_max(
+            masked, self.unit, num_segments=num_units
+        )
+
+    # -- lock-grant application ----------------------------------------------
+    def admit(self, lock_done: jax.Array) -> "Epoch":
+        """Advance the cursor to the lock grant: ``arrival = max(ready,
+        lock_done[unit])`` — a row dispatches only once its unit holds
+        the lock *and* its own frame has landed."""
+        return dataclasses.replace(
+            self, arrival=jnp.maximum(self.ready, lock_done[self.unit])
+        )
+
+
+jax.tree_util.register_dataclass(
+    Epoch,
+    data_fields=["arrival", "ready", "tenant", "valid", "unit"],
+    meta_fields=["layout"],
+)
+
+
+def unit_ready_order(batch_ready: jax.Array) -> jax.Array:
+    """(U,) lock-acquisition permutation: units by ``(ready, index)``.
+
+    Stable sort, so equal ready times keep program order — with monotone
+    ready times this is the identity and ``lock_order="ready_time"``
+    degenerates to ``"program"`` bit-exactly (property-tested)."""
+    return jnp.argsort(batch_ready, stable=True).astype(jnp.int32)
+
+
+def admission_row_order(
+    unit_order: jax.Array,   # (U,) i32 acquisition order (unit indices)
+    epoch: Epoch,
+    num_units: int,
+) -> jax.Array:
+    """(N,) row permutation dispatching unit *blocks* in lock order.
+
+    Position j of the permuted batch holds the j-th row dispatched: unit
+    blocks follow ``unit_order``, rows inside a block keep program order
+    (within a unit nothing reorders — the lock is per unit). Pure index
+    arithmetic under the ring layout's fixed-width slabs; a stable
+    argsort of each row's acquisition rank otherwise. Either way the
+    permutation is data movement only: gathering rows through it and
+    scattering results back cannot perturb a single float (the
+    bit-exactness contract ``timing.update(dispatch_order=...)`` relies
+    on)."""
+    if epoch.is_ring:
+        w = epoch.rows_per_unit(num_units)
+        return (
+            unit_order[:, None] * jnp.int32(w)
+            + jnp.arange(w, dtype=jnp.int32)[None, :]
+        ).reshape(-1)
+    lock_pos = jnp.zeros((num_units,), jnp.int32).at[unit_order].set(
+        jnp.arange(num_units, dtype=jnp.int32)
+    )
+    return jnp.argsort(lock_pos[epoch.unit], stable=True).astype(jnp.int32)

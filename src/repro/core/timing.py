@@ -26,6 +26,7 @@ where j is the within-instance rank inside the batch.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Tuple
 
 import jax
@@ -338,13 +339,40 @@ def update(
     mode: str = "aggregated",
     axis_name: str | None = None,
     use_compaction: bool = False,
+    dispatch_order: jax.Array | None = None,
 ) -> Tuple[TimingState, jax.Array]:
     """Dispatch to the configured update mechanism.
 
     ``use_compaction`` routes round-robin aggregated updates through the
     sort-free compacted form (``compact_rr_batch_times``); every other
     mode/routing combination falls back to its reference path.
+
+    ``dispatch_order`` (PR 9, the ready-time lock) is an optional (N,)
+    row permutation giving the order requests enter the shared timing
+    state — position j of the permuted stream is original row
+    ``dispatch_order[j]``. The batch is physically gathered through it,
+    priced by the unchanged reference paths (round-robin assignment,
+    busy-cursor recurrence, and the sort/compaction plans all key off
+    the *permuted* stream — the ready-time keys thread through
+    ``_sorted_batch_core``/``compact_rr_batch_times`` as pure layout),
+    and completions scatter back to original row order. Gather + scatter
+    only: the float expression tree is the verbatim reference one, so a
+    monotone (identity) order is bit-exact with ``None`` and the PR-8
+    FMA-contraction hazard cannot arise. ``None`` skips the permutation
+    entirely (the program-order fast path — zero added ops).
     """
+    if dispatch_order is not None:
+        d = dispatch_order
+        permuted = dataclasses.replace(
+            batch,
+            arrival=batch.arrival[d],
+            lba=batch.lba[d],
+            valid=batch.valid[d],
+        )
+        state, comp_p = update(
+            state, permuted, ssd, mode, axis_name, use_compaction
+        )
+        return state, jnp.zeros_like(comp_p).at[d].set(comp_p)
     if axis_name is not None and mode == "aggregated":
         return distributed_aggregated_update(state, batch, ssd, axis_name)
     if mode == "per_request":

@@ -541,6 +541,20 @@ class EngineConfig:
     use_sort_plan: bool = True
     use_compaction: bool = True
     use_pallas_segscan: "bool | None" = None
+    # Global timing-lock acquisition order (stage 2a, device.acquire_lock).
+    # "program" (the default) serializes service units in their unit-loop
+    # index order — the NVMeVirt/SwarmIO behavior every earlier PR pinned
+    # bit-exactly. "ready_time" grants the lock in order of each unit's
+    # epoch *ready time* (the post-fabric-TX arrival of its batch at the
+    # device, ties broken by unit index), and dispatches the timing model
+    # in the same acquisition order — so a bulk tenant's late wire tail
+    # no longer holds the lock in front of an earlier-ready latency
+    # tenant's unit (true cross-tenant isolation on misaligned tenant
+    # mixes; see workloads.MultiTenant(interleave=True) and fig29).
+    # Whenever ready times are already monotone in program order the two
+    # orders coincide bit-exactly (property-tested). No effect under
+    # timing_scope="local" (there is no shared lock to order).
+    lock_order: str = "program"
     # Fused Pallas stage kernels (kernels/ops/): a one-pass
     # post-and-reap ring layout (``fused_reap``) and a sequential flash
     # die-contention fold (``die_contention``). Off by default — the lax
@@ -576,6 +590,8 @@ class EngineConfig:
             raise ValueError(f"unknown timing mode: {self.mode!r}")
         if self.timing_scope not in ("global", "local"):
             raise ValueError(f"unknown timing_scope: {self.timing_scope!r}")
+        if self.lock_order not in ("program", "ready_time"):
+            raise ValueError(f"unknown lock_order: {self.lock_order!r}")
         if self.transport not in ("p2p", "host"):
             raise ValueError(f"unknown transport: {self.transport!r}")
         units = self.num_units if self.frontend == "distributed" else 1

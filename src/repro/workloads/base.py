@@ -107,11 +107,18 @@ class Workload:
 
         Multi-tenant generators override this to partition the SQs
         across classes; the assignment must be static per SQ so a
-        closed-loop slot never migrates between tenants mid-run, and
-        should put each class on a *contiguous* SQ block so tenants
-        align with whole service units (a unit's fetched batch enters
-        the timing lock together, so a unit mixing classes would chain
-        a latency tenant to its bulk neighbor's slowest wire frame).
+        closed-loop slot never migrates between tenants mid-run. Keep
+        every service *unit* single-class (a unit's fetched batch
+        enters the timing lock together, so a unit internally mixing
+        classes chains a latency tenant to its bulk neighbor's slowest
+        wire frame under any lock order). Whether the single-class
+        units themselves must be contiguous depends on the lock:
+        under ``lock_order="program"`` misaligned (interleaved) unit
+        placements still serialize in loop order — a latency unit
+        queues behind the bulk unit one position earlier even when its
+        batch arrived first — while ``"ready_time"`` admits units by
+        batch arrival and isolates interleaved placements too (see
+        ``MultiTenant(interleave=True)`` and fig29).
         """
         del cfg, salt
         return jnp.zeros_like(sq_id)

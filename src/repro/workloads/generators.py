@@ -102,21 +102,31 @@ class SteadyStateMixed(MixedReadWrite):
 class MultiTenant(ClosedLoop):
     """Closed loop with the SQs partitioned across tenant (QoS) classes.
 
-    The SQ range splits into T *contiguous* blocks — SQ q serves tenant
-    ``q * T // num_sqs`` — so each class owns whole service units
-    (static, a slot never migrates mid-run; a unit mixing classes would
-    drag a latency tenant through the timing lock behind its bulk
-    neighbor's slowest wire frame). Each class draws its own read/write
-    mix from ``tenant_read_frac`` — e.g. ``(1.0, 0.0)`` is the fig26
-    pairing of a latency-sensitive read tenant with a bulk-write tenant
-    whose large TX payloads would starve the reads' SQEs on a shared
-    link without QoS. Pair with ``FabricConfig.qos_weights`` (same
-    length, same order) to give the fabric's weighted-fair arbiter the
-    classes to arbitrate; per-tenant achieved throughput lands in
-    ``Metrics.tenant_completed``/``tenant_share()``.
+    By default the SQ range splits into T *contiguous* blocks — SQ q
+    serves tenant ``q * T // num_sqs`` — so each class owns whole
+    service units (static, a slot never migrates mid-run). With
+    ``interleave=True`` the assignment is round-robin — SQ q serves
+    tenant ``q % T`` — the *misaligned* placement real multi-tenant
+    deployments end up with when queues are grabbed first-come: tenant
+    units alternate through the unit loop, so under the program-order
+    timing lock every latency-tenant unit queues behind the bulk unit
+    one loop position earlier even when its batch arrived first. This
+    is the regime ``lock_order="ready_time"`` exists for (fig29); keep
+    ``num_units == num_sqs`` so each unit stays single-tenant — the
+    lock serializes whole units, so a unit *internally* mixing classes
+    cannot be isolated by any acquisition order. Each class draws its
+    own read/write mix from ``tenant_read_frac`` — e.g. ``(1.0, 0.0)``
+    is the fig26 pairing of a latency-sensitive read tenant with a
+    bulk-write tenant whose large TX payloads would starve the reads'
+    SQEs on a shared link without QoS. Pair with
+    ``FabricConfig.qos_weights`` (same length, same order) to give the
+    fabric's weighted-fair arbiter the classes to arbitrate; per-tenant
+    achieved throughput lands in ``Metrics.tenant_completed``/
+    ``tenant_share()`` and tail latency in ``tenant_p99_us()``.
     """
 
     tenant_read_frac: tuple = (1.0, 0.0)
+    interleave: bool = False
 
     def __post_init__(self) -> None:
         if len(self.tenant_read_frac) < 1:
@@ -138,6 +148,8 @@ class MultiTenant(ClosedLoop):
             raise ValueError(
                 f"num_sqs={cfg.num_sqs} cannot host {t} tenant classes"
             )
+        if self.interleave:
+            return sq_id % jnp.int32(t)
         return sq_id * jnp.int32(t) // jnp.int32(cfg.num_sqs)
 
     def opcode(self, req_id, salt=0, tenant=None):

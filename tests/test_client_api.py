@@ -5,8 +5,11 @@ read_array, write_array, read_striped, read_replicated) are thin
 wrappers over ``submit``/``submit_array``/``submit_striped`` and must
 stay *bit-exact* against op batches built by hand — including tenant
 QoS classes and remote switched-fabric configs. Also covers mixed
-read/write batches and the deprecation of the ring-less
-``DevicePipeline.fetch_direct``/``submit_direct`` shortcuts.
+read/write batches, the ``write_replicated`` fan-out (completion =
+max over replicas, one hand-built grid), and the *removal* of the
+ring-less ``DevicePipeline.fetch_direct``/``submit_direct`` shortcuts
+(deprecated with warnings since PR 7, gone in PR 9 — the underscore
+test-only names remain).
 """
 import jax
 import jax.numpy as jnp
@@ -192,6 +195,76 @@ def test_read_replicated_r1_bit_exact_vs_submit_array(name, ecfg):
     )
 
 
+@pytest.mark.parametrize("name,ecfg", [CONFIGS[0], CONFIGS[1]])
+def test_write_replicated_bit_exact_vs_submit_array(name, ecfg):
+    """The R-way write fan-out must equal one hand-scattered
+    submit_array over the same (M, N) grid: every request lands on all
+    R replica drives ``(lba + r) % M`` and completes at the max over
+    its replica completions."""
+    m, n, r = 3, 20, 2
+    client = StorageClient(SSD, ecfg)
+    flash = _flash()
+    lba, t, valid, tenant = _batch(n=n, seed=5)
+    data = jnp.ones((n, 16)) * jnp.arange(n)[:, None]
+    st1, fl1, done1 = client.write_replicated(
+        client.init_array_state(m), flash, data, lba, t, valid,
+        replicas=r, tenant=tenant,
+    )
+
+    # Hand-build the identical fan-out grid: request-major flattened
+    # (N*R,) candidates, ranked into per-drive slots.
+    cand = (lba[:, None] + jnp.arange(r, dtype=jnp.int32)[None, :]) % m
+    valid_rep = jnp.repeat(valid, r)
+    drive = jnp.where(valid_rep, cand.reshape(-1), m)
+    rank = segment_rank(drive)
+    row = jnp.clip(drive, 0, m - 1)
+    col = jnp.where(valid_rep, rank, n * r)
+
+    def scat(x, fill, dtype):
+        base = jnp.full((m, n), fill, dtype)
+        return base.at[row, col].set(x, mode="drop")
+
+    ops = StorageOps(
+        opcode=jnp.full((m, n), OP_WRITE, jnp.int32),
+        lba=scat(jnp.repeat(lba, r), 0, jnp.int32),
+        t_submit=scat(jnp.repeat(t, r), 0.0, jnp.float32),
+        tenant=scat(jnp.repeat(tenant, r), 0, jnp.int32),
+        valid=scat(valid_rep, False, bool),
+    )
+    st2, _, _, done2d = client.submit_array(
+        client.init_array_state(m), flash, ops
+    )
+    done_rep = done2d[row, jnp.clip(col, 0, n - 1)].reshape(n, r)
+    done2 = jnp.where(valid, jnp.max(done_rep, axis=1), 0.0)
+    np.testing.assert_array_equal(np.asarray(done1), np.asarray(done2))
+    for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # Durability: the store holds each valid request's block once, and
+    # a replica read of any valid lba returns it.
+    np.testing.assert_array_equal(
+        np.asarray(fl1[jnp.where(valid, lba, 1023)][valid]),
+        np.asarray(data[valid]),
+    )
+    # Completion is the max over replicas: no replica finishes later.
+    assert bool(jnp.all(done1[:, None] >= jnp.where(
+        valid[:, None], done_rep, 0.0
+    )))
+
+
+def test_write_replicated_r1_matches_plain_write_placement():
+    """R=1 degenerates to single-copy placement at drive lba % M."""
+    m, n = 2, 12
+    client = StorageClient(SSD, LOCAL)
+    flash = _flash()
+    lba = jnp.arange(n, dtype=jnp.int32)
+    data = jnp.full((n, 16), 2.5)
+    _, fl, done = client.write_replicated(
+        client.init_array_state(m), flash, data, lba, replicas=1
+    )
+    assert bool(jnp.all(done > 0.0))
+    np.testing.assert_array_equal(np.asarray(fl[:n]), np.asarray(data))
+
+
 def test_mixed_batch_reads_observe_writes():
     """One submit may mix opcodes/tenants: the functional gather sees
     this batch's writes, and every valid op completes."""
@@ -231,14 +304,18 @@ def test_wrapper_kwargs_are_uniform():
         assert params["tenant"].default == 0, name
 
 
-def test_direct_aliases_warn_deprecation():
+def test_direct_aliases_removed():
+    """The deprecated ring-less public aliases are gone (PR 9); the
+    underscore test-only entry points still work via the op API's
+    direct batch builder."""
     from repro.core.types import PlatformModel
+
+    assert not hasattr(DevicePipeline, "fetch_direct")
+    assert not hasattr(DevicePipeline, "submit_direct")
 
     pipe = DevicePipeline(LOCAL, SSD, PlatformModel())
     t = jnp.zeros((8,), jnp.float32)
     valid = jnp.ones((8,), bool)
     batch = make_direct_batch(jnp.arange(8, dtype=jnp.int32), t, valid)
-    with pytest.warns(DeprecationWarning, match="fetch_direct"):
-        pipe.fetch_direct(pipe.init_state(), t, valid)
-    with pytest.warns(DeprecationWarning, match="submit_direct"):
-        pipe.submit_direct(pipe.init_state(), batch)
+    _, res = pipe._submit_direct(pipe.init_state(), batch)
+    assert bool(jnp.all(res.target > 0.0))
