@@ -118,6 +118,34 @@ def _completed(st) -> float:
     return float(jnp.sum(st.metrics.completed))
 
 
+def sanitize_pass(quick: bool = True) -> None:
+    """Run every config family once under ``EngineConfig.sanitize``.
+
+    One checkify-instrumented invocation per family (same specs the
+    timed benchmark uses) — raises ``checkify.JaxRuntimeError`` on the
+    first violated pipeline invariant, so a clean pass certifies the
+    benchmarked configs before any timing is trusted. Never timed: the
+    functionalized program is a different (slower) XLA program than the
+    benchmarked one.
+    """
+    plat = PlatformModel()
+    for spec in _configs(quick):
+        cfg, ssd, wl = spec["cfg"], spec["ssd"], spec["wl"]
+        m, rounds = spec["num_devices"], spec["rounds"]
+        if m == 1:
+            st = engine.init_state(cfg, ssd, wl)
+            runner = engine.make_runner(
+                cfg, ssd, wl, plat, rounds, sanitize=True
+            )
+        else:
+            st = engine.init_array_state(cfg, ssd, wl, m)
+            runner = engine.make_array_runner(
+                cfg, ssd, wl, plat, rounds, sanitize=True
+            )
+        jax.block_until_ready(runner(st))
+        print(f"  sanitize: {spec['name']} checkify-clean")
+
+
 def time_variant(cfg, ssd, wl, rounds, num_devices, donate, reps):
     """Warm up one runner, then time ``reps`` chained invocations.
 

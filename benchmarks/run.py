@@ -15,16 +15,25 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sweeps for CI")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="first run each config family once with "
+                         "EngineConfig.sanitize=True (checkify pipeline "
+                         "invariants); fails fast on the first violation")
     args = ap.parse_args()
 
     from benchmarks import common as C
-    from benchmarks.emulator_speed import bench_figure
+    from benchmarks.emulator_speed import bench_figure, sanitize_pass
     from benchmarks.figures import ALL
 
     # One warmup invocation before anything is timed: the first jit call
     # of the process pays backend init + dispatch warm-up on top of its
     # own compile, which would otherwise land in the first figure's time.
     C.jit_warmup()
+
+    if args.sanitize:
+        t = time.perf_counter()
+        sanitize_pass(quick=args.quick)
+        print(f"  sanitize pass clean ({time.perf_counter()-t:.1f}s)")
 
     # perf_counter everywhere: the same monotonic clock benchmarks/common.py
     # times the engine with (time.time() can step under NTP adjustment).

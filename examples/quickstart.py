@@ -265,3 +265,23 @@ for order in ("program", "ready_time"):
     print(f"lock {order:10s}: latency-tenant p99 {float(p99[0]):7.0f} us "
           f"(SLO<=500us attained {float(slo[0])*100:5.1f}%), "
           f"bulk p99 {float(p99[1]):7.0f} us")
+
+# 15. Trust but checkify: sanitize=True threads jax.experimental.checkify
+#     assertions through the whole pipeline (ring indices in bounds,
+#     completion times monotone and non-negative, valid-mask
+#     conservation across the compaction/admission permutations, flash
+#     free-page and fabric cursor invariants). The checks only observe —
+#     the sanitized run's final state is bitwise identical to the
+#     default run's (tests/test_sanitize.py) — but the program is
+#     slower, so it's off by default; benchmarks/run.py --sanitize and
+#     scripts/profile_engine.py --sanitize run it as a certification
+#     pass before timing anything. A violated invariant raises
+#     checkify.JaxRuntimeError with the failed check's message.
+san_runner = engine.make_runner(fast_cfg, ssd, wl, PlatformModel(),
+                                rounds=8, sanitize=True)
+san = jax.block_until_ready(
+    san_runner(engine.init_state(fast_cfg, ssd, wl))
+)
+print(f"sanitized run : checkify-clean, "
+      f"{float(san.metrics.completed):.0f} reqs retired "
+      f"(bit-exact with the unsanitized pipeline)")

@@ -176,6 +176,12 @@ def main() -> int:
                     help="override EngineConfig.lock_order — profile the "
                          "ready-time admission permutation's overhead "
                          "against the program-order path")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run one checkify-instrumented invocation "
+                         "(EngineConfig.sanitize=True) before profiling "
+                         "— certifies the profiled config's pipeline "
+                         "invariants; the timed stage closures stay "
+                         "unsanitized (checkify rewrites the program)")
     args = ap.parse_args()
 
     spec = dict(next(s for s in _configs(quick=False)
@@ -185,6 +191,23 @@ def main() -> int:
     cfg, ssd, wl = spec["cfg"], spec["ssd"], spec["wl"]
     plat = PlatformModel()
     C.jit_warmup()
+
+    # -- optional sanitized certification pass -----------------------------
+    if args.sanitize:
+        m = spec["num_devices"]
+        if m == 1:
+            s_st = engine.init_state(cfg, ssd, wl)
+            s_runner = engine.make_runner(
+                cfg, ssd, wl, plat, args.rounds, sanitize=True
+            )
+        else:
+            s_st = engine.init_array_state(cfg, ssd, wl, m)
+            s_runner = engine.make_array_runner(
+                cfg, ssd, wl, plat, args.rounds, sanitize=True
+            )
+        jax.block_until_ready(s_runner(s_st))
+        print(f"sanitize: {args.config} checkify-clean "
+              f"({args.rounds} rounds)")
 
     # -- trace one post-warmup steady-state runner invocation --------------
     if not args.no_trace:

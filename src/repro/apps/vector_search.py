@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.client import StorageClient
+from repro.core.segops import stable_argsort
 from repro.core.types import (
     OP_WRITE,
     CacheConfig,
@@ -103,7 +104,7 @@ def _merge_top(dist, idx, expanded, new_d, new_i, list_size):
     all_e = jnp.concatenate(
         [expanded, jnp.zeros_like(new_i, bool)], axis=1
     )
-    order = jnp.argsort(all_d, axis=1)
+    order = stable_argsort(all_d, axis=1)
     all_d = jnp.take_along_axis(all_d, order, axis=1)
     all_i = jnp.take_along_axis(all_i, order, axis=1)
     all_e = jnp.take_along_axis(all_e, order, axis=1)
@@ -115,7 +116,7 @@ def _merge_top(dist, idx, expanded, new_d, new_i, list_size):
 
     dup = jax.vmap(dedupe_row)(all_i)
     all_d = jnp.where(dup, BIG, all_d)
-    order2 = jnp.argsort(all_d, axis=1)
+    order2 = stable_argsort(all_d, axis=1)
     all_d = jnp.take_along_axis(all_d, order2, axis=1)[:, :list_size]
     all_i = jnp.take_along_axis(all_i, order2, axis=1)[:, :list_size]
     all_e = jnp.take_along_axis(all_e, order2, axis=1)[:, :list_size]

@@ -80,7 +80,7 @@ from repro.core.device import (
     init_array_state as _stack_states,
 )
 from repro.core.frontend import SQRings
-from repro.core.segops import segment_rank
+from repro.core.segops import segment_rank, stable_argsort
 from repro.core.types import (
     OP_WRITE,
     EngineConfig,
@@ -177,7 +177,7 @@ class StorageClient:
 
         # Deal time-sorted requests across SQs; req_id carries the
         # original index so completions scatter back to request order.
-        order = jnp.argsort(t_submit, stable=True)
+        order = stable_argsort(t_submit)
         sq_id = frontend.deal_sqs(n, cfg)
         zeros = jnp.zeros((n,), jnp.int32)
         if tenant is None:
@@ -550,7 +550,9 @@ class StorageClient:
         def route(load, x):
             cand_i, v = x
             d = cand_i[jnp.argmin(load[cand_i])]
-            load = jnp.where(v, load.at[d].add(jnp.float32(est)), load)
+            load = jnp.where(
+                v, load.at[d].add(jnp.float32(est), mode="drop"), load
+            )
             return load, jnp.where(v, d, jnp.int32(m))
 
         _, drive = jax.lax.scan(route, load0, (cand, valid))

@@ -19,7 +19,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.segops import counting_sort_plan, queueing_scan, segment_rank
+from repro.core.segops import (
+    counting_sort_plan,
+    queueing_scan,
+    segment_rank,
+    stable_argsort,
+)
 from repro.core.types import (
     EngineConfig,
     PlatformModel,
@@ -109,7 +114,7 @@ def baseline_worker_times(
 
     # --- global map/unmap serialization (requests in dispatch order).
     map_cost = jnp.where(batch.valid, jnp.float32(plat.per_req_map_us), 0.0)
-    heads0 = jnp.zeros((n,), bool).at[0].set(True)
+    heads0 = jnp.zeros((n,), bool).at[0].set(True, mode="drop")
     seed0 = jnp.broadcast_to(map_time, (n,))
     mapped = queueing_scan(
         fetch_done, map_cost, heads0, seed0, use_pallas=pallas
@@ -124,7 +129,7 @@ def baseline_worker_times(
         plan = counting_sort_plan(lane, u * w)
         order, heads = plan.order, plan.heads
     else:
-        order = jnp.argsort(lane, stable=True)
+        order = stable_argsort(lane)
         heads = jnp.concatenate(
             [jnp.ones((1,), bool), lane[order][1:] != lane[order][:-1]]
         )
@@ -132,7 +137,7 @@ def baseline_worker_times(
     busy = queueing_scan(
         mapped[order], cost[order], heads, seed, use_pallas=pallas
     )
-    ready = jnp.zeros_like(busy).at[order].set(busy)
+    ready = jnp.zeros_like(busy).at[order].set(busy, mode="drop")
 
     new_work = jax.ops.segment_max(
         busy, lane[order], num_segments=u * w

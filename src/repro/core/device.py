@@ -75,6 +75,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 
 from repro.core import datapath, fabric as fabric_mod, frontend, qp, segops
 from repro.core import timing
@@ -177,6 +178,7 @@ def acquire_lock(
     else:
         cost = jnp.where(n_valid_u > 0, plat.lock_per_batch_us, 0.0)
 
+    # repro-lint: pinned-expr lock-scan
     def step(t, x):
         ready, c = x
         done = jnp.maximum(t, ready) + c
@@ -187,10 +189,129 @@ def acquire_lock(
         lock_end, granted = jax.lax.scan(
             step, lock_time, (batch_ready[unit_order], cost[unit_order])
         )
-        lock_done = jnp.zeros_like(granted).at[unit_order].set(granted)
+        lock_done = jnp.zeros_like(granted).at[unit_order].set(
+            granted, mode="drop"
+        )
         return lock_end, lock_done, unit_order
     lock_end, lock_done = jax.lax.scan(step, lock_time, (batch_ready, cost))
     return lock_end, lock_done, None
+    # repro-lint: end-pinned-expr
+
+
+def _sanitize_checks(
+    cfg: EngineConfig,
+    prev: DeviceState,
+    new: DeviceState,
+    batch: RequestBatch,
+    res: PipelineResult,
+    dispatch_order: jax.Array | None,
+    cq_counts: jax.Array | None,
+) -> None:
+    """The ``EngineConfig.sanitize`` checkify assertions (PR 10).
+
+    Pure observation — no data-path op changes — so a sanitized run's
+    state stays bit-exact with the default run. These guard the failure
+    modes JAX makes *silent*: an OOB ring index clamps/drops instead of
+    erroring (corrupting CQ permutations), a broken admission or
+    compaction permutation double-prices some rows and drops others,
+    and flash/fabric accounting underflow shows up only as impossible
+    virtual times rounds later. Callers must functionalize with
+    ``checkify.checkify`` before jit (``engine.make_runner(...,
+    sanitize=True)`` does); a plain jit trace with sanitize on raises
+    at trace time by design — the flag must never be silently inert.
+    """
+    valid = batch.valid
+
+    def rows_ok(pred: jax.Array) -> jax.Array:
+        return jnp.all(jnp.where(valid, pred, True))
+
+    # -- ring scatter/gather indices in bounds ---------------------------
+    checkify.check(
+        rows_ok((batch.sq_id >= 0) & (batch.sq_id < cfg.num_sqs)),
+        "sanitize: valid row carries an SQ id outside [0, num_sqs) — "
+        "the CQ scatter would silently drop its completion",
+    )
+    checkify.check(
+        rows_ok((batch.slot >= 0) & (batch.slot < cfg.sq_depth)),
+        "sanitize: valid row carries a ring slot outside [0, sq_depth)",
+    )
+
+    # -- completion times monotone non-negative --------------------------
+    checkify.check(
+        rows_ok(res.arrival >= 0.0),
+        "sanitize: negative post-lock arrival time on a valid row",
+    )
+    checkify.check(
+        rows_ok(res.target >= res.arrival),
+        "sanitize: timing-model completion precedes its arrival",
+    )
+    checkify.check(
+        rows_ok(res.ready >= res.arrival),
+        "sanitize: data-path completion precedes its arrival",
+    )
+    checkify.check(
+        rows_ok(res.flash_done >= 0.0),
+        "sanitize: negative flash-backend completion time",
+    )
+    checkify.check(
+        rows_ok(res.reaped >= res.done),
+        "sanitize: CQ reap time precedes the wire completion it reaps",
+    )
+    checkify.check(
+        jnp.all(new.disp_time >= prev.disp_time)
+        & (new.lock_time >= prev.lock_time),
+        "sanitize: a dispatcher/lock busy-until cursor moved backwards",
+    )
+
+    # -- valid-mask conservation across permutations ---------------------
+    n = valid.shape[0]
+    nv = jnp.sum(valid.astype(jnp.int32))
+    if dispatch_order is not None:
+        hits = jnp.zeros((n,), jnp.int32).at[dispatch_order].add(
+            1, mode="drop"
+        )
+        checkify.check(
+            jnp.all(hits == 1),
+            "sanitize: admission dispatch_order is not a permutation — "
+            "some rows would be double-priced and others dropped",
+        )
+        checkify.check(
+            jnp.sum(valid[dispatch_order].astype(jnp.int32)) == nv,
+            "sanitize: valid-mask not conserved through the admission "
+            "permutation",
+        )
+    if cfg.use_compaction:
+        plan = segops.compact_epoch(valid)
+        hits = jnp.zeros((n,), jnp.int32).at[plan.pos].add(1, mode="drop")
+        checkify.check(
+            jnp.all(hits == 1) & (plan.n_valid == nv),
+            "sanitize: epoch compaction does not conserve the valid "
+            "mask (pos is not a permutation or n_valid drifted)",
+        )
+    if cq_counts is not None:
+        checkify.check(
+            jnp.sum(cq_counts.astype(jnp.int32)) == nv,
+            "sanitize: per-CQ valid counts do not sum to the epoch's "
+            "valid count",
+        )
+
+    # -- flash page accounting and fabric cursors ------------------------
+    checkify.check(
+        (new.flash.free_pages >= 0.0) & (new.flash.valid_pages >= 0.0),
+        "sanitize: flash page accounting went negative (free or live "
+        "page underflow — GC cannot keep up or double-counted)",
+    )
+    checkify.check(
+        jnp.all(new.flash.chip_busy >= prev.flash.chip_busy),
+        "sanitize: a flash die busy-until cursor moved backwards",
+    )
+    checkify.check(
+        jnp.all(new.fabric.tx_busy >= prev.fabric.tx_busy)
+        & jnp.all(new.fabric.rx_busy >= prev.fabric.rx_busy)
+        & jnp.all(new.fabric.switch_tx >= prev.fabric.switch_tx)
+        & jnp.all(new.fabric.switch_rx >= prev.fabric.switch_rx),
+        "sanitize: a fabric serialization cursor moved backwards",
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -438,10 +559,16 @@ class DevicePipeline:
                 posted_counts=cq_counts, fused_scatter=compact,
                 use_pallas_reap=cfg.use_pallas_reap,
             )
-        return new_state, cq, PipelineResult(
+        res = PipelineResult(
             arrival=arrival, target=target, ready=ready,
             flash_done=flash_done, done=done, reaped=reaped,
         )
+        if cfg.sanitize:
+            _sanitize_checks(
+                cfg, state, new_state, batch, res,
+                dispatch_order, cq_counts,
+            )
+        return new_state, cq, res
 
     def _submit_direct(
         self,

@@ -41,9 +41,10 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 
 from repro.core import cache as cache_mod
-from repro.core import datapath, frontend
+from repro.core import datapath, frontend, segops
 from repro.core.cache import CacheState
 from repro.core.device import DevicePipeline, DeviceState
 from repro.core.device import init_array_state as _stack_states
@@ -349,7 +350,7 @@ def engine_round(
     tenant_sum_e2e = jax.ops.segment_sum(e2e, t_bucket, num_segments=n_ten)
     tenant_lat_hist = jnp.zeros((n_ten, HIST_BUCKETS), jnp.float32).at[
         t_bucket, latency_bucket(e2e)
-    ].add(valid.astype(jnp.float32))
+    ].add(valid.astype(jnp.float32), mode="drop")
 
     # -- functional data movement --------------------------------------------
     flash, bufs = state.flash, state.bufs
@@ -404,7 +405,7 @@ def engine_round(
             )
             hit_bucket = hit_bucket.at[
                 latency_bucket(jnp.float32(ccfg.hit_us))
-            ].add(nh)
+            ].add(nh, mode="drop")
             ids = (
                 state.req_counter
                 + n * (k + 1)
@@ -457,7 +458,7 @@ def engine_round(
     )
     # Rows are SQ-major (q, f); sort each SQ's resubmissions by time.
     rt = resub_t.reshape(q, f)
-    order = jnp.argsort(rt, axis=1)
+    order = segops.stable_argsort(rt, axis=1)
     rows = jnp.arange(q, dtype=jnp.int32)[:, None]
 
     def pick(x):
@@ -527,9 +528,35 @@ def unalias(state):
     return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
 
+def _jit_runner(run_fn, donate: bool, sanitized: bool):
+    """jit (and, when sanitized, checkify-functionalize) a runner body.
+
+    ``checkify.check`` calls cannot trace under plain jit — they must be
+    functionalized first, so the sanitized path wraps ``run_fn`` with
+    ``checkify.checkify`` *inside* the jit boundary and the returned
+    runner ``err.throw()``s on the host. The error pytree rides along as
+    a regular output; the engine state itself is bit-exact with the
+    unsanitized run (the checks only observe).
+    """
+    donate_argnums = (0,) if donate else ()
+    if not sanitized:
+        return jax.jit(run_fn, donate_argnums=donate_argnums)
+    jitted = jax.jit(
+        checkify.checkify(run_fn, errors=checkify.user_checks),
+        donate_argnums=donate_argnums,
+    )
+
+    def runner(state):
+        err, out = jitted(state)
+        err.throw()
+        return out
+
+    return runner
+
+
 def make_runner(
     cfg: EngineConfig, ssd: SSDConfig, wl, plat: PlatformModel,
-    rounds: int, donate: bool = False,
+    rounds: int, donate: bool = False, sanitize: bool = False,
 ):
     """jit-compiled engine runner with static configs baked in.
 
@@ -538,30 +565,45 @@ def make_runner(
     storage in place instead of copying it — the steady-state benchmark
     mode, where each rep feeds the previous rep's output back in. The
     caller must not reuse a donated input afterwards, hence default off.
+
+    ``sanitize=True`` (or ``cfg.sanitize``) threads the checkify
+    invariant assertions through every pipeline pass (see
+    ``device._sanitize_checks``) and raises
+    ``checkify.JaxRuntimeError`` from the returned runner on the first
+    violated invariant. Virtual time is unchanged — the sanitized
+    runner's output state is bit-exact with the default runner's
+    (pinned by tests/test_sanitize.py).
     """
     wl = as_workload(wl)
+    sanitized = sanitize or cfg.sanitize
+    if sanitized:
+        cfg = cfg.replace(sanitize=True)
 
     def _run(state: EngineState) -> EngineState:
         return run(state, cfg, ssd, wl, plat, rounds)
 
-    return jax.jit(_run, donate_argnums=(0,) if donate else ())
+    return _jit_runner(_run, donate, sanitized)
 
 
 def make_array_runner(
     cfg: EngineConfig, ssd: SSDConfig, wl, plat: PlatformModel,
-    rounds: int, donate: bool = False,
+    rounds: int, donate: bool = False, sanitize: bool = False,
 ):
     """jit-compiled M-drive array runner: ``run`` vmapped over the leading
     device axis of a stacked EngineState — one XLA program per array.
-    ``donate`` as in ``make_runner``."""
+    ``donate``/``sanitize`` as in ``make_runner`` (checkify composes
+    with the vmap: any drive's violated invariant throws)."""
     wl = as_workload(wl)
+    sanitized = sanitize or cfg.sanitize
+    if sanitized:
+        cfg = cfg.replace(sanitize=True)
 
     def _run(states: EngineState) -> EngineState:
         return jax.vmap(
             lambda s: run(s, cfg, ssd, wl, plat, rounds)
         )(states)
 
-    return jax.jit(_run, donate_argnums=(0,) if donate else ())
+    return _jit_runner(_run, donate, sanitized)
 
 
 def make_sharded_array_runner(

@@ -41,6 +41,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.segops import stable_argsort
 from repro.core.types import RequestBatch
 
 
@@ -130,7 +131,7 @@ def unit_ready_order(batch_ready: jax.Array) -> jax.Array:
     Stable sort, so equal ready times keep program order — with monotone
     ready times this is the identity and ``lock_order="ready_time"``
     degenerates to ``"program"`` bit-exactly (property-tested)."""
-    return jnp.argsort(batch_ready, stable=True).astype(jnp.int32)
+    return stable_argsort(batch_ready).astype(jnp.int32)
 
 
 def admission_row_order(
@@ -156,6 +157,6 @@ def admission_row_order(
             + jnp.arange(w, dtype=jnp.int32)[None, :]
         ).reshape(-1)
     lock_pos = jnp.zeros((num_units,), jnp.int32).at[unit_order].set(
-        jnp.arange(num_units, dtype=jnp.int32)
+        jnp.arange(num_units, dtype=jnp.int32), mode="drop"
     )
-    return jnp.argsort(lock_pos[epoch.unit], stable=True).astype(jnp.int32)
+    return stable_argsort(lock_pos[epoch.unit]).astype(jnp.int32)

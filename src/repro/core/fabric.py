@@ -67,6 +67,7 @@ from repro.core.segops import (
     queueing_scan,
     segmented_prefix_max,
     sort_by_segment,
+    stable_argsort,
 )
 from repro.core.types import OP_WRITE, FabricConfig, RequestBatch, SSDConfig
 
@@ -151,7 +152,7 @@ def _frame_layout(
     if fused_sort:
         order, heads, rank = lex_sort_by_segment(key, t_ready)
     else:
-        ord1 = jnp.argsort(t_ready, stable=True)
+        ord1 = stable_argsort(t_ready)
         ord2, heads, rank = sort_by_segment(key[ord1])
         order = ord1[ord2]
     return order, heads, rank, jnp.clip(key[order], 0, t - 1)
@@ -261,7 +262,7 @@ def fabric_hop(
         use_pallas=use_pallas,
     )
     landed = sent + jnp.float32(0.5 * fab.rtt_us)
-    t_out = jnp.zeros_like(t_ready).at[order].set(landed)
+    t_out = jnp.zeros_like(t_ready).at[order].set(landed, mode="drop")
     return busy, jnp.where(valid, t_out, t_ready)
 
 
@@ -299,5 +300,5 @@ def switch_hop(
         busy, s_t, cost, s_valid, heads, key_clip, fab,
         use_pallas=use_pallas,
     )
-    t_out = jnp.zeros_like(t_ready).at[order].set(sent)
+    t_out = jnp.zeros_like(t_ready).at[order].set(sent, mode="drop")
     return busy, jnp.where(valid, t_out, t_ready)

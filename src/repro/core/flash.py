@@ -194,7 +194,9 @@ def flash_stage(
             axis=-1,
         )
         n = key.shape[0]
-        s = jnp.zeros((n, 4), jnp.float32).at[position].set(page)
+        s = jnp.zeros((n, 4), jnp.float32).at[position].set(
+            page, mode="drop"
+        )
         busy_sorted = queueing_scan(
             s[:, 0], s[:, 1], s[:, 3] > 0.0, s[:, 2],
             use_pallas=use_pallas,
@@ -207,7 +209,9 @@ def flash_stage(
             arrival[order], cost[order], heads, fstate.chip_busy[safe],
             use_pallas=use_pallas,
         )
-        busy = jnp.zeros_like(busy_sorted).at[order].set(busy_sorted)
+        busy = jnp.zeros_like(busy_sorted).at[order].set(
+            busy_sorted, mode="drop"
+        )
     if not use_pallas_flash:
         # Kept on the original layout even under compaction: the scan's
         # per-row busy values are not float-guaranteed monotone within a

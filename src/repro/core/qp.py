@@ -43,6 +43,7 @@ from repro.core.segops import (
     segment_rank,
     segmented_prefix_max,
     sort_by_segment,
+    stable_argsort,
 )
 from repro.core.types import QPConfig
 
@@ -209,7 +210,7 @@ def post_and_reap(
     if fused_sort:
         order, heads, rank = lex_sort_by_segment(key, done)
     else:
-        ord1 = jnp.argsort(done, stable=True)
+        ord1 = stable_argsort(done)
         ord2, heads, rank = sort_by_segment(key[ord1])
         order = ord1[ord2]
     s_done = done[order]
@@ -265,5 +266,5 @@ def post_and_reap(
         ),
         bell_time=bell_time,
     )
-    reaped = jnp.zeros_like(done).at[order].set(reaped_s)
+    reaped = jnp.zeros_like(done).at[order].set(reaped_s, mode="drop")
     return cq, jnp.where(valid, reaped, 0.0)

@@ -62,6 +62,23 @@ def uniform01(h: jax.Array) -> jax.Array:
     return (h.astype(jnp.float32) + 0.5) / 4294967296.0
 
 
+def stable_argsort(x: jax.Array, axis: int = -1) -> jax.Array:
+    """THE repo-wide argsort: always stable, always through this module.
+
+    Every permutation the emulator prices virtual time through must be
+    deterministic and tie-stable (program order on equal keys) — an
+    unstable sort would reorder equal-key requests between backends and
+    silently break the bit-exactness contract. repro-lint rule RL003
+    bans raw ``jnp.argsort``/``jnp.sort``/``lax.sort`` outside this
+    module so the discipline is machine-enforced; call sites that just
+    need a permutation use this wrapper, and sites that reuse one layout
+    across stages build a ``SortPlan``. ``stable=True`` is jnp's default
+    (bit-identical), stated explicitly here so the contract survives
+    upstream default changes.
+    """
+    return jnp.argsort(x, axis=axis, stable=True)
+
+
 def segmented_prefix_max(values: jax.Array, heads: jax.Array) -> jax.Array:
     """Inclusive prefix max restarting at each ``heads[i]==True``."""
 
@@ -167,7 +184,7 @@ def segment_rank(key: jax.Array) -> jax.Array:
     """Within-segment rank in original order (count of earlier equal keys)."""
     n = key.shape[0]
     order, _, rank = sort_by_segment(key)
-    out = jnp.zeros((n,), jnp.int32).at[order].set(rank)
+    out = jnp.zeros((n,), jnp.int32).at[order].set(rank, mode="drop")
     return out
 
 
@@ -255,7 +272,7 @@ def counting_sort_plan(key: jax.Array, num_keys: int) -> SortPlan:
     page = jnp.stack(
         [idx, rank_in_key, (rank_in_key == 0).astype(jnp.int32)], axis=-1
     )
-    s = jnp.zeros((n, 3), jnp.int32).at[position].set(page)
+    s = jnp.zeros((n, 3), jnp.int32).at[position].set(page, mode="drop")
     return SortPlan(order=s[:, 0], rank=s[:, 1], heads=s[:, 2].astype(bool))
 
 

@@ -86,7 +86,7 @@ def per_request_update(
         arrival, k, valid = x
         start = jnp.maximum(arrival, busy[k])
         new_b = jnp.where(valid, start + sched, busy[k])
-        busy = busy.at[k].set(new_b)
+        busy = busy.at[k].set(new_b, mode="drop")
         comp = jnp.maximum(start + sched, arrival + lmin)
         return busy, jnp.where(valid, comp, jnp.float32(0))
 
@@ -119,6 +119,7 @@ def _sorted_batch_core(
     differently per pattern — two algebraically equal formulations can
     drift one ULP apart and cascade through the closed loop.
     """
+    # repro-lint: pinned-expr sorted-batch-core
     k = ssd.n_instances
     sched = jnp.float32(ssd.sched_us)
     lmin = jnp.float32(ssd.l_min_us)
@@ -149,9 +150,12 @@ def _sorted_batch_core(
     new_busy = jnp.where(
         seg_counts > 0, last_b + seg_counts * sched, busy_init
     )
+    # repro-lint: end-pinned-expr
 
     # Unsort completions back to dispatch order.
-    completion = jnp.zeros_like(comp_sorted).at[order].set(comp_sorted)
+    completion = jnp.zeros_like(comp_sorted).at[order].set(
+        comp_sorted, mode="drop"
+    )
     return completion, new_busy
 
 
@@ -223,7 +227,7 @@ def compact_rr_batch_times(
     rank_row = jnp.where(valid, pos // k, pos - n_valid)
     key_row = jnp.where(valid, inst_row, jnp.int32(k))
     page = jnp.stack([idx, rank_row, key_row], axis=-1)
-    s = jnp.zeros((n, 3), jnp.int32).at[spos].set(page)
+    s = jnp.zeros((n, 3), jnp.int32).at[spos].set(page, mode="drop")
     order, rank, s_inst = s[:, 0], s[:, 1], s[:, 2]
     head = rank == 0
 
@@ -372,7 +376,7 @@ def update(
         state, comp_p = update(
             state, permuted, ssd, mode, axis_name, use_compaction
         )
-        return state, jnp.zeros_like(comp_p).at[d].set(comp_p)
+        return state, jnp.zeros_like(comp_p).at[d].set(comp_p, mode="drop")
     if axis_name is not None and mode == "aggregated":
         return distributed_aggregated_update(state, batch, ssd, axis_name)
     if mode == "per_request":

@@ -562,6 +562,19 @@ class EngineConfig:
     # mode on CPU) and parity-tested in tests/test_segops.py.
     use_pallas_reap: bool = False
     use_pallas_flash: bool = False
+    # Runtime sanitizer (PR 10): threads jax.experimental.checkify
+    # assertions through ``DevicePipeline.process`` — ring scatter/
+    # gather indices in bounds, completion times monotone non-negative,
+    # valid-mask conservation across the compaction/admission
+    # permutations, flash free-page and fabric cursor non-negativity.
+    # The checks only *observe* (no data-path op changes), so a
+    # sanitized run's state is bit-exact with the default run; off by
+    # default because checkify functionalization rewrites the jit
+    # program (wall-clock cost) and requires the checkified entry
+    # points (``engine.make_runner(..., sanitize=True)`` wraps and
+    # ``err.throw()``s automatically; calling ``DevicePipeline.process``
+    # under plain jit with sanitize on raises at trace time).
+    sanitize: bool = False
     # Sub-configs (split out rather than growing this class flat):
     qp: QPConfig = QPConfig()         # completion-side (CQ) model
     cache: CacheConfig = CacheConfig()  # GPU-side page cache (stage 0)

@@ -1,0 +1,12 @@
+"""Make the repo root importable so tests can reach ``tools.repro_lint``.
+
+The runtime package lives under ``src/`` (on PYTHONPATH per ROADMAP's
+tier-1 command); the developer tooling lives at the repo root and is not
+installed anywhere, so pin the root onto ``sys.path`` here.
+"""
+import sys
+from pathlib import Path
+
+_ROOT = str(Path(__file__).resolve().parents[1])
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)

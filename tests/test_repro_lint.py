@@ -1,0 +1,385 @@
+"""repro-lint rule coverage: one known-good and one known-bad fixture
+per rule (RL001-RL006), the PR-8 ``Metrics.zero`` regression, the RL002
+reassociation rejection, suppression comments, and the acceptance gate
+that the shipped tree itself lints clean.
+
+Fixtures are in-memory source strings through ``lint_source`` — the
+linter is pure AST work, so none of this imports jax.
+"""
+import textwrap
+from pathlib import Path
+
+from tools.repro_lint import fingerprint_source, lint_source
+from tools.repro_lint.engine import lint_paths
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+def lint(src, relpath="src/repro/core/example.py", lock=None):
+    return lint_source(textwrap.dedent(src), relpath, lock=lock)
+
+
+# ---------------------------------------------------------------------------
+# RL001: weak-typed pytree leaf
+# ---------------------------------------------------------------------------
+
+# The PR-8 bug, reduced: a python-float leaf in Metrics.zero made the
+# zero state's aval weak-typed while the runner's output was strongly
+# typed f32 — so the first timed rep silently recompiled the runner.
+PR8_METRICS_ZERO = """
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+FAR = 3e38
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    completed: jax.Array
+    first_submit: jax.Array
+
+    @staticmethod
+    def zero():
+        return Metrics(
+            completed=jnp.float32(0),
+            first_submit=FAR,
+        )
+"""
+
+PR8_METRICS_ZERO_FIXED = PR8_METRICS_ZERO.replace(
+    "first_submit=FAR", "first_submit=jnp.float32(FAR)"
+)
+
+
+def test_rl001_pr8_metrics_zero_regression():
+    bad = lint(PR8_METRICS_ZERO)
+    assert "RL001" in _rules(bad)
+    assert any("retrace" in v.message for v in bad)
+
+
+def test_rl001_strong_typed_is_clean():
+    assert _rules(lint(PR8_METRICS_ZERO_FIXED)) == set()
+
+
+def test_rl001_bare_literal_flagged():
+    src = """
+    import dataclasses
+    import jax
+
+    @jax.tree_util.register_dataclass
+    @dataclasses.dataclass(frozen=True)
+    class S:
+        x: jax.Array
+
+        @staticmethod
+        def init():
+            return S(x=0.0)
+    """
+    assert "RL001" in _rules(lint(src))
+
+
+def test_rl001_unregistered_class_not_flagged():
+    # Plain dataclasses are not pytrees — weak leaves cannot retrace.
+    src = """
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class S:
+        x: float
+
+        @staticmethod
+        def init():
+            return S(x=0.0)
+    """
+    assert _rules(lint(src)) == set()
+
+
+# ---------------------------------------------------------------------------
+# RL002: pinned-expression fingerprint
+# ---------------------------------------------------------------------------
+
+PINNED = """
+import jax.numpy as jnp
+
+
+def core(b, rank, sched, lmin, s_arr):
+    # repro-lint: pinned-expr demo
+    start = b + rank * sched
+    comp = jnp.maximum(start + sched, s_arr + lmin)
+    # repro-lint: end-pinned-expr
+    return comp
+"""
+
+# Algebraically equal, different expression tree — the FMA-contraction
+# hazard RL002 exists to catch.
+REASSOCIATED = PINNED.replace(
+    "start = b + rank * sched", "start = (b + rank * sched) * 1.0"
+)
+
+
+def _lock_for(src, relpath="src/repro/core/timing_demo.py"):
+    import re
+
+    body = re.search(
+        r"pinned-expr demo\n(.*?)\s*# repro-lint: end", src, re.S
+    ).group(1)
+    return {f"{relpath}::demo": fingerprint_source(textwrap.dedent(body))}
+
+
+def test_rl002_matching_pin_is_clean():
+    src = textwrap.dedent(PINNED)
+    rel = "src/repro/core/timing_demo.py"
+    assert _rules(lint_source(src, rel, lock=_lock_for(src, rel))) == set()
+
+
+def test_rl002_reassociated_expression_rejected():
+    rel = "src/repro/core/timing_demo.py"
+    lock = _lock_for(textwrap.dedent(PINNED), rel)
+    bad = lint_source(textwrap.dedent(REASSOCIATED), rel, lock=lock)
+    assert "RL002" in _rules(bad)
+    assert any("reassociated" in v.message for v in bad)
+
+
+def test_rl002_comment_and_whitespace_insensitive():
+    a = fingerprint_source("x = a + b * c\n")
+    b = fingerprint_source("# a comment\nx = (a   +\n     b * c)\n")
+    c = fingerprint_source("x = (a + b) * c\n")
+    assert a == b
+    assert a != c
+
+
+def test_rl002_unpinned_fence_flagged():
+    src = textwrap.dedent(PINNED)
+    bad = lint_source(src, "src/repro/core/timing_demo.py", lock={})
+    assert "RL002" in _rules(bad)
+    assert any("no lock entry" in v.message for v in bad)
+
+
+def test_rl002_unterminated_fence_flagged():
+    src = "# repro-lint: pinned-expr oops\nx = 1\n"
+    bad = lint_source(src, "src/repro/core/x.py", lock={})
+    assert any(
+        v.rule == "RL002" and "unterminated" in v.message for v in bad
+    )
+
+
+# ---------------------------------------------------------------------------
+# RL003: sort discipline
+# ---------------------------------------------------------------------------
+
+def test_rl003_raw_argsort_flagged():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        return jnp.argsort(x, stable=True)
+    """
+    assert "RL003" in _rules(lint(src))
+
+
+def test_rl003_lax_sort_flagged():
+    src = """
+    import jax
+
+    def f(x):
+        return jax.lax.sort(x)
+    """
+    assert "RL003" in _rules(lint(src))
+
+
+def test_rl003_segops_module_exempt():
+    src = """
+    import jax.numpy as jnp
+
+    def stable_argsort(x):
+        return jnp.argsort(x, stable=True)
+    """
+    assert _rules(lint(src, "src/repro/core/segops.py")) == set()
+
+
+def test_rl003_list_sort_method_not_flagged():
+    src = """
+    def f(xs):
+        xs.sort()
+        return xs
+    """
+    assert _rules(lint(src)) == set()
+
+
+# ---------------------------------------------------------------------------
+# RL004: scatter/gather bounds mode
+# ---------------------------------------------------------------------------
+
+def test_rl004_bare_scatter_flagged():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, i, v):
+        return x.at[i].set(v)
+    """
+    assert "RL004" in _rules(lint(src))
+
+
+def test_rl004_explicit_mode_clean():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, i, v):
+        y = x.at[i].set(v, mode="drop")
+        return y.at[i].add(v, mode="promise_in_bounds")
+    """
+    assert _rules(lint(src)) == set()
+
+
+def test_rl004_take_without_mode_flagged():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, i):
+        return jnp.take(x, i)
+    """
+    assert "RL004" in _rules(lint(src))
+
+
+def test_rl004_scoped_to_core():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, i, v):
+        return x.at[i].set(v)
+    """
+    assert _rules(lint(src, "src/repro/models/attention.py")) == set()
+
+
+# ---------------------------------------------------------------------------
+# RL005: jit-boundary hygiene
+# ---------------------------------------------------------------------------
+
+def test_rl005_wall_clock_reachable_from_runner_flagged():
+    src = """
+    import time
+
+
+    def helper(x):
+        return time.time() + x
+
+
+    def make_runner(cfg):
+        def _run(state):
+            return helper(state)
+        return _run
+    """
+    bad = lint(src)
+    assert "RL005" in _rules(bad)
+    assert any("make_runner" in v.message for v in bad)
+
+
+def test_rl005_np_random_in_process_flagged():
+    src = """
+    import numpy as np
+
+
+    class DevicePipeline:
+        def process(self, state, batch):
+            noise = np.random.rand(4)
+            return state + noise
+    """
+    assert "RL005" in _rules(lint(src))
+
+
+def test_rl005_unreachable_impurity_not_flagged():
+    # Host-side timing *outside* the jit entry points is fine (the
+    # benchmark drivers do exactly this).
+    src = """
+    import time
+
+
+    def bench(runner, state):
+        t0 = time.perf_counter()
+        runner(state)
+        return time.perf_counter() - t0
+
+
+    def make_runner(cfg):
+        def _run(state):
+            return state
+        return _run
+    """
+    assert _rules(lint(src)) == set()
+
+
+# ---------------------------------------------------------------------------
+# RL006: deprecated-path ban
+# ---------------------------------------------------------------------------
+
+def test_rl006_direct_path_use_flagged():
+    src = """
+    def go(pipe, state, batch):
+        return pipe._submit_direct(state, batch)
+    """
+    assert "RL006" in _rules(lint(src))
+
+
+def test_rl006_allowed_in_device_and_tests():
+    src = """
+    def go(pipe, state, batch):
+        return pipe._submit_direct(state, batch)
+    """
+    assert _rules(lint(src, "src/repro/core/device.py")) == set()
+    assert _rules(lint(src, "tests/test_device.py")) == set()
+
+
+# ---------------------------------------------------------------------------
+# Suppression + the shipped tree
+# ---------------------------------------------------------------------------
+
+def test_suppression_comment_same_line_and_above():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, i, v):
+        a = x.at[i].set(v)  # repro-lint: disable=RL004
+        # repro-lint: disable=RL004
+        b = x.at[i].add(v)
+        return a + b
+    """
+    assert _rules(lint(src)) == set()
+
+
+def test_suppression_is_per_rule():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, i, v):
+        return x.at[i].set(v)  # repro-lint: disable=RL003
+    """
+    assert "RL004" in _rules(lint(src))
+
+
+def test_shipped_tree_is_clean(monkeypatch):
+    """Acceptance gate: `python -m tools.repro_lint src/` exits 0."""
+    # Lock keys are repo-root-relative (the CI invocation's cwd), so
+    # lint from the root the way the CLI does.
+    monkeypatch.chdir(ROOT)
+    violations, checked = lint_paths(
+        ["src"], lock_path=ROOT / "tools/repro_lint/pinned.lock"
+    )
+    assert checked > 0
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+def test_lockfile_pins_the_timing_expression_trees():
+    from tools.repro_lint.pinning import load_lock
+
+    lock = load_lock(ROOT / "tools/repro_lint/pinned.lock")
+    # Keys are relative to the repo root (the CI invocation's cwd).
+    assert any(
+        k.endswith("core/timing.py::sorted-batch-core") for k in lock
+    )
+    assert any(k.endswith("core/device.py::lock-scan") for k in lock)

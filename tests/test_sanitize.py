@@ -1,0 +1,152 @@
+"""checkify sanitizer: clean on real configs, bit-exact when off, and
+actually armed (an injected out-of-bounds ring index must raise).
+
+``EngineConfig.sanitize`` threads ``checkify.check`` assertions through
+``DevicePipeline.process`` (ring indices in bounds, completion times
+monotone and non-negative, valid-mask conservation across the
+compaction/admission permutations, flash page and fabric cursor
+invariants). The contract tested here:
+
+  * sanitize=True runs checkify-clean on every standard config family;
+  * the sanitized run's final state is *bitwise identical* to the
+    default run's (checks observe, never transform);
+  * a corrupted batch trips the checks (the flag is not inert).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import checkify
+
+from repro.core import engine, frontend
+from repro.core.device import DevicePipeline
+from repro.core.types import (
+    CacheConfig,
+    EngineConfig,
+    FabricConfig,
+    PlatformModel,
+    QPConfig,
+    SSDConfig,
+)
+from repro.core.types import WorkloadConfig
+
+SSD = SSDConfig()
+PLAT = PlatformModel()
+WL = WorkloadConfig(io_depth=16, read_frac=0.8)
+SMALL = dict(num_sqs=8, sq_depth=64, fetch_width=16)
+
+# The same four families tests/test_emulator_speed.py pins bit-exactness
+# on — together they cover every pipeline branch the sanitizer
+# instruments (baseline datapath, switched fabric + WFQ, non-neutral
+# QP, sparse cached epochs).
+CONFIGS = {
+    "baseline_dp": EngineConfig(batched_datapath=False, **SMALL),
+    "remote_qos": EngineConfig(
+        fabric=FabricConfig(
+            remote=True,
+            tx_bytes_per_us=10_000.0, rx_bytes_per_us=10_000.0,
+            rtt_us=2.0, wire_txn_us=0.1, mtu_batch=4, mtu_timeout_us=5.0,
+            switch_bytes_per_us=20_000.0, switch_fanin=4,
+            qos_weights=(2.0, 1.0),
+        ),
+        **SMALL,
+    ),
+    "qp_coalesced": EngineConfig(
+        qp=QPConfig(
+            cq_coalesce_n=4, cq_coalesce_us=5.0, cq_doorbell_us=0.2,
+            cq_poll_us=0.1, cqe_reap_us=0.05,
+        ),
+        **SMALL,
+    ),
+    "cached": EngineConfig(
+        cache=CacheConfig(
+            enabled=True, num_sets=8, ways=2, chase=2, readahead=1
+        ),
+        **SMALL,
+    ),
+}
+
+ROUNDS = 6
+
+
+def _assert_states_equal(a, b):
+    for pa, pb in zip(
+        jax.tree_util.tree_flatten_with_path(a)[0],
+        jax.tree_util.tree_flatten_with_path(b)[0],
+    ):
+        assert jnp.array_equal(pa[1], pb[1]), (
+            f"leaf {jax.tree_util.keystr(pa[0])} diverged"
+        )
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_sanitized_run_clean_and_bit_exact(name):
+    """sanitize=True neither raises nor changes a single bit."""
+    cfg = CONFIGS[name]
+    st = engine.init_state(cfg, SSD, WL)
+    plain = engine.make_runner(cfg, SSD, WL, PLAT, ROUNDS)(st)
+    sanitized = engine.make_runner(
+        cfg, SSD, WL, PLAT, ROUNDS, sanitize=True
+    )(st)
+    _assert_states_equal(plain, sanitized)
+
+
+def test_sanitize_via_config_flag():
+    """cfg.sanitize=True is equivalent to make_runner(sanitize=True)."""
+    cfg = CONFIGS["baseline_dp"].replace(sanitize=True)
+    st = engine.init_state(cfg, SSD, WL)
+    out = engine.make_runner(cfg, SSD, WL, PLAT, ROUNDS)(st)
+    plain_cfg = CONFIGS["baseline_dp"]
+    plain = engine.make_runner(plain_cfg, SSD, WL, PLAT, ROUNDS)(
+        engine.init_state(plain_cfg, SSD, WL)
+    )
+    _assert_states_equal(plain, out)
+
+
+def test_sanitized_array_runner_clean():
+    cfg = EngineConfig(**SMALL)
+    st = engine.init_array_state(cfg, SSD, WL, 2)
+    plain = engine.make_array_runner(cfg, SSD, WL, PLAT, ROUNDS)(st)
+    sanitized = engine.make_array_runner(
+        cfg, SSD, WL, PLAT, ROUNDS, sanitize=True
+    )(st)
+    _assert_states_equal(plain, sanitized)
+
+
+def test_injected_oob_ring_index_caught():
+    """The checks are armed: a valid row with sq_id >= num_sqs raises."""
+    cfg = EngineConfig(**SMALL).replace(sanitize=True)
+    st = engine.init_state(cfg, SSD, WL)
+    pipe = DevicePipeline(cfg, SSD, PLAT)
+    unit = frontend.fetch_row_units(cfg)
+
+    _, disp, batch, fetch_done = jax.jit(
+        lambda s: frontend.fetch(
+            s.rings, s.clock, s.device.disp_time, cfg, PLAT
+        )
+    )(st)
+    dev = dataclasses.replace(st.device, disp_time=disp)
+    batch = dataclasses.replace(batch, arrival=fetch_done)
+
+    def go(b):
+        return pipe.process(dev, b, fetch_done, unit, st.cq,
+                            ring_layout=True)
+
+    checked = jax.jit(
+        checkify.checkify(go, errors=checkify.user_checks)
+    )
+
+    err, _ = checked(batch)
+    assert err.get() is None, err.get()
+
+    bad = dataclasses.replace(
+        batch,
+        sq_id=batch.sq_id.at[0].set(
+            jnp.int32(cfg.num_sqs + 3), mode="drop"
+        ),
+        valid=batch.valid.at[0].set(True, mode="drop"),
+    )
+    err, _ = checked(bad)
+    assert err.get() is not None
+    assert "SQ id" in str(err.get())

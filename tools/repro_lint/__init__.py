@@ -1,0 +1,49 @@
+"""repro-lint: repo-specific static analysis for the SwarmIO emulator.
+
+The emulator's headline contract — every optimization is *bit-exact in
+virtual time* — keeps being threatened by the same defect classes
+(PRs 6-9): weak-typed pytree leaves that silently retrace jit programs,
+FMA-contraction drift when a pinned float expression tree is
+reassociated, and JAX's silent out-of-bounds scatter/gather semantics
+corrupting ring permutations without an error. This package enforces
+those invariants as lint rules instead of reviewer vigilance:
+
+  RL001  weak-typed pytree leaf — bare python ``int``/``float`` literals
+         (or module constants bound to them) passed directly to a
+         registered pytree's constructor inside ``zero``/``init``/
+         ``empty`` (the PR-8 ``Metrics.zero`` retrace bug class).
+  RL002  pinned-expression fingerprint — ``# repro-lint: pinned-expr
+         <name>`` fenced regions get a normalized-AST fingerprint
+         checked against ``tools/repro_lint/pinned.lock``; any
+         reassociation fails lint until regenerated with
+         ``--update-lock``.
+  RL003  sort discipline — no raw ``lax.sort``/``jnp.sort``/
+         ``jnp.argsort`` outside ``core/segops.py``; everything routes
+         through ``SortPlan``/``segops.stable_argsort``.
+  RL004  scatter/gather bounds mode — every ``.at[...].set/add`` and
+         ``jnp.take`` under ``core/`` must pass an explicit ``mode=``
+         so silent OOB clamping is an opt-in decision, not a default.
+  RL005  jit-boundary hygiene — no ``time.time``/``np.random``/host
+         callbacks in functions reachable from ``make_runner`` /
+         ``DevicePipeline.process``.
+  RL006  deprecated-path ban — ``_fetch_direct``/``_submit_direct``
+         referenced outside ``core/device.py`` and ``tests/``.
+
+Usage::
+
+    python -m tools.repro_lint src/            # exit 1 on violations
+    python -m tools.repro_lint src/ --json     # machine-readable output
+    python -m tools.repro_lint src/ --update-lock   # re-pin RL002
+
+Per-line suppression: ``# repro-lint: disable=RL004`` (comma-separated
+rule ids, or ``all``) on the flagged line or the line above it.
+"""
+from tools.repro_lint.engine import (  # noqa: F401
+    Violation,
+    lint_paths,
+    lint_source,
+)
+from tools.repro_lint.pinning import (  # noqa: F401
+    fingerprint_source,
+    load_lock,
+)

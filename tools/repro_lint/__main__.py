@@ -1,0 +1,55 @@
+"""CLI: ``python -m tools.repro_lint [paths...] [--json] [--update-lock]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage/setup error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.repro_lint import pinning
+from tools.repro_lint.engine import lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="repo-specific static analysis (rules RL001-RL006); "
+                    "see tools/repro_lint/__init__.py for the rule table",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON output")
+    ap.add_argument("--update-lock", action="store_true",
+                    help="regenerate the RL002 pinned-expression lockfile "
+                         "from the scanned tree instead of checking it")
+    ap.add_argument("--lock", default=str(pinning.DEFAULT_LOCK),
+                    help="path to the pin lockfile (default: "
+                         "tools/repro_lint/pinned.lock)")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src"]
+
+    violations, checked = lint_paths(
+        paths, lock_path=args.lock, update_lock=args.update_lock
+    )
+
+    if args.as_json:
+        print(json.dumps({
+            "checked_files": checked,
+            "violations": [v.to_json() for v in violations],
+        }, indent=2))
+    else:
+        for v in violations:
+            print(v.render())
+        tail = "updated lock; " if args.update_lock else ""
+        print(
+            f"repro-lint: {tail}{checked} files checked, "
+            f"{len(violations)} violation(s)"
+        )
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

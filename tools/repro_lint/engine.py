@@ -1,0 +1,166 @@
+"""Lint driver: file walking, suppression comments, rule orchestration.
+
+``lint_paths`` is the programmatic entry point the CLI and the tests
+share; ``lint_source`` lints a single in-memory source string (fixture
+tests). Suppression: ``# repro-lint: disable=RL004`` (comma-separated
+ids, or ``all``) on the flagged line or the line directly above it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from tools.repro_lint import pinning
+from tools.repro_lint.rules import (
+    ProjectIndex,
+    rule_rl005,
+    run_per_file_rules,
+)
+from tools.repro_lint.violation import Violation
+
+_DISABLE = re.compile(r"#\s*repro-lint:\s*disable=([\w,]+)")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+def collect_files(paths: Sequence[str]) -> List[Path]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_file():
+            out.append(path)
+        elif path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not any(part in _SKIP_DIRS for part in f.parts):
+                    out.append(f)
+    return sorted(set(out))
+
+
+def _suppressed_rules(lines: Sequence[str], lineno: int) -> set:
+    """Rule ids disabled for 1-based line ``lineno``."""
+    rules: set = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _DISABLE.search(lines[ln - 1])
+            if m:
+                rules.update(
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                )
+    return rules
+
+
+def apply_suppressions(
+    violations: Iterable[Violation], sources: Dict[str, str]
+) -> List[Violation]:
+    out: List[Violation] = []
+    line_cache: Dict[str, List[str]] = {}
+    for v in violations:
+        src = sources.get(v.path)
+        if src is not None:
+            if v.path not in line_cache:
+                line_cache[v.path] = src.splitlines()
+            dis = _suppressed_rules(line_cache[v.path], v.line)
+            if v.rule in dis or "all" in dis:
+                continue
+        out.append(v)
+    return out
+
+
+def lint_source(
+    src: str,
+    relpath: str = "<memory>",
+    lock: Dict[str, str] | None = None,
+) -> List[Violation]:
+    """Lint one in-memory source file (per-file rules + RL005 + RL002).
+
+    RL005 runs with a single-module index, so fixtures that define their
+    own ``make_runner``/``DevicePipeline.process`` roots exercise the
+    reachability rule in isolation. ``lock`` enables RL002 against the
+    given pin map (``{}`` checks that every fence is unpinned; ``None``
+    skips RL002 entirely).
+    """
+    violations: List[Violation] = []
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation(
+            "PARSE", relpath, e.lineno or 1, e.offset or 0,
+            f"syntax error: {e.msg}",
+        )]
+    violations.extend(run_per_file_rules(tree, relpath))
+    index = ProjectIndex()
+    index.add(relpath, tree)
+    violations.extend(rule_rl005(index))
+    if lock is not None:
+        fps, fence_errs = pinning.extract_fences(src, relpath)
+        violations.extend(fence_errs)
+        violations.extend(pinning.check_pins(
+            relpath, fps, lock, pinning.fence_lines(src)
+        ))
+    return sorted(apply_suppressions(violations, {relpath: src}))
+
+
+def lint_paths(
+    paths: Sequence[str],
+    lock_path: Path | str = pinning.DEFAULT_LOCK,
+    update_lock: bool = False,
+) -> Tuple[List[Violation], int]:
+    """Lint files/directories. Returns ``(violations, files_checked)``.
+
+    ``update_lock=True`` regenerates the RL002 lockfile from the scanned
+    tree (entries for unscanned files are preserved) instead of checking
+    against it.
+    """
+    files = collect_files(paths)
+    sources: Dict[str, str] = {}
+    trees: Dict[str, ast.Module] = {}
+    violations: List[Violation] = []
+    index = ProjectIndex()
+
+    for f in files:
+        rel = f.as_posix()
+        try:
+            src = f.read_text(encoding="utf-8")
+        except OSError as e:
+            violations.append(Violation("PARSE", rel, 1, 0, str(e)))
+            continue
+        sources[rel] = src
+        try:
+            tree = ast.parse(src, filename=rel)
+        except SyntaxError as e:
+            violations.append(Violation(
+                "PARSE", rel, e.lineno or 1, e.offset or 0,
+                f"syntax error: {e.msg}",
+            ))
+            continue
+        trees[rel] = tree
+        index.add(rel, tree)
+
+    for rel, tree in trees.items():
+        violations.extend(run_per_file_rules(tree, rel))
+    violations.extend(rule_rl005(index))
+
+    # RL002: fence fingerprints vs the committed lock.
+    lock = pinning.load_lock(Path(lock_path))
+    scanned_pins: Dict[str, str] = {}
+    for rel, src in sources.items():
+        fps, fence_errs = pinning.extract_fences(src, rel)
+        violations.extend(fence_errs)
+        for name, fp in fps.items():
+            scanned_pins[f"{rel}::{name}"] = fp
+        if not update_lock:
+            violations.extend(pinning.check_pins(
+                rel, fps, lock, pinning.fence_lines(src)
+            ))
+    if update_lock:
+        kept = {
+            k: v for k, v in lock.items()
+            if k.split("::", 1)[0] not in sources
+        }
+        kept.update(scanned_pins)
+        pinning.save_lock(kept, Path(lock_path))
+
+    return sorted(apply_suppressions(violations, sources)), len(files)

@@ -1,0 +1,173 @@
+"""RL002: pinned-expression fingerprints.
+
+A fenced region
+
+    # repro-lint: pinned-expr <name>
+    ...protected statements...
+    # repro-lint: end-pinned-expr
+
+is fingerprinted by the sha256 of its *normalized AST dump* — so
+whitespace, comments, and line wrapping are free to change, but any
+reassociation of the protected float expression tree (the PR-8/9
+FMA-contraction hazard: algebraically equal forms can compile one ULP
+apart) changes the fingerprint and fails lint until the lock is
+intentionally regenerated with ``--update-lock``.
+
+The lock lives at ``tools/repro_lint/pinned.lock`` (JSON), keyed by
+``<posix relpath>::<fence name>``.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import re
+import textwrap
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from tools.repro_lint.violation import Violation
+
+DEFAULT_LOCK = Path(__file__).resolve().parent / "pinned.lock"
+
+_OPEN = re.compile(r"#\s*repro-lint:\s*pinned-expr\s+([\w./-]+)\s*$")
+_CLOSE = re.compile(r"#\s*repro-lint:\s*end-pinned-expr\s*$")
+
+
+def fingerprint_source(src: str) -> str:
+    """Normalized-AST fingerprint of a python source fragment.
+
+    The fragment is parsed inside a dummy enclosing function (so fences
+    may legally contain ``return``/``yield``) and fingerprinted from the
+    AST dump — whitespace- and comment-insensitive, reassociation-
+    sensitive. Raises ``SyntaxError`` if the fragment does not enclose
+    whole statements.
+    """
+    body = textwrap.indent(textwrap.dedent(src), "    ")
+    tree = ast.parse("def __pinned__():\n" + body)
+    dump = ast.dump(tree, annotate_fields=True, include_attributes=False)
+    return "sha256:" + hashlib.sha256(dump.encode("utf-8")).hexdigest()
+
+
+def extract_fences(
+    src: str, relpath: str
+) -> Tuple[Dict[str, str], List[Violation]]:
+    """Scan one file for pinned-expr fences.
+
+    Returns ``(fingerprints, violations)`` where ``fingerprints`` maps
+    fence name -> fingerprint and ``violations`` carries malformed-fence
+    errors (unterminated, duplicate name, unparseable region).
+    """
+    lines = src.splitlines()
+    fps: Dict[str, str] = {}
+    out: List[Violation] = []
+    open_name = None
+    open_line = 0
+    region: List[str] = []
+    for i, line in enumerate(lines, start=1):
+        m = _OPEN.search(line)
+        if m:
+            if open_name is not None:
+                out.append(Violation(
+                    "RL002", relpath, i, 0,
+                    f"pinned-expr {m.group(1)!r} opened inside unclosed "
+                    f"fence {open_name!r} (line {open_line})",
+                ))
+                continue
+            open_name, open_line, region = m.group(1), i, []
+            continue
+        if _CLOSE.search(line):
+            if open_name is None:
+                out.append(Violation(
+                    "RL002", relpath, i, 0,
+                    "end-pinned-expr with no matching pinned-expr fence",
+                ))
+                continue
+            if open_name in fps:
+                out.append(Violation(
+                    "RL002", relpath, open_line, 0,
+                    f"duplicate pinned-expr name {open_name!r}",
+                ))
+            else:
+                try:
+                    fps[open_name] = fingerprint_source("\n".join(region))
+                except SyntaxError as e:
+                    out.append(Violation(
+                        "RL002", relpath, open_line, 0,
+                        f"pinned-expr {open_name!r} region does not parse "
+                        f"as standalone statements: {e.msg}",
+                    ))
+            open_name = None
+            continue
+        if open_name is not None:
+            region.append(line)
+    if open_name is not None:
+        out.append(Violation(
+            "RL002", relpath, open_line, 0,
+            f"unterminated pinned-expr fence {open_name!r} "
+            "(missing '# repro-lint: end-pinned-expr')",
+        ))
+    return fps, out
+
+
+def load_lock(lock_path: Path = DEFAULT_LOCK) -> Dict[str, str]:
+    """Load the committed pin lockfile ({} if absent)."""
+    if not Path(lock_path).exists():
+        return {}
+    data = json.loads(Path(lock_path).read_text())
+    return dict(data.get("pins", {}))
+
+
+def save_lock(pins: Dict[str, str], lock_path: Path = DEFAULT_LOCK) -> None:
+    payload = {"version": 1, "pins": dict(sorted(pins.items()))}
+    Path(lock_path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def check_pins(
+    relpath: str,
+    fps: Dict[str, str],
+    lock: Dict[str, str],
+    first_fence_line: Dict[str, int] | None = None,
+) -> List[Violation]:
+    """Compare one file's fence fingerprints against the lock."""
+    out: List[Violation] = []
+    lines = first_fence_line or {}
+    for name, fp in fps.items():
+        key = f"{relpath}::{name}"
+        want = lock.get(key)
+        line = lines.get(name, 1)
+        if want is None:
+            out.append(Violation(
+                "RL002", relpath, line, 0,
+                f"pinned-expr {name!r} has no lock entry — run "
+                "`python -m tools.repro_lint --update-lock` to pin it",
+            ))
+        elif want != fp:
+            out.append(Violation(
+                "RL002", relpath, line, 0,
+                f"pinned-expr {name!r} changed (expression tree was "
+                "reassociated or edited): FMA contraction is "
+                "program-context-dependent, so algebraically equal forms "
+                "can drift 1 ULP. If intentional, regenerate with "
+                "--update-lock and re-run the bit-exactness parity tests",
+            ))
+    prefix = f"{relpath}::"
+    for key in lock:
+        if key.startswith(prefix) and key[len(prefix):] not in fps:
+            out.append(Violation(
+                "RL002", relpath, 1, 0,
+                f"lock entry {key!r} has no matching pinned-expr fence "
+                "(fence removed?) — regenerate with --update-lock if "
+                "intentional",
+            ))
+    return out
+
+
+def fence_lines(src: str) -> Dict[str, int]:
+    """Map fence name -> opening line number (for diagnostics)."""
+    out: Dict[str, int] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _OPEN.search(line)
+        if m and m.group(1) not in out:
+            out[m.group(1)] = i
+    return out

@@ -1,0 +1,422 @@
+"""The per-file and whole-project AST rules (RL001, RL003-RL006).
+
+All rules work on plain ``ast`` trees — no imports of the linted code,
+so linting never executes (or even requires) jax. RL002 lives in
+``pinning.py`` (it fingerprints source regions, not node patterns).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set, Tuple
+
+from tools.repro_lint.violation import Violation
+
+# Modules whose ``sort``/``argsort`` attributes RL003 bans (after import-
+# alias resolution): raw sorts bypass the SortPlan reuse discipline and
+# the stable-sort bit-exactness contract.
+_SORT_MODULES = {"jax.numpy", "numpy", "jax.lax"}
+_SORT_ATTRS = {"sort", "argsort", "lexsort", "msort", "sort_complex"}
+
+# RL005: dotted-name prefixes that must not be reachable from the jit
+# entry points. Matched against the *resolved* dotted call target
+# (import aliases expanded), longest-prefix wins.
+_BANNED_CALLS = {
+    "time.time": "wall-clock read inside a jit-traced function "
+                 "(traces once, then is a baked-in constant)",
+    "time.perf_counter": "wall-clock read inside a jit-traced function",
+    "time.monotonic": "wall-clock read inside a jit-traced function",
+    "time.process_time": "wall-clock read inside a jit-traced function",
+    "numpy.random": "host-side RNG inside a jit-traced function (use "
+                    "segops.hash_u32 counter-based randomness)",
+    "random.": "host-side RNG inside a jit-traced function (use "
+               "segops.hash_u32 counter-based randomness)",
+    "jax.pure_callback": "host callback on the jit hot path",
+    "jax.experimental.io_callback": "host callback on the jit hot path",
+    "jax.debug.callback": "host callback on the jit hot path",
+}
+
+# RL005 roots: the jit entry points whose transitive callees must stay
+# trace-pure.
+_ROOT_FUNCTIONS = {"make_runner", "make_array_runner"}
+_ROOT_METHODS = {("DevicePipeline", "process")}
+
+_DEPRECATED = {"_fetch_direct", "_submit_direct"}
+
+_PYTREE_CTOR_METHODS = {"zero", "init", "empty"}
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """Render an attribute chain as a dotted name ('' when not one)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local name -> fully qualified dotted target.
+
+    ``import jax.numpy as jnp`` -> {"jnp": "jax.numpy"};
+    ``from repro.core import timing`` -> {"timing": "repro.core.timing"};
+    ``from time import perf_counter`` -> {"perf_counter":
+    "time.perf_counter"}.
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+                if a.asname is None and "." in a.name:
+                    # `import jax.numpy` binds `jax`, but the dotted use
+                    # sites resolve through the root name anyway.
+                    out[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _resolve(dotted: str, aliases: Dict[str, str]) -> str:
+    head, _, rest = dotted.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def _is_weak_number(node: ast.AST, weak_consts: Set[str]) -> bool:
+    """A bare python numeric literal (or a Name bound to one)."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float)) and not isinstance(
+            node.value, bool
+        )
+    if isinstance(node, ast.UnaryOp) and isinstance(
+        node.op, (ast.USub, ast.UAdd)
+    ):
+        return _is_weak_number(node.operand, weak_consts)
+    if isinstance(node, ast.Name):
+        return node.id in weak_consts
+    return False
+
+
+def _module_numeric_consts(tree: ast.Module) -> Set[str]:
+    """Module-level NAME = <numeric literal> bindings (e.g. FAR = 3e38)."""
+    out: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and _is_weak_number(
+            node.value, set()
+        ):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if _is_weak_number(node.value, set()) and isinstance(
+                node.target, ast.Name
+            ):
+                out.add(node.target.id)
+    return out
+
+
+def _registered_pytree_classes(tree: ast.Module) -> Set[str]:
+    """Class names registered as jax pytrees in this module.
+
+    Covers the decorator form (``@jax.tree_util.register_dataclass``,
+    ``@register_pytree_node_class``) and the module-level call form
+    (``jax.tree_util.register_pytree_node(Cls, ...)``).
+    """
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                d = _dotted(target) or ""
+                if d.split(".")[-1] in (
+                    "register_dataclass", "register_pytree_node_class",
+                ):
+                    names.add(node.name)
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func) or ""
+            if d.split(".")[-1] in (
+                "register_dataclass", "register_pytree_node",
+            ) and node.args and isinstance(node.args[0], ast.Name):
+                names.add(node.args[0].id)
+    return names
+
+
+def rule_rl001(tree: ast.Module, relpath: str) -> List[Violation]:
+    """Weak-typed pytree leaf in a zero/init/empty constructor."""
+    out: List[Violation] = []
+    pytrees = _registered_pytree_classes(tree)
+    if not pytrees:
+        return out
+    weak_consts = _module_numeric_consts(tree)
+    for cls in ast.walk(tree):
+        if not (isinstance(cls, ast.ClassDef) and cls.name in pytrees):
+            continue
+        for fn in cls.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name not in _PYTREE_CTOR_METHODS:
+                continue
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                callee = call.func
+                is_ctor = isinstance(callee, ast.Name) and (
+                    callee.id == cls.name or callee.id == "cls"
+                )
+                if not is_ctor:
+                    continue
+                for arg in list(call.args) + [
+                    kw.value for kw in call.keywords
+                ]:
+                    if _is_weak_number(arg, weak_consts):
+                        out.append(Violation(
+                            "RL001", relpath, arg.lineno, arg.col_offset,
+                            f"weak-typed leaf in {cls.name}.{fn.name}: a "
+                            "bare python number makes the pytree aval "
+                            "weak-typed, so runner outputs mismatch "
+                            "init-state avals and jit silently retraces "
+                            "(the PR-8 Metrics.zero bug) — wrap it in "
+                            "jnp.float32(...)/jnp.int32(...)",
+                        ))
+    return out
+
+
+def rule_rl003(tree: ast.Module, relpath: str) -> List[Violation]:
+    """Raw sort outside core/segops.py."""
+    if relpath.replace("\\", "/").endswith("core/segops.py"):
+        return []
+    aliases = _import_aliases(tree)
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        if node.attr not in _SORT_ATTRS:
+            continue
+        base = _dotted(node.value)
+        if base is None:
+            continue
+        if _resolve(base, aliases) in _SORT_MODULES:
+            out.append(Violation(
+                "RL003", relpath, node.lineno, node.col_offset,
+                f"raw {base}.{node.attr} outside core/segops.py — route "
+                "through segops.stable_argsort / SortPlan so sort "
+                "stability and plan reuse stay centralized",
+            ))
+    return out
+
+
+def rule_rl004(tree: ast.Module, relpath: str) -> List[Violation]:
+    """Scatter/gather without an explicit mode= under core/."""
+    p = relpath.replace("\\", "/")
+    if "/core/" not in p and not p.startswith("core/"):
+        return []
+    aliases = _import_aliases(tree)
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        has_mode = any(kw.arg == "mode" for kw in node.keywords)
+        f = node.func
+        # x.at[idx].set(...) / .add / .max / .min / .mul
+        if (
+            isinstance(f, ast.Attribute)
+            and f.attr in ("set", "add", "max", "min", "mul", "get")
+            and isinstance(f.value, ast.Subscript)
+            and isinstance(f.value.value, ast.Attribute)
+            and f.value.value.attr == "at"
+        ):
+            if not has_mode:
+                out.append(Violation(
+                    "RL004", relpath, node.lineno, node.col_offset,
+                    f".at[...].{f.attr}(...) without an explicit mode= — "
+                    "JAX silently drops OOB scatter updates and clamps "
+                    "OOB gathers, which corrupts ring/compaction "
+                    "permutations without an error; make the bounds "
+                    "behavior explicit (mode=\"drop\"/\"fill\"/"
+                    "\"promise_in_bounds\")",
+                ))
+            continue
+        # jnp.take(...)
+        d = _dotted(f)
+        if d is not None and _resolve(d, aliases) in (
+            "jax.numpy.take", "numpy.take",
+        ):
+            if not has_mode:
+                out.append(Violation(
+                    "RL004", relpath, node.lineno, node.col_offset,
+                    "jnp.take without an explicit mode= — OOB gathers "
+                    "clamp silently; make the bounds behavior explicit",
+                ))
+    return out
+
+
+def rule_rl006(tree: ast.Module, relpath: str) -> List[Violation]:
+    """Deprecated direct-path use outside core/device.py and tests/."""
+    p = relpath.replace("\\", "/")
+    if p.endswith("core/device.py") or "tests/" in p or p.startswith(
+        "tests"
+    ):
+        return []
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        name = None
+        if isinstance(node, ast.Attribute) and node.attr in _DEPRECATED:
+            name = node.attr
+        elif isinstance(node, ast.Name) and node.id in _DEPRECATED:
+            name = node.id
+        if name is not None:
+            out.append(Violation(
+                "RL006", relpath, node.lineno, node.col_offset,
+                f"{name} is the test-only ring-less shortcut — "
+                "production consumers go through StorageClient.submit / "
+                "the SQ rings (see core/device.py docstring)",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL005: whole-project call-graph reachability.
+# ---------------------------------------------------------------------------
+
+class ProjectIndex:
+    """Cross-module function/method index for reachability traversal."""
+
+    def __init__(self) -> None:
+        # module relpath -> (tree, aliases)
+        self.modules: Dict[str, Tuple[ast.Module, Dict[str, str]]] = {}
+        # (relpath, qualname) -> function node
+        self.functions: Dict[Tuple[str, str], ast.AST] = {}
+        # bare name -> [(relpath, qualname)] over-approximation index
+        self.by_name: Dict[str, List[Tuple[str, str]]] = {}
+
+    def add(self, relpath: str, tree: ast.Module) -> None:
+        self.modules[relpath] = (tree, _import_aliases(tree))
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._register(relpath, node.name, node)
+            elif isinstance(node, ast.ClassDef):
+                for meth in node.body:
+                    if isinstance(
+                        meth, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        qual = f"{node.name}.{meth.name}"
+                        self._register(relpath, qual, meth)
+
+    def _register(self, relpath: str, qual: str, node: ast.AST) -> None:
+        self.functions[(relpath, qual)] = node
+        self.by_name.setdefault(qual.split(".")[-1], []).append(
+            (relpath, qual)
+        )
+
+    # -- resolution ---------------------------------------------------------
+    def resolve_call(
+        self, relpath: str, call: ast.Call
+    ) -> List[Tuple[str, str]]:
+        """Possible (relpath, qualname) targets of a call (may be [])."""
+        tree, aliases = self.modules[relpath]
+        f = call.func
+        if isinstance(f, ast.Name):
+            # Same-module function, else a from-imported repro function.
+            if (relpath, f.id) in self.functions:
+                return [(relpath, f.id)]
+            target = aliases.get(f.id)
+            if target and target.startswith("repro."):
+                return self._by_module_func(target)
+            return []
+        d = _dotted(f)
+        if d is not None:
+            head, _, rest = d.partition(".")
+            base = aliases.get(head)
+            if base and base.startswith("repro.") and rest:
+                hit = self._by_module_func(f"{base}.{rest}")
+                if hit:
+                    return hit
+        # Method / unknown-receiver call: over-approximate by bare name
+        # (lint soundness beats precision here — false reachability can
+        # only surface a real banned call somewhere in the repo).
+        if isinstance(f, ast.Attribute):
+            return list(self.by_name.get(f.attr, []))
+        return []
+
+    def _by_module_func(self, dotted: str) -> List[Tuple[str, str]]:
+        mod, _, func = dotted.rpartition(".")
+        suffix = mod.replace(".", "/") + ".py"
+        return [
+            (rp, func)
+            for (rp, qual) in self.functions
+            if qual == func and rp.replace("\\", "/").endswith(suffix)
+        ]
+
+
+def _roots(index: ProjectIndex) -> List[Tuple[str, str]]:
+    roots: List[Tuple[str, str]] = []
+    for (rp, qual) in index.functions:
+        if qual in _ROOT_FUNCTIONS:
+            roots.append((rp, qual))
+        for cls, meth in _ROOT_METHODS:
+            if qual == f"{cls}.{meth}":
+                roots.append((rp, qual))
+    return roots
+
+
+def _banned_match(resolved: str) -> str | None:
+    for prefix, why in _BANNED_CALLS.items():
+        if prefix.endswith("."):
+            if resolved.startswith(prefix) or resolved == prefix[:-1]:
+                return why
+        elif resolved == prefix or resolved.startswith(prefix + "."):
+            return why
+    return None
+
+
+def rule_rl005(index: ProjectIndex) -> List[Violation]:
+    """Host-side impurity reachable from the jit entry points."""
+    out: List[Violation] = []
+    seen_nodes: Set[Tuple[str, str]] = set()
+    seen_violations: Set[Tuple[str, int, int]] = set()
+
+    def visit(rp: str, qual: str, root: str) -> None:
+        if (rp, qual) in seen_nodes:
+            return
+        seen_nodes.add((rp, qual))
+        node = index.functions.get((rp, qual))
+        if node is None:
+            return
+        _, aliases = index.modules[rp]
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            d = _dotted(call.func)
+            if d is not None:
+                why = _banned_match(_resolve(d, aliases))
+                if why is not None:
+                    key = (rp, call.lineno, call.col_offset)
+                    if key not in seen_violations:
+                        seen_violations.add(key)
+                        out.append(Violation(
+                            "RL005", rp, call.lineno, call.col_offset,
+                            f"{d} reachable from {root}: {why}",
+                        ))
+                    continue
+            for target in index.resolve_call(rp, call):
+                visit(*target, root)
+
+    for rp, qual in sorted(_roots(index)):
+        visit(rp, qual, f"{rp}::{qual}")
+    return out
+
+
+PER_FILE_RULES = (rule_rl001, rule_rl003, rule_rl004, rule_rl006)
+
+
+def run_per_file_rules(
+    tree: ast.Module, relpath: str
+) -> Iterable[Violation]:
+    for rule in PER_FILE_RULES:
+        yield from rule(tree, relpath)

@@ -1,0 +1,20 @@
+"""The one shared datatype: a lint violation with a stable sort order."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Violation:
+    rule: str      # "RL001".."RL006", or "PARSE" for unreadable files
+    path: str      # posix relpath as scanned
+    line: int      # 1-based
+    col: int       # 0-based
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
